@@ -1,0 +1,193 @@
+"""Benchmark harness — one function per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+
+  fig11_new_scaling      paper Fig. 11: New runtime, linearity + level
+                         independence (derived = ns/element ratio lvl6/lvl5,
+                         ~1.0 means level-independent)
+  fig11_new_ranks        paper Fig. 11 left: strong scaling over simulated
+                         ranks (derived = parallel efficiency)
+  fig12_adapt_fractal    paper Fig. 12: recursive fractal Adapt (derived =
+                         measured/analytic element count, must be 1.0)
+  partition_weighted     SFC weighted partition (derived = load imbalance)
+  element_ops            vectorized per-element op latencies (derived =
+                         ns/element)
+  pallas_kernels         Pallas kernels in interpret mode vs jnp oracle
+                         (derived = exactness)
+  moe_placement          SFC expert placement quality (derived = imbalance
+                         ratio naive/sfc)
+  roofline_summary       reads results/dryrun/*.json (derived = roofline
+                         fraction); run `python -m repro.launch.dryrun --all`
+                         first
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+ROWS = []
+
+
+def row(name, us, derived):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.3f},{derived}", flush=True)
+
+
+def _time(fn, n=3):
+    fn()  # warmup/compile
+    t0 = time.time()
+    for _ in range(n):
+        fn()
+    return (time.time() - t0) / n * 1e6
+
+
+def fig11_new_scaling():
+    from repro.core import forest as F
+    per_elem = {}
+    for level in (4, 5, 6):
+        us = _time(lambda: F.new_uniform_rank(3, 1, level, 0, 1), n=2)
+        n_el = 8 ** level
+        per_elem[level] = us * 1000.0 / n_el
+        row(f"fig11_new_level{level}", us, f"{per_elem[level]:.1f}ns/elem")
+    row("fig11_new_level_independence", 0.0,
+        f"{per_elem[6] / per_elem[5]:.2f}x_per_elem_lvl6_vs_lvl5")
+
+
+def fig11_new_ranks():
+    from repro.core import forest as F
+    base = None
+    for P in (1, 2, 4, 8):
+        comm = F.SimComm(P)
+        us = _time(lambda: F.new_uniform(3, 2, 5, comm), n=2)
+        if base is None:
+            base = us
+        # SimComm executes ranks sequentially: ideal efficiency keeps total
+        # time flat (each rank builds 1/P of the elements)
+        row(f"fig11_new_ranks{P}", us, f"eff={base / us:.2f}")
+
+
+def fig12_adapt_fractal():
+    from repro.core import forest as F
+    from examples.amr_fractal import analytic_fractal_count, fractal_cb
+    comm = F.SimComm(4)
+    k, depth, trees = 2, 3, 4
+    fs0 = F.new_uniform(3, trees, k, comm)
+
+    def run():
+        return [F.adapt(f, fractal_cb(k + depth), recursive=True) for f in fs0]
+
+    us = _time(run, n=2)
+    fs = run()
+    got = F.count_global(fs)
+    want = analytic_fractal_count(trees, k, depth)
+    row("fig12_adapt_fractal", us, f"count_ratio={got / want:.6f}")
+    row("fig12_adapt_fractal_elems", us / got * 1000, f"{got}elems_ns/elem")
+
+
+def partition_weighted():
+    from repro.core import forest as F
+    comm = F.SimComm(8)
+    fs = F.new_uniform(3, 2, 5, comm)
+
+    def mkw(forests):
+        return [2.0 ** f.level * (1.0 + 0.5 * np.sin(f.keys.astype(np.float64)))
+                for f in forests]
+
+    us = _time(lambda: F.partition(fs, comm, weights=mkw(fs)), n=2)
+    out = F.partition(fs, comm, weights=mkw(fs))
+    loads = [float(w.sum()) for w in mkw(out)]
+    imb = max(loads) / (sum(loads) / len(loads))
+    row("partition_weighted", us, f"imbalance={imb:.4f}")
+
+
+def element_ops():
+    import jax
+    import jax.numpy as jnp
+    from repro.core import ops3d, u64
+    n = 100_000
+    rng = np.random.default_rng(0)
+    lv = jnp.asarray(rng.integers(1, ops3d.L, size=n), jnp.int32)
+    ids = u64.from_int(rng.integers(0, 2 ** 40, size=n).astype(np.uint64))
+    s = ops3d.from_linear_id(ids, lv)
+    fns = {
+        "morton_key": jax.jit(ops3d.morton_key),
+        "encode_decode": jax.jit(lambda ss: ops3d.from_linear_id(ops3d.linear_id(ss), ss.level)),
+        "face_neighbor": jax.jit(lambda ss: ops3d.face_neighbor(ss, jnp.int32(0))),
+        "successor": jax.jit(ops3d.successor),
+        "is_inside_root": jax.jit(ops3d.is_inside_root),
+    }
+    for name, fn in fns.items():
+        us = _time(lambda: jax.block_until_ready(fn(s)), n=3)
+        row(f"element_op_{name}", us, f"{us * 1000 / n:.1f}ns/elem")
+
+
+def pallas_kernels():
+    import jax.numpy as jnp
+    from repro.core import ops3d, u64
+    from repro.kernels import ops as kops
+    n = 4096
+    rng = np.random.default_rng(1)
+    lv = jnp.asarray(rng.integers(1, ops3d.L, size=n), jnp.int32)
+    ids = u64.from_int(rng.integers(0, 2 ** 40, size=n).astype(np.uint64))
+    s = ops3d.from_linear_id(ids, lv)
+    want = ops3d.morton_key(s)
+    us = _time(lambda: kops.morton_key(3, s), n=2)
+    hi, lo = kops.morton_key(3, s)
+    exact = int((np.asarray(hi) == np.asarray(want.hi)).all()
+                and (np.asarray(lo) == np.asarray(want.lo)).all())
+    row("pallas_morton_key_interpret", us, f"exact={exact}")
+    nb_k, dual_k = kops.face_neighbor(3, s, 0)
+    nb_r, dual_r = ops3d.face_neighbor(s, jnp.int32(0))
+    exact = int(np.array_equal(np.asarray(nb_k.anchor), np.asarray(nb_r.anchor)))
+    row("pallas_face_neighbor_interpret", 0.0, f"exact={exact}")
+
+
+def moe_placement():
+    import jax.numpy as jnp
+    from repro.core.placement import expert_placement, imbalance
+    rng = np.random.default_rng(0)
+    load = jnp.asarray((rng.zipf(1.3, size=256) % 4000 + 50).astype(np.float32))
+    naive = jnp.repeat(jnp.arange(16), 16)
+    us = _time(lambda: expert_placement(load, 16), n=3)
+    dev, imb = expert_placement(load, 16)
+    ratio = float(imbalance(load, naive, 16)) / float(imb)
+    row("moe_sfc_placement", us, f"imbalance_gain={ratio:.2f}x")
+
+
+def roofline_summary():
+    d = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+    if not d.exists():
+        row("roofline_summary", 0.0, "missing:run_dryrun_first")
+        return
+    for p in sorted(d.glob("*__single.json")):
+        j = json.loads(p.read_text())
+        if j.get("status") != "ok":
+            row(f"roofline_{p.stem}", 0.0, j.get("status", "?"))
+            continue
+        r = j["roofline"]
+        row(f"roofline_{p.stem}", 0.0,
+            f"frac={r['roofline_fraction']:.3f}:bound={r['bottleneck']}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    fig11_new_scaling()
+    fig11_new_ranks()
+    fig12_adapt_fractal()
+    partition_weighted()
+    element_ops()
+    pallas_kernels()
+    moe_placement()
+    roofline_summary()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Finite-volume diffusion on an adapted tetrahedral forest.
+
+Shows the AMR library as a numerical substrate: a piecewise-constant field
+lives on the leaves of an adapted forest; explicit heat diffusion exchanges
+flux across interior faces enumerated by `Iterate` (paper Sec. 5), with a
+hot blob refined to two extra levels. Verifies discrete conservation
+(sum u * volume is constant) and monotone decay of the max.
+
+    PYTHONPATH=src python examples/fem_diffusion.py
+"""
+
+import numpy as np
+
+from repro.core import forest as F
+from repro.core import ops3d
+
+
+def volumes(f):
+    # each level-l tet has volume (1/6) * 8^-l of the unit cube (root tet = 1/6)
+    return (1.0 / 6.0) * (8.0 ** -f.level.astype(np.float64))
+
+
+def main():
+    comm = F.SimComm(1)
+    fs = F.new_uniform(3, 1, 2, comm)
+
+    # refine around a hot corner blob
+    L = ops3d.L
+
+    def near_corner(tree, elems):
+        c = np.asarray(ops3d.coordinates(elems)).mean(axis=1) / (1 << L)
+        lv = np.asarray(elems.level)
+        return ((np.linalg.norm(c - np.array([0.9, 0.1, 0.5]), axis=1) < 0.25)
+                & (lv < 4)).astype(np.int32)
+
+    fs = [F.adapt(f, near_corner, recursive=True) for f in fs]
+    fs = F.balance(fs, comm)
+    f = fs[0]
+    n = f.num_local
+    print(f"adapted+balanced mesh: {n} leaves, levels "
+          f"{int(f.level.min())}..{int(f.level.max())}")
+
+    # initial condition: hot blob
+    cent = np.asarray(ops3d.coordinates(f.simplices())).mean(axis=1) / (1 << L)
+    u = np.exp(-40 * np.linalg.norm(cent - np.array([0.9, 0.1, 0.5]), axis=1) ** 2)
+    vol = volumes(f)
+    total0 = float((u * vol).sum())
+
+    # face pairs once (mesh is static during the solve)
+    pairs = {}
+    F.iterate(f, face_fn=lambda ff, pp: pairs.setdefault("p", pp))
+    p = pairs["p"]
+    i, j = p[:, 0], p[:, 1]
+    print(f"interior face pairs: {len(p)}")
+
+    # explicit diffusion: du_i = dt * sum_faces k * (u_j - u_i) * A_ij / vol_i
+    # (uniform transmissibility; hanging faces appear as coarse-fine pairs)
+    area = np.minimum(vol[i], vol[j]) ** (2 / 3)
+    rowsum = np.zeros(n)
+    np.add.at(rowsum, i, area / vol[i])
+    np.add.at(rowsum, j, area / vol[j])
+    dt_k = 0.9 / rowsum.max()  # explicit stability bound
+    for step in range(60):
+        flux = dt_k * (u[j] - u[i]) * area
+        du = np.zeros_like(u)
+        np.add.at(du, i, flux / vol[i])
+        np.add.at(du, j, -flux / vol[j])
+        u = u + du
+        if step % 20 == 0:
+            total = float((u * vol).sum())
+            print(f"step {step:3d}: max u = {u.max():.4f}, "
+                  f"conservation error = {abs(total - total0) / total0:.2e}")
+    total = float((u * vol).sum())
+    assert abs(total - total0) / total0 < 1e-12, "not conservative!"
+    assert u.max() < 1.0, "diffusion must decay the max"
+    print("conservation + decay verified")
+
+
+if __name__ == "__main__":
+    main()

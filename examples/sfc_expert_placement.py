@@ -1,0 +1,43 @@
+"""The paper's technique inside the training stack: SFC-weighted partition
+for MoE expert placement and token load balancing.
+
+Simulates a skewed MoE routing distribution (Zipf over 256 experts, as seen
+in real deepseek-scale training), then compares:
+  * naive blocked placement (experts e*E/D .. (e+1)*E/D per device) vs
+  * SFC-weighted contiguous partition over measured loads
+and shows the documents->DP-ranks token balancing used by the data pipeline.
+
+    PYTHONPATH=src python examples/sfc_expert_placement.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.placement import (document_partition, expert_placement,
+                                  imbalance, target_ranks)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    E, D = 256, 16
+    load = (rng.zipf(1.3, size=E) % 4000 + 50).astype(np.float32)
+    load = jnp.asarray(load)
+
+    naive = jnp.repeat(jnp.arange(D), E // D)
+    imb_naive = float(imbalance(load, naive, D))
+    dev, imb_sfc = expert_placement(load, D)
+    print(f"expert load imbalance (max/mean): naive blocked {imb_naive:.2f} "
+          f"-> SFC weighted {float(imb_sfc):.2f}")
+    counts = np.bincount(np.asarray(dev), minlength=D)
+    print("experts per device:", counts.tolist())
+
+    print()
+    doc_lens = rng.lognormal(6.2, 1.1, size=4096).astype(np.float32)
+    ranks, imb = document_partition(jnp.asarray(doc_lens), 32)
+    per = np.bincount(np.asarray(ranks), weights=doc_lens, minlength=32)
+    print(f"document->rank token balancing over 32 DP ranks: "
+          f"imbalance {float(imb):.3f} (min {per.min():.0f} max {per.max():.0f} tokens)")
+
+
+if __name__ == "__main__":
+    main()

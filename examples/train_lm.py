@@ -1,0 +1,70 @@
+"""End-to-end training driver with fault tolerance.
+
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 40
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+tiny  — CPU-friendly smoke run (finishes in ~a minute).
+100m  — a ~100M-parameter qwen3-style model, seq 512: the "train a ~100M
+        model for a few hundred steps" deliverable (hours on this 1-core
+        CPU box; the loop, checkpointing and restart logic are identical).
+
+Kill the process (Ctrl-C / SIGTERM) at any point and re-run: it resumes
+from the latest checkpoint with an identical loss trajectory (deterministic
+seekable data pipeline + atomic checkpoints).
+"""
+
+import argparse
+from dataclasses import replace
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.launch.train import make_train_step
+from repro.models.config import ShapeConfig
+from repro.runtime import Trainer, TrainerConfig
+
+
+def preset(name: str):
+    base = get_config("qwen3-1.7b")
+    if name == "tiny":
+        cfg = replace(reduced(base), dtype="float32")
+        shape = ShapeConfig("tiny", seq_len=64, global_batch=8, mode="train")
+    elif name == "100m":
+        cfg = replace(
+            base, num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab_size=32768, tie_embeddings=True,
+        )  # ~100M params
+        shape = ShapeConfig("100m", seq_len=512, global_batch=8, mode="train")
+    else:
+        raise SystemExit(f"unknown preset {name}")
+    return cfg, shape
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg, shape = preset(args.preset)
+    print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
+          f"seq={shape.seq_len} batch={shape.global_batch}")
+    step_fn = jax.jit(make_train_step(cfg, num_micro=1, lr=args.lr,
+                                      warmup=20, total_steps=args.steps))
+    trainer = Trainer(
+        cfg, shape,
+        TrainerConfig(ckpt_dir=f"{args.ckpt_dir}_{args.preset}",
+                      ckpt_every=args.ckpt_every, max_steps=args.steps),
+        step_fn=step_fn, seed=0,
+    )
+    _, _, log = trainer.run(jax.random.PRNGKey(0))
+    if log:
+        print(f"steps {log[0]['step']}..{log[-1]['step']}  "
+              f"loss {log[0]['loss']:.3f} -> {log[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

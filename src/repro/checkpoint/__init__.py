@@ -1,0 +1,5 @@
+from .store import (latest_step, restore_checkpoint, save_checkpoint,
+                    AsyncCheckpointer)
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer"]

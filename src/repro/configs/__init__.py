@@ -1,0 +1,106 @@
+"""Architecture registry + benchmark input specs.
+
+`get_config(arch)` returns the exact assigned ModelConfig; `input_specs`
+returns jax.ShapeDtypeStruct stand-ins for every model input of a
+(config, shape) cell — weak-type-correct, shardable, no device allocation —
+used by the multi-pod dry-run and the roofline harness.
+
+Cell applicability follows the paper-pool rules:
+  * long_500k only for sub-quadratic archs (SSM / hybrid / sliding-window);
+  * decode shapes use `decode_step` (one token against a seq_len KV cache).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig, reduced
+
+from . import (
+    deepseek_v3_671b,
+    mixtral_8x7b,
+    whisper_medium,
+    recurrentgemma_9b,
+    mamba2_130m,
+    deepseek_coder_33b,
+    olmo_1b,
+    qwen3_1_7b,
+    phi3_mini_3_8b,
+    pixtral_12b,
+)
+
+_MODULES = [
+    deepseek_v3_671b,
+    mixtral_8x7b,
+    whisper_medium,
+    recurrentgemma_9b,
+    mamba2_130m,
+    deepseek_coder_33b,
+    olmo_1b,
+    qwen3_1_7b,
+    phi3_mini_3_8b,
+    pixtral_12b,
+]
+
+ARCHS = {m.ARCH: m.config for m in _MODULES}
+ARCH_NAMES = list(ARCHS.keys())
+
+
+def get_config(arch: str) -> ModelConfig:
+    return ARCHS[arch]()
+
+
+def get_shape(shape: str) -> ShapeConfig:
+    return SHAPES[shape]
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Is (arch x shape) a runnable cell?  Returns (ok, reason-if-skipped)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k requires sub-quadratic attention (skip: full attention)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for the model inputs of this cell.
+
+    train/prefill: token batch (+ frame/patch embeddings for audio/vlm).
+    decode: one token per sequence + scalar position (the KV cache spec is
+    produced separately via jax.eval_shape(init_cache, ...)).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.mode in ("train", "prefill"):
+        if cfg.family == "encdec":
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S), tok),
+                "frames": jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), dtype),
+            }
+        if cfg.family == "vlm":
+            P = min(cfg.num_patches, S // 2)
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S - P), tok),
+                "patches": jax.ShapeDtypeStruct((B, P, cfg.d_model), dtype),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+    # decode: one new token with a KV cache of seq_len
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), tok)}
+
+
+def all_cells():
+    """Every (arch, shape) pair with its support status — 40 cells."""
+    out = []
+    for a in ARCH_NAMES:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            ok, why = cell_supported(cfg, s)
+            out.append((a, s.name, ok, why))
+    return out
+
+
+__all__ = [
+    "ARCHS", "ARCH_NAMES", "get_config", "get_shape", "cell_supported",
+    "input_specs", "all_cells", "SHAPES", "reduced",
+]

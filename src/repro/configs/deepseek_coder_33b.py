@@ -1,0 +1,35 @@
+"""deepseek-coder-33b [dense] — llama-architecture GQA decoder.
+[arXiv:2401.14196; hf]
+
+62L d_model=7168 56H (GQA kv=8) d_ff=19200 vocab=32256.
+"""
+
+from repro.models.config import ModelConfig
+
+ARCH = "deepseek-coder-33b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH,
+        family="dense",
+        num_layers=62,
+        d_model=7168,
+        num_heads=56,
+        num_kv_heads=8,
+        d_ff=19200,
+        vocab_size=32256,
+        head_dim=128,
+        remat="block",
+        fsdp=True,
+        # 56 heads / 8 kv-heads don't divide the 16-way model axis: TP makes
+        # GSPMD shard head_dim and all-reduce f32 attention scores (see
+        # EXPERIMENTS.md Perf iteration 3). Pure-FSDP + sequence parallelism
+        # sidesteps head divisibility entirely.
+        parallelism="fsdp_sp",
+        # 8 microbatches instead of 16: FSDP weight all-gathers scale with
+        # the micro count (Perf iteration 4); micro=4 gave the best
+        # collective term but peaked at 18.2 GB/dev > 16 GB HBM, micro=8
+        # keeps both in budget.
+        num_micro_override=8,
+    )

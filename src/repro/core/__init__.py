@@ -1,0 +1,30 @@
+"""Core library: the tetrahedral-Morton space-filling curve (Burstedde-Holke).
+
+Layers:
+  tables     — derived lookup tables (types, TM order, neighbors, Prop. 23)
+  types      — the Tet / Simplex SoA data type (10/14-byte encoding at rest)
+  u64        — uint32-pair integer arithmetic (TPU-safe 64-bit emulation)
+  ops        — vectorized constant-time element algorithms (paper Section 4)
+  reference  — pure-Python oracles (tests only)
+  forest     — forest-of-trees AMR: New / Adapt / Partition / Balance / Ghost
+  placement  — SFC-based load balancing applied to LM training workloads
+"""
+
+from .tables import MAXLEVEL, SFCTables, get_tables
+from .types import Simplex, root, simplex
+from .ops import SimplexOps, get_ops, ops2d, ops3d
+from . import u64
+
+__all__ = [
+    "MAXLEVEL",
+    "SFCTables",
+    "get_tables",
+    "Simplex",
+    "root",
+    "simplex",
+    "SimplexOps",
+    "get_ops",
+    "ops2d",
+    "ops3d",
+    "u64",
+]

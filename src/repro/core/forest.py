@@ -1,0 +1,583 @@
+"""Forest-of-trees AMR on the tetrahedral SFC (paper Section 5).
+
+Implements the top-level algorithms New, Adapt, Partition, Balance, Ghost and
+Iterate over a *forest*: a coarse mesh of K root simplices ("trees"), each
+adaptively refined, with leaves totally ordered by (tree, TM-index) and
+partitioned across P ranks by contiguous SFC ranges.
+
+This module is the distributed-algorithm layer.  It is written in SPMD style:
+every function computes one rank's view, and cross-rank exchanges go through
+an explicit `Comm` object.  `SimComm` executes P ranks in one process (used
+by tests/benchmarks on this box); the identical call structure maps onto
+jax.distributed / MPI on a real machine.  The heavy per-element math is the
+vectorized `SimplexOps` (gathers + integer ALU — TPU/SIMD friendly), while
+variable-size bookkeeping stays in numpy on the host, matching how meshing
+layers sit next to accelerator compute in production frameworks.
+
+Inter-tree face connectivity is intentionally out of scope, exactly as in the
+paper (Balance/Ghost "require additional theoretical work"); we implement
+Balance and Ghost *within* each tree and treat tree faces as boundaries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import u64 as u64m
+from .ops import SimplexOps, get_ops
+from .types import Simplex
+
+__all__ = [
+    "Forest",
+    "SimComm",
+    "new_uniform",
+    "adapt",
+    "partition",
+    "balance",
+    "ghost",
+    "iterate",
+    "validate",
+    "count_global",
+]
+
+
+# --------------------------------------------------------------------- comm
+class SimComm:
+    """Single-process stand-in for an MPI-like communicator.
+
+    Collectives operate over a list of per-rank payloads.  The production
+    deployment swaps this for jax.distributed / mpi4py with the same calls.
+    """
+
+    def __init__(self, num_ranks: int):
+        self.P = num_ranks
+
+    def allgather(self, per_rank: Sequence):
+        return list(per_rank)
+
+    def alltoallv(self, send: Sequence[Sequence]):
+        """send[p][q] = payload from rank p to rank q -> recv[q][p]."""
+        P = self.P
+        return [[send[p][q] for p in range(P)] for q in range(P)]
+
+
+# ------------------------------------------------------------------- forest
+@dataclasses.dataclass
+class Forest:
+    """One rank's portion of a partitioned forest.
+
+    Elements are stored SoA (anchor/level/type + owning tree) in ascending
+    (tree, TM-index) order — the paper's linear storage along the SFC.
+    """
+
+    d: int
+    num_trees: int
+    rank: int
+    num_ranks: int
+    anchor: np.ndarray        # (n, d) int32
+    level: np.ndarray         # (n,)  int32
+    stype: np.ndarray         # (n,)  int32
+    tree: np.ndarray          # (n,)  int32
+    keys: np.ndarray          # (n,)  uint64 morton keys (level-padded ids)
+
+    @property
+    def ops(self) -> SimplexOps:
+        return get_ops(self.d)
+
+    @property
+    def num_local(self) -> int:
+        return len(self.level)
+
+    def simplices(self) -> Simplex:
+        return Simplex(jnp.asarray(self.anchor), jnp.asarray(self.level), jnp.asarray(self.stype))
+
+    def replace_elements(self, anchor, level, stype, tree) -> "Forest":
+        s = Simplex(jnp.asarray(anchor), jnp.asarray(level), jnp.asarray(stype))
+        keys = u64m.to_np(self.ops.morton_key(s))
+        return dataclasses.replace(
+            self,
+            anchor=np.asarray(anchor, np.int32),
+            level=np.asarray(level, np.int32),
+            stype=np.asarray(stype, np.int32),
+            tree=np.asarray(tree, np.int32),
+            keys=keys,
+        )
+
+    def global_first_desc_key(self):
+        """(tree, key) of this rank's first element; used as partition marker."""
+        if self.num_local == 0:
+            return (self.num_trees, np.uint64(0))
+        return (int(self.tree[0]), self.keys[0])
+
+
+def _empty(d, num_trees, rank, num_ranks) -> Forest:
+    return Forest(
+        d, num_trees, rank, num_ranks,
+        np.zeros((0, d), np.int32), np.zeros(0, np.int32), np.zeros(0, np.int32),
+        np.zeros(0, np.int32), np.zeros(0, np.uint64),
+    )
+
+
+# ---------------------------------------------------------------------- new
+def new_uniform(d: int, num_trees: int, level: int, comm: SimComm,
+                method: str = "decode") -> list[Forest]:
+    """Paper Algorithm 5.1 (New): partitioned uniform level-`level` forest."""
+    return [
+        new_uniform_rank(d, num_trees, level, p, comm.P, method=method)
+        for p in range(comm.P)
+    ]
+
+
+def new_uniform_rank(d: int, num_trees: int, level: int, rank: int, num_ranks: int,
+                     method: str = "decode") -> Forest:
+    """One rank's portion of a uniform refinement — communication free.
+
+    method="decode":    vectorized Algorithm 4.8 over the index range (O(n L)
+                        work but a single fused gather pipeline; the default).
+    method="successor": first element via Algorithm 4.8, remainder via the
+                        level-independent batch expansion (paper's New uses
+                        Successor to achieve O(n); our batch analogue expands
+                        whole subtrees level by level, also O(n) total work).
+    """
+    o = get_ops(d)
+    n_per_tree = o.num_elements(level)
+    N = n_per_tree * num_trees
+    g_first = (N * rank) // num_ranks
+    g_last = (N * (rank + 1)) // num_ranks  # exclusive
+    f = _empty(d, num_trees, rank, num_ranks)
+    if g_last <= g_first:
+        return f
+
+    trees = np.arange(g_first // n_per_tree, (g_last - 1) // n_per_tree + 1)
+    anchors, levels, stypes, tree_ids = [], [], [], []
+    for t in trees:
+        e_first = g_first - t * n_per_tree if t == trees[0] else 0
+        e_last = g_last - t * n_per_tree if t == trees[-1] else n_per_tree
+        ids = np.arange(e_first, e_last, dtype=np.uint64)
+        if method == "decode":
+            s = o.from_linear_id(u64m.from_int(ids), jnp.full(len(ids), level, jnp.int32))
+        elif method == "successor":
+            s = _range_by_expansion(o, int(e_first), int(e_last), level)
+        else:
+            raise ValueError(method)
+        anchors.append(np.asarray(s.anchor))
+        levels.append(np.asarray(s.level))
+        stypes.append(np.asarray(s.stype))
+        tree_ids.append(np.full(len(ids), t, np.int32))
+    return f.replace_elements(
+        np.concatenate(anchors), np.concatenate(levels),
+        np.concatenate(stypes), np.concatenate(tree_ids),
+    )
+
+
+def _range_by_expansion(o: SimplexOps, e_first: int, e_last: int, level: int) -> Simplex:
+    """Create the SFC range [e_first, e_last) at `level` with O(n) total work.
+
+    Level-independent per element: start from the coarsest subtree roots that
+    tile the range and expand children level by level (geometric series).
+    This is the vectorized counterpart of the paper's Successor-based New.
+    """
+    nc = o.nc
+    # Coarsest covering: walk levels, at each level emit subtrees fully inside
+    # the remaining range.
+    roots = []  # (id, lvl)
+    lo, hi = e_first, e_last
+    for lv in range(level + 1):
+        span = nc ** (level - lv)
+        lo_aligned = (lo + span - 1) // span * span
+        hi_aligned = hi // span * span
+        if lo_aligned > hi_aligned:
+            continue
+        # emit subtrees of this level covering [lo_aligned, hi_aligned) that
+        # are NOT covered by a coarser subtree already emitted
+        if not roots:
+            ids = np.arange(lo_aligned // span, hi_aligned // span, dtype=np.uint64)
+            if len(ids):
+                roots.append((ids, lv))
+                lo2, hi2 = lo_aligned, hi_aligned
+        else:
+            break
+    if not roots:  # range shorter than one finest element span
+        ids = np.arange(lo, hi, dtype=np.uint64)
+        s = o.from_linear_id(u64m.from_int(ids), jnp.full(len(ids), level, jnp.int32))
+        return s
+    ids, lv = roots[0]
+    head = np.arange(lo, lo2, dtype=np.uint64)
+    tail = np.arange(hi2, hi, dtype=np.uint64)
+    mid = o.from_linear_id(u64m.from_int(ids), jnp.full(len(ids), lv, jnp.int32))
+    while lv < level:
+        kids = o.children_tm(mid)
+        mid = Simplex(
+            kids.anchor.reshape(-1, o.d), kids.level.reshape(-1), kids.stype.reshape(-1)
+        )
+        lv += 1
+    parts = []
+    if len(head):
+        parts.append(o.from_linear_id(u64m.from_int(head), jnp.full(len(head), level, jnp.int32)))
+    parts.append(mid)
+    if len(tail):
+        parts.append(o.from_linear_id(u64m.from_int(tail), jnp.full(len(tail), level, jnp.int32)))
+    return Simplex(
+        jnp.concatenate([p.anchor for p in parts]),
+        jnp.concatenate([p.level for p in parts]),
+        jnp.concatenate([p.stype for p in parts]),
+    )
+
+
+# -------------------------------------------------------------------- adapt
+AdaptCallback = Callable[[np.ndarray, Simplex], np.ndarray]
+# callback(tree_ids, elements) -> int flags: >0 refine, 0 keep, <0 coarsen.
+
+
+def _family_heads(f: Forest) -> np.ndarray:
+    """Boolean mask: element i starts a complete family of 2^d siblings."""
+    o, n, nc = f.ops, f.num_local, f.ops.nc
+    heads = np.zeros(n, bool)
+    if n < nc:
+        return heads
+    s = f.simplices()
+    iloc = np.asarray(o.local_index(s))
+    parent = o.parent(s)
+    pkey = u64m.to_np(o.morton_key(parent))
+    cand = np.nonzero((iloc[: n - nc + 1] == 0) & (f.level[: n - nc + 1] > 0))[0]
+    ok = np.ones(len(cand), bool)
+    for k in range(1, nc):
+        ok &= (
+            (iloc[cand + k] == k)
+            & (pkey[cand + k] == pkey[cand])
+            & (f.level[cand + k] == f.level[cand])
+            & (f.tree[cand + k] == f.tree[cand])
+        )
+    heads[cand[ok]] = True
+    return heads
+
+
+def adapt(f: Forest, callback: AdaptCallback, recursive: bool = False,
+          max_passes: int = 64) -> Forest:
+    """Paper Section 5.2 (Adapt): refine/coarsen local elements by callback.
+
+    Honors the paper's recursion assumptions: elements created by refinement
+    are not coarsened within the same call, and vice versa.
+    Note: like the paper's Adapt, this is process-local; families straddling
+    a partition boundary are not coarsened (call `partition` first if needed).
+    """
+    o = f.ops
+    nc = o.nc
+    refined_origin = np.zeros(f.num_local, bool)   # created by refine this call
+    coarsened_origin = np.zeros(f.num_local, bool)
+    for _ in range(max_passes):
+        n = f.num_local
+        if n == 0:
+            return f
+        s = f.simplices()
+        flags = np.asarray(callback(f.tree, s)).astype(np.int32)
+        assert flags.shape == (n,)
+        # never coarsen refine-children / never refine coarsen-parents
+        flags = np.where(refined_origin & (flags < 0), 0, flags)
+        flags = np.where(coarsened_origin & (flags > 0), 0, flags)
+        heads = _family_heads(f)
+        coarsen_head = heads.copy()
+        for k in range(nc):
+            idx = np.nonzero(heads)[0] + k
+            coarsen_head[np.nonzero(heads)[0]] &= flags[idx] < 0
+        # members of a coarsened family
+        member = np.zeros(n, bool)
+        hidx = np.nonzero(coarsen_head)[0]
+        for k in range(nc):
+            member[hidx + k] = True
+        refine = (flags > 0) & ~member & (f.level < o.L)
+        if not refine.any() and not coarsen_head.any():
+            break
+        keep = ~refine & ~member
+
+        out_anchor, out_level, out_stype, out_tree = [], [], [], []
+        origin_r, origin_c = [], []
+        # sizes: keep->1, refine->nc, family head->1 (others 0)
+        counts = keep.astype(np.int64) + refine.astype(np.int64) * nc + coarsen_head.astype(np.int64)
+        total = int(counts.sum())
+        offs = np.zeros(n + 1, np.int64)
+        np.cumsum(counts, out=offs[1:])
+        A = np.zeros((total, o.d), np.int32)
+        L = np.zeros(total, np.int32)
+        B = np.zeros(total, np.int32)
+        T = np.zeros(total, np.int32)
+        OR = np.zeros(total, bool)
+        OC = np.zeros(total, bool)
+        # keeps
+        kidx = np.nonzero(keep)[0]
+        A[offs[kidx]] = f.anchor[kidx]
+        L[offs[kidx]] = f.level[kidx]
+        B[offs[kidx]] = f.stype[kidx]
+        T[offs[kidx]] = f.tree[kidx]
+        OR[offs[kidx]] = refined_origin[kidx]
+        OC[offs[kidx]] = coarsened_origin[kidx]
+        # refines
+        ridx = np.nonzero(refine)[0]
+        if len(ridx):
+            rs = Simplex(jnp.asarray(f.anchor[ridx]), jnp.asarray(f.level[ridx]),
+                         jnp.asarray(f.stype[ridx]))
+            kids = o.children_tm(rs)
+            ka = np.asarray(kids.anchor)      # (m, nc, d)
+            kl = np.asarray(kids.level)
+            kb = np.asarray(kids.stype)
+            pos = offs[ridx][:, None] + np.arange(nc)[None, :]
+            A[pos.reshape(-1)] = ka.reshape(-1, o.d)
+            L[pos.reshape(-1)] = kl.reshape(-1)
+            B[pos.reshape(-1)] = kb.reshape(-1)
+            T[pos.reshape(-1)] = np.repeat(f.tree[ridx], nc)
+            OR[pos.reshape(-1)] = True
+        # coarsens
+        if len(hidx):
+            hs = Simplex(jnp.asarray(f.anchor[hidx]), jnp.asarray(f.level[hidx]),
+                         jnp.asarray(f.stype[hidx]))
+            par = o.parent(hs)
+            A[offs[hidx]] = np.asarray(par.anchor)
+            L[offs[hidx]] = np.asarray(par.level)
+            B[offs[hidx]] = np.asarray(par.stype)
+            T[offs[hidx]] = f.tree[hidx]
+            OC[offs[hidx]] = True
+        f = f.replace_elements(A, L, B, T)
+        refined_origin, coarsened_origin = OR, OC
+        if not recursive:
+            break
+    return f
+
+
+# ---------------------------------------------------------------- partition
+def partition(forests: list[Forest], comm: SimComm,
+              weights: list[np.ndarray] | None = None) -> list[Forest]:
+    """Paper Section 5 (Partition): weighted SFC repartitioning, linear time.
+
+    Every rank computes the global prefix sum of its element weights, derives
+    target ranks by slicing the total weight into P equal chunks, and ships
+    contiguous element runs — the classic SFC partition [Pilkington-Baden].
+    """
+    P = comm.P
+    if weights is None:
+        weights = [np.ones(f.num_local, np.float64) for f in forests]
+    local_tot = [float(w.sum()) for w in weights]
+    tots = comm.allgather(local_tot)  # same list on each rank
+    prefix = np.concatenate([[0.0], np.cumsum(tots)])
+    W = prefix[-1]
+    sends = []
+    for p, f in enumerate(forests):
+        w = weights[p]
+        cum = prefix[p] + np.cumsum(w) - w / 2.0  # midpoint rule, robust to w=0
+        target = np.minimum((cum * P / max(W, 1e-300)).astype(np.int64), P - 1)
+        target = np.maximum.accumulate(target)  # keep contiguous, monotone
+        chunks = []
+        for q in range(P):
+            m = target == q
+            chunks.append((f.anchor[m], f.level[m], f.stype[m], f.tree[m]))
+        sends.append(chunks)
+    recv = comm.alltoallv(sends)
+    out = []
+    for q in range(P):
+        parts = recv[q]
+        A = np.concatenate([c[0] for c in parts])
+        L = np.concatenate([c[1] for c in parts])
+        B = np.concatenate([c[2] for c in parts])
+        T = np.concatenate([c[3] for c in parts])
+        out.append(forests[q].replace_elements(A, L, B, T))
+    return out
+
+
+# ------------------------------------------------------------------ balance
+def balance(forests: list[Forest], comm: SimComm, max_rounds: int = 64) -> list[Forest]:
+    """2:1 balance across faces (ripple algorithm), intra-tree.
+
+    A leaf is refined when some face-neighbor region contains a leaf more
+    than one level finer.  Iterates to fixpoint; each round exchanges the
+    global leaf key sets (simulator; a production version exchanges only
+    boundary layers, cf. [Isaac-Burstedde-Ghattas]).
+    """
+    d = forests[0].d
+    o = get_ops(d)
+    for _ in range(max_rounds):
+        # Global sorted (tree, key, level) table — simulator-level shortcut.
+        all_tree = np.concatenate([f.tree for f in forests])
+        all_keys = np.concatenate([f.keys for f in forests])
+        all_level = np.concatenate([f.level for f in forests])
+        order = np.lexsort((all_keys, all_tree))
+        g_tree, g_keys, g_level = all_tree[order], all_keys[order], all_level[order]
+        changed = False
+        new_forests = []
+        for f in forests:
+            if f.num_local == 0:
+                new_forests.append(f)
+                continue
+            s = f.simplices()
+            need = np.zeros(f.num_local, bool)
+            for face in range(d + 1):
+                nb, _ = o.face_neighbor(s, face)
+                inside = np.asarray(o.is_inside_root(nb))
+                nkey = u64m.to_np(o.morton_key(nb))
+                span = np.uint64(1) << (np.uint64(d) * (np.uint64(o.L) - f.level.astype(np.uint64)))
+                # per-tree slices of the global sorted leaf table
+                need_f = np.zeros(f.num_local, bool)
+                for t in np.unique(f.tree):
+                    sel = np.nonzero(f.tree == t)[0]
+                    gsel = slice(*np.searchsorted(g_tree, [t, t + 1]))
+                    keys_t, level_t = g_keys[gsel], g_level[gsel]
+                    lo_t = np.searchsorted(keys_t, nkey[sel], side="left")
+                    hi_t = np.searchsorted(keys_t, nkey[sel] + span[sel], side="left")
+                    # any leaf in the neighbor interval finer than level+1?
+                    mx = np.zeros(len(sel), np.int32)
+                    for i, (a, b) in enumerate(zip(lo_t, hi_t)):
+                        mx[i] = level_t[a:b].max(initial=-1)
+                    need_f[sel] = inside[sel] & (mx > f.level[sel] + 1)
+                need |= need_f
+            if need.any():
+                changed = True
+                flags = need.astype(np.int32)
+                new_forests.append(
+                    adapt(f, lambda tree, elems, fl=flags: fl, recursive=False)
+                )
+            else:
+                new_forests.append(f)
+        forests = new_forests
+        if not changed:
+            return forests
+    raise RuntimeError("balance did not converge")
+
+
+# -------------------------------------------------------------------- ghost
+def ghost(forests: list[Forest], comm: SimComm) -> list[dict]:
+    """Face-ghost layer: for each rank, the remote leaves touching its
+    elements across faces (intra-tree).  Returns per-rank dicts with ghost
+    element arrays and their owner ranks."""
+    d = forests[0].d
+    o = get_ops(d)
+    P = comm.P
+    # partition markers: first (tree,key) per rank
+    markers = comm.allgather([f.global_first_desc_key() for f in forests])
+    marker_tree = np.array([m[0] for m in markers], np.int64)
+    marker_key = np.array([m[1] for m in markers], np.uint64)
+
+    # global leaf table for existence queries (simulator-level)
+    all_tree = np.concatenate([f.tree for f in forests])
+    all_keys = np.concatenate([f.keys for f in forests])
+    all_level = np.concatenate([f.level for f in forests])
+    all_owner = np.concatenate([np.full(f.num_local, p) for p, f in enumerate(forests)])
+    order = np.lexsort((all_keys, all_tree))
+    g_tree, g_keys, g_level, g_owner = (
+        all_tree[order], all_keys[order], all_level[order], all_owner[order],
+    )
+
+    out = []
+    for p, f in enumerate(forests):
+        if f.num_local == 0:
+            out.append({"anchor": np.zeros((0, d), np.int32), "level": np.zeros(0, np.int32),
+                        "stype": np.zeros(0, np.int32), "tree": np.zeros(0, np.int32),
+                        "owner": np.zeros(0, np.int32)})
+            continue
+        s = f.simplices()
+        cand = []
+        for face in range(d + 1):
+            nb, _ = o.face_neighbor(s, face)
+            inside = np.asarray(o.is_inside_root(nb))
+            nkey = u64m.to_np(o.morton_key(nb))
+            for t in np.unique(f.tree):
+                sel = np.nonzero((f.tree == t) & inside)[0]
+                if not len(sel):
+                    continue
+                gsel = slice(*np.searchsorted(g_tree, [t, t + 1]))
+                keys_t, level_t, owner_t = g_keys[gsel], g_level[gsel], g_owner[gsel]
+                span = np.uint64(1) << (np.uint64(d) * (np.uint64(o.L) - f.level[sel].astype(np.uint64)))
+                lo = np.searchsorted(keys_t, nkey[sel], side="left")
+                hi = np.searchsorted(keys_t, nkey[sel] + span, side="left")
+                # same-or-finer leaves inside the neighbor region
+                for i, (a, b) in enumerate(zip(lo, hi)):
+                    for j in range(a, b):
+                        if owner_t[j] != p:
+                            cand.append((t, keys_t[j], level_t[j], owner_t[j]))
+                # coarser leaf containing the neighbor: predecessor check
+                pred = np.maximum(lo - 1, 0)
+                for i, pj in enumerate(pred):
+                    if len(keys_t) == 0:
+                        continue
+                    span_pred = np.uint64(1) << (
+                        np.uint64(d) * (np.uint64(o.L) - np.uint64(level_t[pj]))
+                    )
+                    if (keys_t[pj] <= nkey[sel][i] < keys_t[pj] + span_pred
+                            and owner_t[pj] != p and lo[i] == hi[i]):
+                        cand.append((t, keys_t[pj], level_t[pj], owner_t[pj]))
+        if not cand:
+            out.append({"anchor": np.zeros((0, d), np.int32), "level": np.zeros(0, np.int32),
+                        "stype": np.zeros(0, np.int32), "tree": np.zeros(0, np.int32),
+                        "owner": np.zeros(0, np.int32)})
+            continue
+        uniq = sorted(set(cand))
+        trees = np.array([c[0] for c in uniq], np.int32)
+        keys = np.array([c[1] for c in uniq], np.uint64)
+        levels = np.array([c[2] for c in uniq], np.int32)
+        owners = np.array([c[3] for c in uniq], np.int32)
+        ids = u64m.from_int(keys >> (np.uint64(d) * (np.uint64(o.L) - levels.astype(np.uint64))))
+        gs = o.from_linear_id(ids, jnp.asarray(levels))
+        out.append({"anchor": np.asarray(gs.anchor), "level": levels, "stype": np.asarray(gs.stype),
+                    "tree": trees, "owner": owners})
+    return out
+
+
+# ------------------------------------------------------------------ iterate
+def iterate(f: Forest, elem_fn=None, face_fn=None):
+    """Paper's Iterate: run callbacks over local elements and interior local
+    same-tree face pairs (hanging faces delivered as (coarse, fine) pairs)."""
+    o = f.ops
+    results = []
+    if elem_fn is not None:
+        results.append(elem_fn(f.tree, f.simplices()))
+    if face_fn is not None:
+        s = f.simplices()
+        key_index = {}
+        for i in range(f.num_local):
+            key_index[(int(f.tree[i]), int(f.keys[i]), int(f.level[i]))] = i
+        pairs = []
+        for face in range(f.d + 1):
+            nb, dual = o.face_neighbor(s, face)
+            inside = np.asarray(o.is_inside_root(nb))
+            nkey = u64m.to_np(o.morton_key(nb))
+            nlvl = np.asarray(nb.level)
+            for i in np.nonzero(inside)[0]:
+                j = key_index.get((int(f.tree[i]), int(nkey[i]), int(nlvl[i])))
+                if j is not None and i < j:
+                    pairs.append((i, j, face, int(np.asarray(dual)[i])))
+        results.append(face_fn(f, np.array(pairs, np.int64).reshape(-1, 4)))
+    return results
+
+
+# ----------------------------------------------------------------- validate
+def validate(forests: list[Forest]) -> bool:
+    """Forest invariants: per-tree ascending TM order, leaves pairwise
+    non-overlapping (no ancestor relations), all inside root, and complete
+    volume coverage per tree."""
+    d = forests[0].d
+    o = get_ops(d)
+    all_tree = np.concatenate([f.tree for f in forests])
+    all_keys = np.concatenate([f.keys for f in forests])
+    all_level = np.concatenate([f.level for f in forests])
+    order = np.lexsort((all_keys, all_tree))
+    t, k, l = all_tree[order], all_keys[order], all_level[order]
+    same = t[1:] == t[:-1]
+    if not np.all(k[1:][same] > k[:-1][same]):
+        return False
+    # non-overlap: successor key must be >= current key + span
+    span = np.uint64(1) << (np.uint64(d) * (np.uint64(o.L) - l.astype(np.uint64)))
+    if not np.all(k[1:][same] >= (k[:-1] + span[:-1])[same]):
+        return False
+    # inside root
+    for f in forests:
+        if f.num_local and not np.asarray(o.is_inside_root(f.simplices())).all():
+            return False
+    # coverage: sum of 2^{-d*level} == num_trees
+    vol = (1.0 / (1 << d) ** all_level.astype(np.float64)).sum()
+    K = forests[0].num_trees
+    return bool(abs(vol - K) < 1e-9 * max(K, 1))
+
+
+def count_global(forests: list[Forest]) -> int:
+    return int(sum(f.num_local for f in forests))

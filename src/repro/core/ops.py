@@ -1,0 +1,292 @@
+"""Vectorized, jit-compatible element algorithms on the tetrahedral SFC.
+
+Implements the paper's Section 4 algorithms over *batches* of simplices:
+
+  coordinates        Algorithm 4.1  (corner nodes from the Tet-id)
+  cube_id            Algorithm 4.2
+  parent             Algorithm 4.3
+  child_bey          Algorithm 4.4  (Bey order)
+  child_tm           Algorithm 4.5  (TM order)
+  face_neighbor      Algorithm 4.6
+  linear_id          Algorithm 4.7  (consecutive index, emulated uint64)
+  from_linear_id     Algorithm 4.8
+  successor / predecessor            (batch form of Algorithm 4.10)
+  is_ancestor        Proposition 23 (constant-time outside/descendant test)
+  morton_key         level-padded linear id for mixed-level SFC comparisons
+
+Hardware adaptation (see DESIGN.md): the paper's per-element sequential
+O(1)/O(L) routines become branch-free table-gather pipelines over int32
+lanes.  Level loops are unrolled to MAXLEVEL (21 in 3D) so every shift is
+static; the 64-bit consecutive index is carried as uint32 pairs (`u64.py`).
+Lookup tables are tiny (<= 8x6) constants that live in VMEM/SMEM on TPU.
+"""
+
+from __future__ import annotations
+
+from functools import cached_property, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import u64 as u64m
+from .tables import MAXLEVEL, get_tables
+from .types import Simplex
+
+__all__ = ["SimplexOps", "ops2d", "ops3d", "get_ops"]
+
+
+class SimplexOps:
+    """Element algorithms bound to a dimension d (2 or 3). Stateless & jit-safe."""
+
+    def __init__(self, d: int):
+        self.d = d
+        self.t = get_tables(d)
+        self.L = MAXLEVEL[d]
+        self.nt = self.t.num_types          # d!
+        self.nc = self.t.num_children       # 2^d
+        # jnp constants (int32 for gather friendliness)
+        self.REF_VERTS = jnp.asarray(self.t.ref_verts, jnp.int32)
+        self.CHILD_TYPE = jnp.asarray(self.t.child_type, jnp.int32)
+        self.CHILD_ANCHOR = jnp.asarray(self.t.child_anchor, jnp.int32)
+        self.CHILD_CUBE_ID = jnp.asarray(self.t.child_cube_id, jnp.int32)
+        self.PARENT_TYPE = jnp.asarray(self.t.parent_type, jnp.int32)
+        self.BEY_TO_LOCAL = jnp.asarray(self.t.bey_to_local, jnp.int32)
+        self.LOCAL_TO_BEY = jnp.asarray(self.t.local_to_bey, jnp.int32)
+        self.LOCAL_INDEX = jnp.asarray(self.t.local_index, jnp.int32)
+        self.CID_OF_LOCAL = jnp.asarray(self.t.cube_id_of_local, jnp.int32)
+        self.TYPE_OF_LOCAL = jnp.asarray(self.t.type_of_local, jnp.int32)
+        self.NEIGH_TYPE = jnp.asarray(self.t.neighbor_type, jnp.int32)
+        self.NEIGH_OFFSET = jnp.asarray(self.t.neighbor_offset, jnp.int32)
+        self.NEIGH_FACE = jnp.asarray(self.t.neighbor_face, jnp.int32)
+        self.PERM = jnp.asarray(self.t.outside_perm, jnp.int32)
+        self.OUT_IK = jnp.asarray(self.t.outside_types_ik, jnp.int32)
+        self.OUT_KJ = jnp.asarray(self.t.outside_types_kj, jnp.int32)
+        self.OUT_DIAG = jnp.asarray(self.t.outside_types_diag, jnp.int32)
+
+    # ------------------------------------------------------------------ utils
+    def h(self, level):
+        """Cube side length at `level`."""
+        return jnp.int32(1) << (jnp.int32(self.L) - jnp.asarray(level, jnp.int32))
+
+    def cube_id(self, s: Simplex, level=None):
+        """Algorithm 4.2: cube-id of the level-`level` ancestor's cube."""
+        level = s.level if level is None else level
+        bits = (s.anchor >> (self.L - jnp.asarray(level, jnp.int32))[..., None]) & 1
+        weights = jnp.asarray([1 << k for k in range(self.d)], jnp.int32)
+        return jnp.sum(bits * weights, axis=-1)
+
+    def coordinates(self, s: Simplex):
+        """Algorithm 4.1: (..., d+1, d) corner nodes."""
+        h = self.h(s.level)
+        return s.anchor[..., None, :] + h[..., None, None] * self.REF_VERTS[s.stype]
+
+    # ------------------------------------------------------------- hierarchy
+    def parent(self, s: Simplex) -> Simplex:
+        """Algorithm 4.3."""
+        h = self.h(s.level)
+        cid = self.cube_id(s)
+        anchor = s.anchor & ~h[..., None]
+        return Simplex(anchor, s.level - 1, self.PARENT_TYPE[cid, s.stype])
+
+    def child_bey(self, s: Simplex, i) -> Simplex:
+        """Algorithm 4.4: the i-th child in Bey's order (eq. 2)."""
+        i = jnp.asarray(i, jnp.int32)
+        h2 = self.h(s.level) >> 1
+        anchor = s.anchor + h2[..., None] * self.CHILD_ANCHOR[s.stype, i]
+        return Simplex(anchor, s.level + 1, self.CHILD_TYPE[s.stype, i])
+
+    def child_tm(self, s: Simplex, iloc) -> Simplex:
+        """Algorithm 4.5: the iloc-th child in TM (SFC) order."""
+        iloc = jnp.asarray(iloc, jnp.int32)
+        h2 = self.h(s.level) >> 1
+        cid = self.CID_OF_LOCAL[s.stype, iloc]
+        bits = jnp.stack([(cid >> k) & 1 for k in range(self.d)], axis=-1)
+        anchor = s.anchor + h2[..., None] * bits
+        return Simplex(anchor, s.level + 1, self.TYPE_OF_LOCAL[s.stype, iloc])
+
+    def children_tm(self, s: Simplex) -> Simplex:
+        """All 2^d children in TM order: batch shape (..., 2^d)."""
+        kids = [self.child_tm(s, i) for i in range(self.nc)]
+        return Simplex(
+            jnp.stack([k.anchor for k in kids], axis=-2),
+            jnp.stack([k.level for k in kids], axis=-1),
+            jnp.stack([k.stype for k in kids], axis=-1),
+        )
+
+    def sibling_tm(self, s: Simplex, iloc) -> Simplex:
+        return self.child_tm(self.parent(s), iloc)
+
+    def local_index(self, s: Simplex):
+        """Paper Table 6: the TM child index of s within its parent."""
+        return self.LOCAL_INDEX[self.cube_id(s), s.stype]
+
+    # ------------------------------------------------------------- neighbors
+    def face_neighbor(self, s: Simplex, f):
+        """Algorithm 4.6: same-level neighbor across face f, plus dual face.
+
+        Returns (neighbor, dual_face).  The neighbor may lie outside the root
+        simplex; check with `is_inside_root`.
+        """
+        f = jnp.asarray(f, jnp.int32)
+        h = self.h(s.level)
+        anchor = s.anchor + h[..., None] * self.NEIGH_OFFSET[s.stype, f]
+        return (
+            Simplex(anchor, s.level, self.NEIGH_TYPE[s.stype, f]),
+            self.NEIGH_FACE[s.stype, f],
+        )
+
+    # ------------------------------------------------- ancestors / containment
+    def ancestor_at_level(self, s: Simplex, level) -> Simplex:
+        """The (unique) ancestor of s at `level` (<= s.level). O(MAXLEVEL) walk."""
+        level = jnp.broadcast_to(jnp.asarray(level, jnp.int32), s.level.shape)
+        b = s.stype
+        out_type = jnp.where(level == s.level, s.stype, 0)
+        # Walk up from MAXLEVEL using the T_0-chain trick: below s.level the
+        # anchor bits are zero => cube-id 0, and Pt(0, b) = b keeps the type.
+        for i in range(self.L, 0, -1):
+            cid = self.cube_id(s, i)
+            b = jnp.where(i > s.level, b, self.PARENT_TYPE[cid, b])
+            out_type = jnp.where(jnp.int32(i - 1) == level, b, out_type)
+        mask = ~((self.h(level)) - 1)
+        anchor = s.anchor & mask[..., None]
+        return Simplex(anchor, level, out_type)
+
+    def is_ancestor(self, t: Simplex, n: Simplex):
+        """Proposition 23 (constant time): True where t is an ancestor of n
+        (incl. t == n).  Shapes must broadcast."""
+        ht = self.h(t.level)
+        rel = n.anchor - t.anchor
+        p = self.PERM[t.stype]  # (..., d)
+        a = jnp.take_along_axis(
+            jnp.broadcast_to(rel, jnp.broadcast_shapes(rel.shape, p.shape)),
+            jnp.broadcast_to(p, jnp.broadcast_shapes(rel.shape, p.shape)),
+            axis=-1,
+        )
+        ai = a[..., 0]
+        aj = a[..., 1]
+        same = (t.level == n.level) & (ai == 0) & (aj == 0)
+        if self.d == 3:
+            ak = a[..., 2]
+            same = same & (ak == 0)
+        same = same & (t.stype == n.stype)
+        deeper = n.level > t.level
+
+        if self.d == 2:
+            inside = (aj >= 0) & (ai < ht) & (aj <= ai)
+            on_diag = aj == ai
+            ok_diag = self.OUT_KJ[t.stype, n.stype] == 0
+            inside = inside & (~on_diag | ok_diag)
+        else:
+            ak = a[..., 2]
+            inside = (aj >= 0) & (ai < ht) & (ak <= ai) & (aj <= ak)
+            eq_ik = ak == ai
+            eq_kj = aj == ak
+            both = eq_ik & eq_kj
+            ok_ik = self.OUT_IK[t.stype, n.stype] == 0
+            ok_kj = self.OUT_KJ[t.stype, n.stype] == 0
+            ok_diag = self.OUT_DIAG[t.stype, n.stype] == 0
+            ok = jnp.where(
+                both, ok_diag, jnp.where(eq_ik, ok_ik, jnp.where(eq_kj, ok_kj, True))
+            )
+            inside = inside & ok
+        return same | (deeper & inside)
+
+    def is_inside_root(self, s: Simplex):
+        """Section 4.4: does s lie inside the root simplex T_d^0?"""
+        anchor = jnp.zeros_like(s.anchor)
+        level = jnp.zeros_like(s.level)
+        stype = jnp.zeros_like(s.stype)
+        return self.is_ancestor(Simplex(anchor, level, stype), s) & (s.level >= 0)
+
+    # ------------------------------------------------------------ linear ids
+    def _type_chain(self, s: Simplex):
+        """cube-ids and types of all ancestors T^i, i = 1..MAXLEVEL (T_0-chain
+        padded below s.level).  Returns two lists of length MAXLEVEL, coarse
+        first."""
+        cids = [None] * (self.L + 1)
+        types = [None] * (self.L + 1)
+        b = s.stype
+        for i in range(self.L, 0, -1):
+            cid = self.cube_id(s, i)
+            cids[i] = cid
+            types[i] = b
+            b = jnp.where(i > s.level, b, self.PARENT_TYPE[cid, b])
+        return cids, types
+
+    def morton_key(self, s: Simplex) -> u64m.U64:
+        """Level-padded consecutive index: I(s) << d*(MAXLEVEL - level).
+
+        Defines the total SFC order across mixed levels (ancestors first when
+        combined with the level as a tiebreaker)."""
+        cids, types = self._type_chain(s)
+        key = u64m.zeros(s.level.shape)
+        for i in range(1, self.L + 1):
+            iloc = self.LOCAL_INDEX[cids[i], types[i]]
+            key = u64m.or_(
+                key, u64m.shl(u64m.from_u32(iloc.astype(jnp.uint32)), self.d * (self.L - i))
+            )
+        return key
+
+    def linear_id(self, s: Simplex) -> u64m.U64:
+        """Algorithm 4.7: consecutive index of s at its own level."""
+        shift = (jnp.asarray(self.L, jnp.int32) - s.level) * self.d
+        return u64m.select_shr(self.morton_key(s), shift, self.d * self.L)
+
+    def from_linear_id(self, index: u64m.U64, level, d_batch_shape=None) -> Simplex:
+        """Algorithm 4.8: build the simplex from a consecutive index + level."""
+        level = jnp.asarray(level, jnp.int32)
+        shape = jnp.broadcast_shapes(index.hi.shape, level.shape)
+        level = jnp.broadcast_to(level, shape)
+        index = u64m.U64(jnp.broadcast_to(index.hi, shape), jnp.broadcast_to(index.lo, shape))
+        key = u64m.select_shl(index, (self.L - level) * self.d, self.d * self.L)
+        anchor = jnp.zeros(shape + (self.d,), jnp.int32)
+        b = jnp.zeros(shape, jnp.int32)
+        for i in range(1, self.L + 1):
+            iloc = u64m.bits(key, self.d * (self.L - i), self.d).astype(jnp.int32)
+            cid = self.CID_OF_LOCAL[b, iloc]
+            bits = jnp.stack([(cid >> k) & 1 for k in range(self.d)], axis=-1)
+            anchor = anchor | (bits << (self.L - i))
+            b = self.TYPE_OF_LOCAL[b, iloc]
+        return Simplex(anchor, level, b)
+
+    def successor(self, s: Simplex) -> Simplex:
+        """Next same-level simplex in SFC order (batch Algorithm 4.10)."""
+        return self.from_linear_id(u64m.inc(self.linear_id(s)), s.level)
+
+    def predecessor(self, s: Simplex) -> Simplex:
+        return self.from_linear_id(u64m.dec(self.linear_id(s)), s.level)
+
+    def num_elements(self, level) -> int:
+        """Elements in a uniform refinement of one tree: 2^(d*level)."""
+        return 1 << (self.d * int(level))
+
+    # ------------------------------------------------------------- SFC order
+    def sfc_less(self, a: Simplex, b: Simplex):
+        """Strict SFC (TM) order across mixed levels: ancestors precede
+        descendants (Theorem 16 (i))."""
+        ka, kb = self.morton_key(a), self.morton_key(b)
+        return u64m.lt(ka, kb) | (u64m.eq(ka, kb) & (a.level < b.level))
+
+    def nearest_common_ancestor(self, a: Simplex, b: Simplex) -> Simplex:
+        """NCA via the embedding Phi (Prop. 17): deepest common prefix of the
+        (cube-id, type) chains."""
+        ca, ta = self._type_chain(a)
+        cb, tb = self._type_chain(b)
+        # deepest level i such that chains agree for all j <= i and i <= both levels
+        agree = jnp.ones(jnp.broadcast_shapes(a.level.shape, b.level.shape), bool)
+        nca_level = jnp.zeros_like(a.level)
+        for i in range(1, self.L + 1):
+            ok = (ca[i] == cb[i]) & (ta[i] == tb[i]) & (i <= a.level) & (i <= b.level)
+            agree = agree & ok
+            nca_level = jnp.where(agree, i, nca_level)
+        return self.ancestor_at_level(Simplex(a.anchor, a.level, a.stype), nca_level)
+
+
+# Singletons
+ops2d = SimplexOps(2)
+ops3d = SimplexOps(3)
+
+
+def get_ops(d: int) -> SimplexOps:
+    return ops2d if d == 2 else ops3d

@@ -1,0 +1,158 @@
+"""Pure-Python reference oracles for the tetrahedral SFC.
+
+Slow, per-element, arbitrary-precision implementations used ONLY in tests and
+as the ground truth for the vectorized / Pallas implementations.  Everything
+here is computed from the geometric first principles in `tables.py`
+(Bey refinement + Kuhn-type matching), independent of the fused fast paths.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import numpy as np
+
+from .tables import MAXLEVEL, get_tables, _bey_children_vertices, _ref_simplex_vertices, _type_of
+
+# A reference simplex is a tuple (anchor: tuple[int], level: int, type: int).
+
+
+def ref_vertices(d, tet):
+    anchor, level, b = tet
+    h = 1 << (MAXLEVEL[d] - level)
+    return _ref_simplex_vertices(d, b) * h + np.asarray(anchor, np.int64)
+
+
+def ref_children_bey(d, tet):
+    """Children in Bey order, as (anchor, level, type) tuples."""
+    anchor, level, b = tet
+    h2 = 1 << (MAXLEVEL[d] - level - 1)
+    verts = ref_vertices(d, tet)
+    out = []
+    for cv in _bey_children_vertices(d, verts):
+        a = cv.min(axis=0)
+        ct = _type_of(d, cv, h2, a)
+        out.append((tuple(int(v) for v in a), level + 1, ct))
+    return out
+
+
+def ref_parent(d, tet):
+    """Parent by search: the unique level-1-coarser simplex with tet among its
+    children."""
+    anchor, level, b = tet
+    assert level > 0
+    h = 1 << (MAXLEVEL[d] - level)
+    pa = tuple(int(a) & ~h for a in anchor)
+    t = get_tables(d)
+    for pb in range(t.num_types):
+        cand = (pa, level - 1, pb)
+        if tet in ref_children_bey(d, cand):
+            return cand
+    raise AssertionError(f"no parent found for {tet}")
+
+
+def ref_ancestor_chain(d, tet):
+    """[(anchor, level, type)] from the element itself up to the root."""
+    chain = [tet]
+    while chain[-1][1] > 0:
+        chain.append(ref_parent(d, chain[-1]))
+    return chain[::-1]
+
+
+def ref_tm_index(d, tet) -> int:
+    """TM-index (Definition 13) as an exact Python int with (d+1) bits per
+    level (the 2^d-ary digit pairs of eq. (15))."""
+    chain = ref_ancestor_chain(d, tet)
+    L = MAXLEVEL[d]
+    m = 0
+    digit_bits = d + 3 if d == 3 else d + 2  # (zyx) + 3 type bits (3D) / (yx)+2 (2D)
+    # Use (15): per level i (1-based), digits (cube-id, type), base 2^d each
+    # for the spatial part; the type occupies its own base-2^d digit.
+    for i in range(1, L + 1):
+        if i < len(chain):
+            anchor = np.asarray(chain[i][0])
+            cid = 0
+            for k in range(d):
+                cid |= ((int(anchor[k]) >> (L - i)) & 1) << k
+            b = chain[i][2]
+        else:
+            cid, b = 0, 0
+        m = (m << d) | cid
+        m = (m << d) | b  # type digit in base 2^d (valid since d! < 2^d)
+    return m
+
+
+def ref_linear_id(d, tet) -> int:
+    """Consecutive index via eq. (55), using local indices along the chain."""
+    t = get_tables(d)
+    chain = ref_ancestor_chain(d, tet)
+    L = MAXLEVEL[d]
+    I = 0
+    for i in range(1, len(chain)):
+        anchor = np.asarray(chain[i][0])
+        cid = 0
+        for k in range(d):
+            cid |= ((int(anchor[k]) >> (L - i)) & 1) << k
+        iloc = int(t.local_index[cid, chain[i][2]])
+        I = (I << d) | iloc
+    return I
+
+
+@lru_cache(maxsize=None)
+def ref_uniform_level(d, level):
+    """All descendants of the root at `level`, sorted by TM-index.
+
+    Exponential — keep level <= 3 (3D) / 5 (2D)."""
+    tets = [((0,) * d, 0, 0)]
+    for _ in range(level):
+        tets = [c for t in tets for c in ref_children_bey(d, t)]
+    return sorted(tets, key=lambda tt: ref_tm_index(d, tt))
+
+
+def ref_is_descendant(d, tet, anc) -> bool:
+    """Exact (slow) descendant test by walking tet up to anc's level."""
+    cur = tet
+    if cur[1] < anc[1]:
+        return False
+    while cur[1] > anc[1]:
+        cur = ref_parent(d, cur)
+    return cur == anc
+
+
+def ref_face_neighbor(d, tet, f):
+    """Same-level face neighbor by brute-force vertex matching (may lie
+    outside the root).  Returns (neighbor, dual_face)."""
+    t = get_tables(d)
+    anchor, level, b = tet
+    h = 1 << (MAXLEVEL[d] - level)
+    nb = int(t.neighbor_type[b, f])
+    na = tuple(int(a) + h * int(o) for a, o in zip(anchor, t.neighbor_offset[b, f]))
+    return (na, level, nb), int(t.neighbor_face[b, f])
+
+
+def ref_successor(d, tet):
+    """Algorithm 4.10 (recursion form), exact."""
+    t = get_tables(d)
+    L = MAXLEVEL[d]
+
+    def rec(cur, lvl):
+        anchor, level, b = cur
+        cid = 0
+        for k in range(d):
+            cid |= ((int(anchor[k]) >> (L - lvl)) & 1) << k
+        iloc = int(t.local_index[cid, b])
+        nxt = (iloc + 1) % (2 ** d)
+        parent = ref_parent(d, cur)
+        parent2 = rec(parent, lvl - 1) if nxt == 0 else parent
+        # child `nxt` (TM order) of parent2
+        pb = parent2[2]
+        cid2 = int(t.cube_id_of_local[pb, nxt])
+        tb2 = int(t.type_of_local[pb, nxt])
+        h2 = 1 << (L - lvl)
+        na = tuple(
+            int(parent2[0][k]) + h2 * ((cid2 >> k) & 1) for k in range(d)
+        )
+        return (na, lvl, tb2)
+
+    return rec(tet, tet[1])

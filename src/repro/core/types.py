@@ -1,0 +1,87 @@
+"""Core data types for the tetrahedral-Morton SFC library.
+
+A `Simplex` is the paper's `Tet` data type (Remark 20): anchor coordinates,
+refinement level, and type.  We use a structure-of-arrays layout so that a
+batch of N elements is three int32 arrays — the JAX/TPU-native equivalent of
+the paper's 14-bytes-per-Tet encoding (coords int32 x d, level+type one byte
+each; we keep level/type as int32 lanes for gather friendliness and pack them
+to int8 at rest, see `pack`/`unpack`).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Simplex(NamedTuple):
+    """A batch of d-simplices (triangles or tetrahedra).
+
+    anchor: (..., d) int32 — anchor node coordinates in [0, 2^MAXLEVEL).
+    level:  (...,)  int32 — refinement level, 0 <= level <= MAXLEVEL.
+    stype:  (...,)  int32 — type in [0, d!), cf. paper Definition 5.
+    """
+
+    anchor: jax.Array
+    level: jax.Array
+    stype: jax.Array
+
+    @property
+    def d(self) -> int:
+        return self.anchor.shape[-1]
+
+    @property
+    def shape(self):
+        return self.level.shape
+
+
+def simplex(anchor, level, stype) -> Simplex:
+    anchor = jnp.asarray(anchor, jnp.int32)
+    level = jnp.broadcast_to(jnp.asarray(level, jnp.int32), anchor.shape[:-1])
+    stype = jnp.broadcast_to(jnp.asarray(stype, jnp.int32), anchor.shape[:-1])
+    return Simplex(anchor, level, stype)
+
+
+def root(d: int) -> Simplex:
+    """The root simplex T_d^0 (type 0, level 0, anchor at the origin)."""
+    return Simplex(jnp.zeros((d,), jnp.int32), jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+
+
+def concat(simplices, axis=0) -> Simplex:
+    return Simplex(
+        jnp.concatenate([s.anchor for s in simplices], axis=axis),
+        jnp.concatenate([s.level for s in simplices], axis=axis),
+        jnp.concatenate([s.stype for s in simplices], axis=axis),
+    )
+
+
+def take(s: Simplex, idx) -> Simplex:
+    return Simplex(s.anchor[idx], s.level[idx], s.stype[idx])
+
+
+def pack(s: Simplex) -> dict:
+    """At-rest encoding, 10 bytes per triangle / 14 bytes per tetrahedron
+    (paper Remark 20): int32 coords + int8 level + int8 type."""
+    return {
+        "anchor": np.asarray(s.anchor, np.int32),
+        "level": np.asarray(s.level, np.int8),
+        "stype": np.asarray(s.stype, np.int8),
+    }
+
+
+def unpack(blob: dict) -> Simplex:
+    return Simplex(
+        jnp.asarray(blob["anchor"], jnp.int32),
+        jnp.asarray(blob["level"], jnp.int32),
+        jnp.asarray(blob["stype"], jnp.int32),
+    )
+
+
+def nbytes_at_rest(s: Simplex) -> int:
+    """Storage per paper Remark 20: 4*d + 2 bytes per element."""
+    d = s.anchor.shape[-1]
+    n = int(np.prod(s.level.shape)) if s.level.shape else 1
+    return n * (4 * d + 2)

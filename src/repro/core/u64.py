@@ -1,0 +1,158 @@
+"""Emulated 64-bit unsigned integers as pairs of uint32 words.
+
+TPU vector units (and Pallas TPU kernels) do not support 64-bit integers, so
+the consecutive SFC index — up to d * MAXLEVEL = 63 bits (3D, level 21) resp.
+60 bits (2D, level 30) — is carried as (hi, lo) uint32 pairs.  This is the
+central hardware adaptation of the paper's uint64 `linear id`: every
+arithmetic operation below lowers to plain 32-bit ALU ops that vectorise on
+the VPU (8x128 lanes).
+
+All shift amounts are static Python ints (the level loops in `ops.py` are
+unrolled), which keeps the lowering branch-free.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_U32 = jnp.uint32
+_MASK = np.uint32(0xFFFFFFFF)
+
+
+class U64(NamedTuple):
+    hi: jax.Array  # uint32
+    lo: jax.Array  # uint32
+
+
+def zeros(shape=()) -> U64:
+    z = jnp.zeros(shape, _U32)
+    return U64(z, z)
+
+
+def from_int(value, shape=()) -> U64:
+    """Build from a Python int (or array of ints) — host-side convenience."""
+    v = np.asarray(value, np.uint64)
+    hi = jnp.broadcast_to(jnp.asarray((v >> np.uint64(32)).astype(np.uint32)), shape or v.shape)
+    lo = jnp.broadcast_to(jnp.asarray((v & np.uint64(_MASK)).astype(np.uint32)), shape or v.shape)
+    return U64(hi, lo)
+
+
+def from_u32(x) -> U64:
+    x = jnp.asarray(x, _U32)
+    return U64(jnp.zeros_like(x), x)
+
+
+def to_np(a: U64) -> np.ndarray:
+    """To numpy uint64 (host-side)."""
+    return (np.asarray(a.hi, np.uint64) << np.uint64(32)) | np.asarray(a.lo, np.uint64)
+
+
+def add(a: U64, b: U64) -> U64:
+    lo = a.lo + b.lo
+    carry = (lo < a.lo).astype(_U32)
+    return U64(a.hi + b.hi + carry, lo)
+
+
+def add_u32(a: U64, k) -> U64:
+    k = jnp.asarray(k, _U32)
+    lo = a.lo + k
+    carry = (lo < a.lo).astype(_U32)
+    return U64(a.hi + carry, lo)
+
+
+def sub(a: U64, b: U64) -> U64:
+    lo = a.lo - b.lo
+    borrow = (a.lo < b.lo).astype(_U32)
+    return U64(a.hi - b.hi - borrow, lo)
+
+
+def sub_u32(a: U64, k) -> U64:
+    k = jnp.asarray(k, _U32)
+    lo = a.lo - k
+    borrow = (a.lo < k).astype(_U32)
+    return U64(a.hi - borrow, lo)
+
+
+def inc(a: U64) -> U64:
+    return add_u32(a, 1)
+
+
+def dec(a: U64) -> U64:
+    return sub_u32(a, 1)
+
+
+def shl(a: U64, k: int) -> U64:
+    """Static left shift by k in [0, 64)."""
+    assert 0 <= k < 64
+    if k == 0:
+        return a
+    if k < 32:
+        return U64((a.hi << k) | (a.lo >> (32 - k)), a.lo << k)
+    return U64(a.lo << (k - 32), jnp.zeros_like(a.lo))
+
+
+def shr(a: U64, k: int) -> U64:
+    """Static (logical) right shift by k in [0, 64)."""
+    assert 0 <= k < 64
+    if k == 0:
+        return a
+    if k < 32:
+        return U64(a.hi >> k, (a.lo >> k) | (a.hi << (32 - k)))
+    return U64(jnp.zeros_like(a.hi), a.hi >> (k - 32))
+
+
+def or_(a: U64, b: U64) -> U64:
+    return U64(a.hi | b.hi, a.lo | b.lo)
+
+
+def and_mask(a: U64, mask: int) -> U64:
+    m_hi = np.uint32(mask >> 32)
+    m_lo = np.uint32(mask & int(_MASK))
+    return U64(a.hi & m_hi, a.lo & m_lo)
+
+
+def bits(a: U64, pos: int, width: int):
+    """Extract `width` (<32) bits at static position `pos` as uint32."""
+    assert width < 32
+    sh = shr(a, pos)
+    return sh.lo & np.uint32((1 << width) - 1)
+
+
+def eq(a: U64, b: U64):
+    return (a.hi == b.hi) & (a.lo == b.lo)
+
+
+def lt(a: U64, b: U64):
+    return (a.hi < b.hi) | ((a.hi == b.hi) & (a.lo < b.lo))
+
+
+def le(a: U64, b: U64):
+    return (a.hi < b.hi) | ((a.hi == b.hi) & (a.lo <= b.lo))
+
+
+def where(pred, a: U64, b: U64) -> U64:
+    return U64(jnp.where(pred, a.hi, b.hi), jnp.where(pred, a.lo, b.lo))
+
+
+def select_shl(a: U64, k, max_k: int) -> U64:
+    """Dynamic left shift: k is a traced int32 in [0, max_k]. O(log) selects."""
+    out = a
+    bit = 1
+    while bit <= max_k:
+        out = where((jnp.asarray(k) & bit) != 0, shl(out, bit), out)
+        bit <<= 1
+    return out
+
+
+def select_shr(a: U64, k, max_k: int) -> U64:
+    """Dynamic right shift: k is a traced int32 in [0, max_k]."""
+    out = a
+    bit = 1
+    while bit <= max_k:
+        out = where((jnp.asarray(k) & bit) != 0, shr(out, bit), out)
+        bit <<= 1
+    return out

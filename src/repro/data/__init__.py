@@ -1,0 +1,4 @@
+from .pipeline import DataPipeline, synthetic_batch
+from .packing import pack_documents
+
+__all__ = ["DataPipeline", "synthetic_batch", "pack_documents"]

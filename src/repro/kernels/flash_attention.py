@@ -1,0 +1,92 @@
+"""Pallas TPU flash attention: fused causal attention with online softmax.
+
+This is the kernel the roofline's "fused attention" variant models
+(EXPERIMENTS.md §Perf iteration 5): scores/probabilities never leave VMEM —
+HBM traffic is exactly q/k/v in + o out.
+
+Layout/grid:
+  grid = (B, H, S // block_q); each program owns one q block of one head.
+  q block  : (block_q, hd) VMEM tile
+  k/v      : the full (S, hd) stripe of the matching KV head in VMEM —
+             fine for S*hd*4 bytes <= a few MB (S <= 8k at hd 128); longer
+             sequences add a k-block grid dimension with VMEM accumulators.
+  online softmax state (m, l, acc) lives in registers/VMEM.
+
+GQA: the BlockSpec index map sends query head h to KV head h // (H // KV),
+so grouped heads share the same k/v stripe without materialised repeats.
+
+Validated against `repro.kernels.ref.flash_attention_ref` in interpret mode
+(CPU) across shapes/dtypes; `repro.models.layers` uses the same math in its
+pure-XLA blocked implementation (exactness cross-checked in tests).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_body(s_len: int, block_q: int, block_k: int, causal: bool,
+                window, scale: float, *refs):
+    q_ref, k_ref, v_ref, o_ref = refs
+    i = pl.program_id(2)
+    q = q_ref[0, :, 0, :].astype(jnp.float32)          # (bq, hd)
+    bq, hd = q.shape
+    nkb = s_len // block_k
+
+    m = jnp.full((bq,), NEG_INF, jnp.float32)
+    l = jnp.zeros((bq,), jnp.float32)
+    acc = jnp.zeros((bq, hd), jnp.float32)
+    qpos = i * block_q + jax.lax.iota(jnp.int32, bq)
+
+    for j in range(nkb):                                # static unroll
+        k = k_ref[0, j * block_k:(j + 1) * block_k, 0, :].astype(jnp.float32)
+        v = v_ref[0, j * block_k:(j + 1) * block_k, 0, :].astype(jnp.float32)
+        s = q @ k.T * scale                             # (bq, bk) on the MXU
+        kpos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = jnp.ones((bq, block_k), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=1)
+        acc = acc * corr[:, None] + p @ v
+        m = m_new
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """q (B,S,H,hd); k,v (B,S,KV,hd), H % KV == 0. Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    assert S % block_q == 0 and S % block_k == 0
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    scale = 1.0 / math.sqrt(hd)
+    grid = (B, H, S // block_q)
+    return pl.pallas_call(
+        functools.partial(_flash_body, S, block_q, block_k, causal, window, scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((1, S, 1, hd), lambda b, h, i: (b, 0, h // G, 0)),
+            pl.BlockSpec((1, S, 1, hd), lambda b, h, i: (b, 0, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd), lambda b, h, i: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,71 @@
+"""Jit-ready wrappers around the Pallas SFC kernels: padding, Simplex I/O,
+and CPU/TPU dispatch (interpret mode on CPU)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import u64 as u64m
+from repro.core.types import Simplex
+from . import sfc
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad(n: int, block: int) -> int:
+    return (n + block - 1) // block * block
+
+
+def _fields(s: Simplex):
+    d = s.anchor.shape[-1]
+    return [s.anchor[..., k] for k in range(d)]
+
+
+def _padded(arrays, n_pad):
+    return [jnp.pad(a, (0, n_pad - a.shape[0])) for a in arrays]
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def morton_key(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK) -> u64m.U64:
+    """Batch morton keys via the Pallas encode kernel."""
+    n = s.level.shape[0]
+    np_ = _pad(n, block)
+    arrays = _padded(_fields(s) + [s.stype], np_)
+    hi, lo = sfc.morton_key_kernel(d, *arrays, block=block, interpret=_interpret())
+    return u64m.U64(hi[:n], lo[:n])
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def decode(d: int, key: u64m.U64, level, block: int = sfc.DEFAULT_BLOCK) -> Simplex:
+    n = key.hi.shape[0]
+    np_ = _pad(n, block)
+    hi, lo, lvl = _padded([key.hi, key.lo, jnp.asarray(level, jnp.int32)], np_)
+    outs = sfc.decode_kernel(d, hi, lo, lvl, block=block, interpret=_interpret())
+    anchor = jnp.stack([o[:n] for o in outs[:d]], axis=-1)
+    return Simplex(anchor, jnp.asarray(level, jnp.int32), outs[d][:n])
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def face_neighbor(d: int, s: Simplex, face, block: int = sfc.DEFAULT_BLOCK):
+    n = s.level.shape[0]
+    np_ = _pad(n, block)
+    face = jnp.broadcast_to(jnp.asarray(face, jnp.int32), (n,))
+    arrays = _padded(_fields(s) + [s.level, s.stype, face], np_)
+    outs = sfc.face_neighbor_kernel(d, *arrays, block=block, interpret=_interpret())
+    anchor = jnp.stack([o[:n] for o in outs[:d]], axis=-1)
+    return Simplex(anchor, s.level, outs[d][:n]), outs[d + 1][:n]
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def successor(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK) -> Simplex:
+    n = s.level.shape[0]
+    np_ = _pad(n, block)
+    arrays = _padded(_fields(s) + [s.level, s.stype], np_)
+    outs = sfc.successor_kernel(d, *arrays, block=block, interpret=_interpret())
+    anchor = jnp.stack([o[:n] for o in outs[:d]], axis=-1)
+    return Simplex(anchor, s.level, outs[d][:n])

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas SFC kernels (delegate to repro.core.ops)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import u64 as u64m
+from repro.core.ops import get_ops
+from repro.core.types import Simplex
+
+
+def _simplex(d, *arrays):
+    if d == 3:
+        x, y, z, level, stype = arrays
+        anchor = jnp.stack([x, y, z], axis=-1)
+    else:
+        x, y, level, stype = arrays
+        anchor = jnp.stack([x, y], axis=-1)
+    return Simplex(anchor, level, stype)
+
+
+def morton_key_ref(d, *arrays):
+    """x, y, (z,), type -> (hi, lo).  Level plays no role in the padded key
+    (trailing digits of the T_0-chain are zero), so we evaluate at MAXLEVEL."""
+    o = get_ops(d)
+    coords, stype = arrays[:-1], arrays[-1]
+    level = jnp.full(stype.shape, o.L, jnp.int32)
+    key = o.morton_key(_simplex(d, *coords, level, stype))
+    return key.hi, key.lo
+
+
+def decode_ref(d, hi, lo, level):
+    o = get_ops(d)
+    lid = u64m.select_shr(u64m.U64(hi, lo), (o.L - level) * d, d * o.L)
+    s = o.from_linear_id(lid, level)
+    outs = [s.anchor[..., k] for k in range(d)]
+    return (*outs, s.stype)
+
+
+def face_neighbor_ref(d, *arrays):
+    *fields, face = arrays
+    o = get_ops(d)
+    s = _simplex(d, *fields)
+    nb, dual = o.face_neighbor(s, face)
+    outs = [nb.anchor[..., k] for k in range(d)]
+    return (*outs, nb.stype, dual)
+
+
+def successor_ref(d, *arrays):
+    o = get_ops(d)
+    s = _simplex(d, *arrays)
+    nxt = o.successor(s)
+    outs = [nxt.anchor[..., k] for k in range(d)]
+    return (*outs, nxt.stype)

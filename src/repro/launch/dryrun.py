@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init).  Do not move them.
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape) cell on
+the production meshes and extract memory / cost / collective statistics.
+
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all            # driver: all cells, both meshes
+  python -m repro.launch.dryrun --list
+
+Each cell writes results/dryrun/<arch>__<shape>__<mesh>.json.  A compile
+failure here (sharding mismatch, OOM at compile, unsupported collective) is
+a bug in the system, not in the cell.
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import numpy as np
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _cell_path(arch, shape, mesh_kind):
+    return RESULTS / f"{arch}__{shape}__{mesh_kind}.json"
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import cell_supported, get_config, get_shape, input_specs
+    from repro.launch import hlo_cost
+    from repro.launch import sharding as sh
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import model_flops, roofline_terms
+    from repro.launch.serve import abstract_cache, make_decode_step, make_prefill_step
+    from repro.launch.train import (abstract_train_state, default_num_micro,
+                                    make_train_step)
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    out = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        out.update(status="skip", why=why)
+        return out
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    pod = mesh.shape.get("pod", 1)
+
+    specs = input_specs(cfg, shape)
+    batch_ps = sh.batch_pspecs(mesh, specs)
+    params_s, opt_s = abstract_train_state(cfg)
+    params_ps = sh.params_pspecs(cfg, mesh, params_s)
+
+    # sequence-parallel residuals for pure-FSDP profiles (train/prefill only)
+    from repro.models import lm as lm_mod
+    from repro.models import moe_a2a
+    from repro.launch.mesh import batch_spec_axes
+    tp_size = mesh.shape.get("model", 1)
+    a2a_moe = (cfg.moe is not None and shape.mode in ("train", "prefill")
+               and cfg.moe.num_experts % tp_size == 0)
+    if ((cfg.parallelism == "fsdp_sp" or a2a_moe)
+            and shape.mode in ("train", "prefill")):
+        # sequence-parallel residuals: also for a2a-MoE configs, so the
+        # shard_map boundary needs no per-layer activation reshard
+        bax = batch_spec_axes(mesh, shape.global_batch)
+        lm_mod.set_activation_spec(P(bax if bax else None, "model", None))
+    else:
+        lm_mod.set_activation_spec(None)
+    # shard_map all-to-all MoE dispatch (EXPERIMENTS.md Perf iteration 6)
+    if a2a_moe:
+        moe_a2a.set_moe_impl(mesh=mesh,
+                             dp_axes=batch_spec_axes(mesh, shape.global_batch),
+                             model_axis="model")
+    else:
+        moe_a2a.set_moe_impl(mesh=None)
+
+    t0 = time.time()
+    if shape.mode == "train":
+        num_micro = default_num_micro(cfg, shape, mesh)
+        out["num_micro"] = num_micro
+        opt_ps = sh.opt_state_pspecs(cfg, mesh, params_ps, params_s, cfg.optimizer)
+        micro_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(None, *tuple(s))),
+            batch_ps, is_leaf=lambda x: isinstance(x, P),
+        ) if num_micro > 1 else None
+        step_fn = make_train_step(cfg, num_micro=num_micro,
+                                  micro_shardings=micro_sh,
+                                  grad_shardings=sh.to_named(mesh, params_ps))
+        jf = jax.jit(
+            step_fn,
+            in_shardings=(sh.to_named(mesh, params_ps), sh.to_named(mesh, opt_ps),
+                          sh.to_named(mesh, batch_ps), NamedSharding(mesh, P())),
+            out_shardings=(sh.to_named(mesh, params_ps), sh.to_named(mesh, opt_ps),
+                           None),
+            donate_argnums=(0, 1),
+        )
+        with jax.set_mesh(mesh):
+            lowered = jf.lower(params_s, opt_s,
+                               specs, jax.ShapeDtypeStruct((), jnp.int32))
+    elif shape.mode == "prefill":
+        cache_s = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        cache_ps = sh.cache_pspecs(cfg, mesh, cache_s)
+        fn = make_prefill_step(cfg)
+        jf = jax.jit(
+            fn,
+            in_shardings=(sh.to_named(mesh, params_ps), sh.to_named(mesh, batch_ps),
+                          sh.to_named(mesh, cache_ps)),
+            out_shardings=(None, sh.to_named(mesh, cache_ps)),
+            donate_argnums=(2,),
+        )
+        with jax.set_mesh(mesh):
+            lowered = jf.lower(params_s, specs, cache_s)
+    else:  # decode
+        cache_s = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        cache_ps = sh.cache_pspecs(cfg, mesh, cache_s)
+        fn = make_decode_step(cfg)
+        jf = jax.jit(
+            fn,
+            in_shardings=(sh.to_named(mesh, params_ps), sh.to_named(mesh, cache_ps),
+                          sh.to_named(mesh, batch_ps["tokens"]),
+                          NamedSharding(mesh, P())),
+            out_shardings=(None, sh.to_named(mesh, cache_ps)),
+            donate_argnums=(1,),
+        )
+        with jax.set_mesh(mesh):
+            lowered = jf.lower(params_s, cache_s, specs["tokens"],
+                               jax.ShapeDtypeStruct((), jnp.int32))
+    out["lower_s"] = round(time.time() - t0, 2)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    out["compile_s"] = round(time.time() - t0, 2)
+
+    # ---- memory analysis (proves it fits) ----
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(ma, "generated_code_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+        }
+        mem["peak_bytes_per_device"] = (
+            mem["argument_bytes"] + mem["output_bytes"] + mem["temp_bytes"]
+            - mem["alias_bytes"]
+        )
+        out["memory"] = mem
+    except Exception as e:  # pragma: no cover
+        out["memory"] = {"error": str(e)}
+
+    # analytic per-device parameter+optimizer bytes from the shardings
+    def _sharded_bytes(struct_tree, spec_tree):
+        total = 0
+        for leaf, spec in zip(jax.tree.leaves(struct_tree),
+                              jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))):
+            div = 1
+            for ax in jax.tree.leaves(tuple(spec)):
+                if ax is not None:
+                    div *= mesh.shape[ax]
+            total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize // max(div, 1)
+        return total
+
+    out["analytic_param_bytes_per_device"] = _sharded_bytes(params_s, params_ps)
+
+    # ---- raw XLA cost analysis (loop bodies counted ONCE — reference only) ----
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    out["xla_cost_raw"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(sum(
+            v for k, v in ca.items() if k.startswith("bytes accessed"))),
+    }
+
+    # ---- loop-aware HLO cost model (flops / bytes / collectives) ----
+    hlo = compiled.as_text()
+    hc = hlo_cost.analyze(hlo, pod_axis_size=pod, num_partitions=n_dev)
+    out["hlo_cost"] = {
+        "flops_per_device": hc["flops"],
+        "bytes_per_device": hc["bytes"],
+        "bytes_per_device_cpu_granularity": hc["bytes_cpu_granularity"],
+        "collective_counts": {k: int(v) for k, v in hc["collective_counts"].items()},
+        "collective_bytes_by_kind": {k: int(v) for k, v in
+                                     hc["collective_bytes_by_kind"].items()},
+        "collective_total_bytes": int(hc["collective_total_bytes"]),
+        "cross_pod_bytes": int(hc["cross_pod_bytes"]),
+    }
+
+    out["hlo_cost"]["bytes_attention_internal"] = hc.get("bytes_attention_internal", 0.0)
+
+    # ---- roofline ----
+    rt = roofline_terms(hc["flops"], hc["bytes"],
+                        hc["collective_total_bytes"], hc["cross_pod_bytes"])
+    # variant: Pallas fused flash-attention kernel (scores stay in VMEM)
+    rt_fused = roofline_terms(hc["flops"],
+                              hc["bytes"] - hc.get("bytes_attention_internal", 0.0),
+                              hc["collective_total_bytes"], hc["cross_pod_bytes"])
+    out["roofline_fused_attention"] = rt_fused
+    mf = model_flops(cfg, shape)
+    out["roofline"] = rt
+    out["model_flops_global"] = mf
+    total_hlo_flops = hc["flops"] * n_dev
+    out["useful_flops_ratio"] = mf / total_hlo_flops if total_hlo_flops else 0.0
+    out["status"] = "ok"
+    return out
+
+
+# ------------------------------------------------------------------ driver
+def drive_all(meshes=("single", "multi"), force=False, timeout=3600,
+              only_arch=None, only_shape=None):
+    from repro.configs import all_cells
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    cells = all_cells()
+    todo = []
+    for arch, shp, ok, why in cells:
+        if only_arch and arch != only_arch:
+            continue
+        if only_shape and shp != only_shape:
+            continue
+        for mk in meshes:
+            path = _cell_path(arch, shp, mk)
+            if path.exists() and not force:
+                continue
+            todo.append((arch, shp, mk))
+    print(f"dryrun driver: {len(todo)} cells to run")
+    for i, (arch, shp, mk) in enumerate(todo):
+        print(f"[{i+1}/{len(todo)}] {arch} x {shp} x {mk} ...", flush=True)
+        t0 = time.time()
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shp, "--mesh", mk],
+            capture_output=True, text=True, timeout=timeout,
+            env=dict(os.environ, PYTHONPATH=str(Path(__file__).resolve().parents[2])),
+        )
+        dt = time.time() - t0
+        path = _cell_path(arch, shp, mk)
+        if r.returncode != 0 and not path.exists():
+            path.write_text(json.dumps({
+                "arch": arch, "shape": shp, "mesh": mk, "status": "error",
+                "why": r.stderr[-4000:], "wall_s": dt,
+            }, indent=2))
+            print(f"    ERROR after {dt:.0f}s (see json)")
+        else:
+            print(f"    done in {dt:.0f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only-arch")
+    ap.add_argument("--only-shape")
+    args = ap.parse_args()
+
+    if args.list:
+        from repro.configs import all_cells
+        for arch, shp, ok, why in all_cells():
+            print(f"{arch:24s} {shp:12s} {'ok' if ok else 'SKIP: ' + why}")
+        return
+    if args.all:
+        drive_all(force=args.force, only_arch=args.only_arch,
+                  only_shape=args.only_shape)
+        return
+    assert args.arch and args.shape
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    try:
+        out = run_cell(args.arch, args.shape, args.mesh)
+    except Exception:
+        out = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "status": "error", "why": traceback.format_exc()[-6000:]}
+    path = _cell_path(args.arch, args.shape, args.mesh)
+    path.write_text(json.dumps(out, indent=2))
+    print(json.dumps({k: v for k, v in out.items() if k != "why"}, indent=2))
+    if out["status"] == "error":
+        print(out["why"][-3000:], file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

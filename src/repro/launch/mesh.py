@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the 'pod' axis is a
+second data-parallel dimension whose collectives cross the inter-pod DCN
+links (gradient all-reduce only; see repro.optim.compression for the int8
+cross-pod reduction).
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    dp = max(1, n // model_parallel)
+    return jax.make_mesh((dp, model_parallel), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_spec_axes(mesh, batch: int):
+    """Largest prefix of the DP axes that evenly divides `batch` (possibly
+    none — e.g. long_500k has global_batch=1)."""
+    axes = []
+    prod = 1
+    for a in dp_axes(mesh):
+        size = mesh.shape[a]
+        if batch % (prod * size) == 0:
+            axes.append(a)
+            prod *= size
+    return tuple(axes)

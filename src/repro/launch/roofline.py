@@ -1,0 +1,136 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device / HBM_bandwidth
+  collective = sum over collective ops of operand bytes / link bandwidth
+               (per device, ICI for intra-pod axes; DCN factor for 'pod')
+
+HLO_FLOPs/bytes come from compiled.cost_analysis() (per-device SPMD module).
+Collective bytes are NOT in cost_analysis: we parse the optimized HLO text
+and sum operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops.  Hardware model: TPU v5e.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+# ----------------------------------------------------------- hardware model
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (v5e: ~50 GB/s/link)
+DCN_POD_BW = 6.25e9             # bytes/s per chip cross-pod (50 Gbps eq.)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+
+def _parse_shape_bytes(sig: str) -> int:
+    """Total bytes of all array shapes in an HLO type signature string
+    like 'bf16[16,4096,7168]' or '(f32[8,128], u32[2])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(sig):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+    bytes_cross_pod: int
+    total_bytes: int
+
+
+def parse_collectives(hlo_text: str, pod_axis_size: int = 1,
+                      num_partitions: int = 256) -> CollectiveStats:
+    """Sum output-shape bytes of every collective op in the optimized HLO.
+
+    Uses the *output* side of each op as the wire-bytes proxy per device
+    (all-gather output = bytes received; all-reduce ~ 2x in ring terms —
+    we report raw operand bytes and keep the ring factor in the time model).
+    Cross-pod detection: replica_groups spanning partitions whose linear
+    index differs in the slowest (pod) dimension.
+    """
+    counts: dict = {}
+    bytes_by_kind: dict = {}
+    cross = 0
+    per_pod = num_partitions // max(pod_axis_size, 1)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)", s)
+        if not m:
+            continue
+        sig, kind = m.group(1), m.group(2)
+        if "-start" in s.split("=", 1)[1].split("(")[0] and "-done" in s:
+            pass
+        b = _parse_shape_bytes(sig)
+        counts[kind] = counts.get(kind, 0) + 1
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0) + b
+        if pod_axis_size > 1:
+            rg = re.search(r"replica_groups=\{(.*?)\}", s)
+            if rg:
+                groups = rg.group(1)
+                first = re.search(r"([\d,]+)", groups)
+                if first:
+                    ids = [int(x) for x in first.group(1).split(",") if x]
+                    if ids and (max(ids) // per_pod) != (min(ids) // per_pod):
+                        cross += b
+            sd = re.search(r"source_target_pairs=\{\{(\d+),(\d+)\}", s)
+            if sd:
+                a, t = int(sd.group(1)), int(sd.group(2))
+                if a // per_pod != t // per_pod:
+                    cross += b
+    total = sum(bytes_by_kind.values())
+    return CollectiveStats(counts, bytes_by_kind, cross, total)
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_total_bytes: float, cross_pod_bytes: float = 0.0) -> dict:
+    """The three roofline terms, in seconds (per device, per step)."""
+    intra = coll_total_bytes - cross_pod_bytes
+    t_compute = flops_per_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_per_dev / HBM_BW
+    t_coll = intra / ICI_BW + cross_pod_bytes / DCN_POD_BW
+    terms = {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "collective_intra_bytes": int(intra),
+        "collective_cross_pod_bytes": int(cross_pod_bytes),
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    terms["bottleneck"] = dom.replace("_s", "")
+    bound = max(t_compute, t_memory, t_coll)
+    terms["roofline_fraction"] = float(t_compute / bound) if bound > 0 else 0.0
+    return terms
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6 N D for training (N = active params, D = tokens);
+    2 N D for inference forward passes."""
+    toks = shape.global_batch * (shape.seq_len if shape.mode != "decode" else 1)
+    n = cfg.active_param_count()
+    mult = 6 if shape.mode == "train" else 2
+    return float(mult) * n * toks

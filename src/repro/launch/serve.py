@@ -1,0 +1,34 @@
+"""Distributed serving steps: prefill and batched decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, forward, init_cache
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.lm import unembed
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """prefill(params, batch, cache) -> (last-token logits, filled cache)."""
+
+    def prefill(params, batch, cache):
+        hidden, _, cache = forward(cfg, params, batch, cache=cache, cache_pos=0)
+        logits = unembed(cfg, params, hidden[:, -1]).astype(jnp.float32)
+        return logits, cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    """decode(params, cache, tokens (B,1), pos) -> (logits, cache)."""
+
+    def step(params, cache, tokens, pos):
+        return decode_step(cfg, params, cache, tokens, pos)
+
+    return step
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, cache_len))

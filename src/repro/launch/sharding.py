@@ -1,0 +1,201 @@
+"""Parameter / optimizer / batch / cache sharding rules.
+
+Path-name-based GSPMD rules: every parameter leaf name maps to a
+PartitionSpec over ('model', fsdp-axis).  Conventions (see models/lm.py):
+
+  TP ('model'):   attention heads (wq/wk/wv in, wo out), FFN hidden
+                  (w_gate/w_up in, w_down out), vocab (tok_embed rows /
+                  out_head cols), experts (leading E dim = expert parallel),
+                  MLA up-projections, RG-LRU width.
+  FSDP ('data'):  the other large dim of each matrix when cfg.fsdp — ZeRO-3
+                  style; GSPMD inserts the all-gathers per layer.
+  Replicated:     norms, scalars, routers, small SSM tensors.
+
+Stacked layer dims (leading axis from lax.scan stacking) get None prepended.
+Divisibility is checked against the mesh; dims that do not divide fall back
+to replication (e.g. mamba2's fused in_proj, kv heads < model size).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from .mesh import batch_spec_axes, dp_axes
+
+# leaf name -> (axes template applied to the LAST ndim dims)
+# 'tp' = model axis, 'fsdp' = data axis (if cfg.fsdp), None = replicate
+_RULES: dict[str, tuple] = {
+    "tok_embed": ("tp", "fsdp"),
+    "out_head": ("fsdp", "tp"),
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp"),
+    "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "w_gate": ("fsdp", "tp"),
+    "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    "router": (None, None),
+    # expert parallel when E divides the model axis; otherwise fall back to
+    # tensor-parallel inside each expert (mixtral: E=8 < model=16)
+    "experts_gate": ("tp", "fsdp", None),
+    "experts_up": ("tp", "fsdp", None),
+    "experts_down": ("tp", None, "fsdp"),
+    "shared_gate": (None, "fsdp", "tp"),
+    "shared_up": (None, "fsdp", "tp"),
+    "shared_down": (None, "tp", "fsdp"),
+    "q_down": ("fsdp", None),
+    "q_up": (None, "tp"),
+    "kv_down": ("fsdp", None),
+    "k_up": (None, "tp"),
+    "v_up": (None, "tp"),
+    "in_proj": ("fsdp", "tp"),
+    "out_proj": ("tp", "fsdp"),
+    "gate_proj": ("fsdp", "tp"),
+    "w_r": (None, "tp"),
+    "w_i": (None, "tp"),
+    "conv_w": (None, "tp"),
+    "mtp_proj": ("fsdp", None),
+}
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if isinstance(p, jax.tree_util.DictKey):
+            return str(p.key)
+    return ""
+
+
+_EXPERT_FALLBACK = {
+    # when num_experts doesn't divide the model axis: TP inside each expert
+    "experts_gate": (None, "fsdp", "tp"),
+    "experts_up": (None, "fsdp", "tp"),
+    "experts_down": (None, "tp", "fsdp"),
+}
+
+
+def param_pspec(cfg: ModelConfig, mesh, path, leaf) -> P:
+    name = _leaf_name(path)
+    shape = leaf.shape
+    tmpl = _RULES.get(name)
+    if tmpl is None or leaf.ndim == 0:
+        return P()
+    if cfg.parallelism == "fsdp_sp":
+        # pure FSDP: shard the first dim that divides over ALL mesh axes
+        all_ax = tuple(mesh.axis_names)
+        total = 1
+        for a in all_ax:
+            total *= mesh.shape[a]
+        ndim = leaf.ndim
+        k = len(tmpl)
+        for i in range(k):
+            dim = ndim - k + i
+            if dim >= 0 and tmpl[i] is not None and shape[dim] % total == 0:
+                axes = [None] * ndim
+                axes[dim] = all_ax
+                return P(*axes)
+        return P()
+    if name in _EXPERT_FALLBACK:
+        # expert dim is dim -3 (after the stacked layer dim)
+        e_dim = shape[leaf.ndim - 3]
+        if e_dim % mesh.shape.get("model", 1) != 0:
+            tmpl = _EXPERT_FALLBACK[name]
+    tp_size = mesh.shape.get("model", 1)
+    # FSDP spans every data-parallel axis present (pod + data on multi-pod:
+    # a 671B model's states only fit when sharded across all 512 chips).
+    fsdp_ax = dp_axes(mesh) if cfg.fsdp else ()
+    fsdp_size = 1
+    for a in fsdp_ax:
+        fsdp_size *= mesh.shape[a]
+    ndim = leaf.ndim
+    k = len(tmpl)
+    axes: list = [None] * ndim
+    for i, a in enumerate(tmpl):
+        dim = ndim - k + i
+        if dim < 0 or a is None:
+            continue
+        if a == "tp" and tp_size > 1 and shape[dim] % tp_size == 0:
+            axes[dim] = "model"
+        elif a == "fsdp" and fsdp_ax and shape[dim] % fsdp_size == 0:
+            axes[dim] = fsdp_ax if len(fsdp_ax) > 1 else fsdp_ax[0]
+    return P(*axes)
+
+
+def params_pspecs(cfg: ModelConfig, mesh, params_shapes) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(cfg, mesh, path, leaf), params_shapes
+    )
+
+
+def opt_state_pspecs(cfg: ModelConfig, mesh, pspecs, params_shapes, optimizer: str):
+    """Mirror init_opt_state: adamw states share the param spec; adafactor
+    keeps factored (row, col) states with the matching sub-specs."""
+    from repro.optim.optimizers import OptState
+
+    if optimizer == "adamw":
+        return OptState(P(), jax.tree.map(lambda s: s, pspecs),
+                        jax.tree.map(lambda s: s, pspecs))
+
+    mu = jax.tree.map(lambda s: P(), pspecs)
+
+    def factored(spec, shp):
+        if len(shp.shape) >= 2:
+            row = P(*spec[:-1]) if len(spec) else P()
+            col = P(*(tuple(spec[:-2]) + (spec[-1],))) if len(spec) >= 2 else P()
+            return (row, col)
+        return (spec, P())
+
+    nu = jax.tree.map(factored, pspecs, params_shapes,
+                      is_leaf=lambda x: isinstance(x, P))
+    return OptState(P(), mu, nu)
+
+
+def batch_pspecs(mesh, batch_shapes) -> Any:
+    """tokens (B, S) -> P(dp_axes, None); frame/patch embeds likewise."""
+
+    def one(leaf):
+        axes = batch_spec_axes(mesh, leaf.shape[0])
+        spec = (axes if axes else None,) + (None,) * (len(leaf.shape) - 1)
+        return P(*spec)
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_pspecs(cfg: ModelConfig, mesh, cache_shapes) -> Any:
+    """Decode caches: batch dim (after the stacked layer dim) over DP; the
+    KV-head dim over 'model' when divisible; seq/state dims unsharded."""
+    tp = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        name = _leaf_name(path)
+        # leading dim is the stacked layer count; batch is dim 1
+        axes: list = [None] * len(shape)
+        if len(shape) >= 2:
+            dp = batch_spec_axes(mesh, shape[1])
+            if dp:
+                axes[1] = dp
+        if name in ("k", "v", "cross_k", "cross_v") and len(shape) == 5:
+            if shape[3] % tp == 0:
+                axes[3] = "model"      # (L, B, C, KV, hd): shard KV heads
+            elif shape[2] % tp == 0 and shape[2] >= tp:
+                axes[2] = "model"      # context parallel: shard the seq dim
+        if name == "lat" and len(shape) == 4 and shape[2] % tp == 0 and shape[2] >= tp:
+            axes[2] = "model"          # MLA latent cache: shard seq
+        if name == "state" and len(shape) == 5 and shape[2] % tp == 0:
+            axes[2] = "model"  # (L, B, H, P, N): shard SSD heads
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def to_named(mesh, pspec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

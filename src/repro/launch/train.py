@@ -1,0 +1,119 @@
+"""Distributed train step: microbatched grad accumulation + optimizer.
+
+`make_train_step` builds the pjit-able step used both by the multi-pod
+dry-run (lower/compile only) and the real CPU-scale training examples.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import (adafactor_update, adamw_update, apply_updates,
+                         cosine_schedule, init_opt_state)
+from repro.optim.optimizers import clip_by_global_norm
+
+
+def default_num_micro(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Microbatch count: keep per-device microbatch tokens ~<= 8k for big
+    models (activation memory), fewer micro-steps for small ones."""
+    if cfg.num_micro_override:
+        return cfg.num_micro_override
+    from .mesh import batch_spec_axes
+    dp = 1
+    for a in batch_spec_axes(mesh, shape.global_batch):
+        dp *= mesh.shape[a]
+    per_dev = max(1, shape.global_batch // dp)
+    if cfg.d_model >= 4096:
+        per_dev_micro = 1          # big models: one sequence per device/micro
+    elif cfg.d_model >= 2048:
+        per_dev_micro = min(per_dev, 4)
+    else:
+        per_dev_micro = min(per_dev, 8)
+    n = max(1, per_dev // per_dev_micro)
+    while shape.global_batch % n:
+        n -= 1
+    return n
+
+
+def make_train_step(cfg: ModelConfig, *, num_micro: int = 1, lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10_000,
+                    clip_norm: float = 1.0, micro_shardings=None,
+                    grad_shardings=None):
+    """Returns train_step(params, opt_state, batch, step) -> (params,
+    opt_state, metrics).  Gradient accumulation over `num_micro` microbatches
+    via lax.scan (activation memory ~ 1/num_micro).
+
+    micro_shardings: optional pytree of NamedShardings (leading micro dim
+    unsharded, batch dim over DP) applied to the reshaped microbatch stack —
+    without it GSPMD splits the data axis across (micro, batch), silently
+    multiplying per-device compute (see EXPERIMENTS.md Perf log).
+
+    grad_shardings: optional pytree of NamedShardings (same structure as
+    params) constraining each microbatch's gradients — forces GSPMD to
+    reduce-scatter dW into the parameter sharding instead of all-reducing
+    full tensors inside the accumulation scan (EXPERIMENTS.md Perf log,
+    iteration 2)."""
+
+    update_fn = adamw_update if cfg.optimizer == "adamw" else adafactor_update
+
+    def constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g, grad_shardings)
+
+    def train_step(params, opt_state, batch, step):
+        def micro_loss(p, mb):
+            return loss_fn(cfg, p, mb)
+
+        grad_fn = jax.value_and_grad(micro_loss, has_aux=True)
+
+        if num_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = constrain_grads(grads)
+        else:
+            def reshape(x):
+                return x.reshape((num_micro, x.shape[0] // num_micro) + x.shape[1:])
+            micro = jax.tree.map(reshape, batch)
+            if micro_shardings is not None:
+                micro = jax.tree.map(jax.lax.with_sharding_constraint,
+                                     micro, micro_shardings)
+
+            acc_dt = jnp.bfloat16 if cfg.grad_acc_dtype == "bfloat16" else jnp.float32
+
+            def body(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                g = constrain_grads(g)
+                acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc, g)
+                return acc, (l, m)
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            grads, (losses, ms) = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree.map(lambda g: g / num_micro, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr_t = cosine_schedule(step, peak_lr=lr, warmup_steps=warmup,
+                               total_steps=total_steps)
+        updates, opt_state = update_fn(grads, opt_state, params, lr_t)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr_t)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def abstract_train_state(cfg: ModelConfig, rng=None):
+    """ShapeDtypeStruct trees for (params, opt_state) — no allocation."""
+    from repro.models import init_params
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda: init_params(cfg, key))
+    opt = jax.eval_shape(
+        lambda: init_opt_state(params, cfg.optimizer, cfg.opt_state_dtype))
+    return params, opt

@@ -1,0 +1,371 @@
+"""Shared neural layers: norms, RoPE, GQA/MLA attention, SwiGLU.
+
+Pure-jnp, sharding-agnostic (GSPMD propagates shardings through einsums).
+Long sequences use a block-triangular online-softmax attention (`blocked
+attention`): exact flash-style causal attention with only the lower-triangle
+blocks materialised, so prefill FLOPs stay at the useful S^2/2 and the
+working set stays O(chunk^2) — the pure-XLA analogue of a fused TPU kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x, scale=None, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dt)
+
+
+def layer_norm_np(x, eps=1e-5):
+    """Non-parametric LayerNorm (OLMo)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def norm(cfg: ModelConfig, params, x):
+    if cfg.nonparametric_norm:
+        return layer_norm_np(x)
+    return rms_norm(x, params)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_angles(positions, dim, theta):
+    """positions (...,) -> cos/sin (..., dim/2)."""
+    freqs = jnp.asarray(
+        1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim)), jnp.float32
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, hd); cos/sin: (..., S, hd/2) broadcast over heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ dense matmul
+def dense(x, w):
+    return jnp.einsum("...d,df->...f", x, w).astype(x.dtype)
+
+
+def swiglu(params, x):
+    g = dense(x, params["w_gate"])
+    u = dense(x, params["w_up"])
+    return dense(jax.nn.silu(g) * u, params["w_down"])
+
+
+# -------------------------------------------------------------- attention
+NEG_INF = -1e30
+
+
+def _plain_attention(q, k, v, *, causal, window, q_offset, scale):
+    """Reference einsum attention (short sequences / decode).
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H % KV == 0.
+    q_offset: absolute position of q[0] relative to k[0] (for decode Sq=1)."""
+    with jax.named_scope("flash_attention"):
+        return _plain_attention_impl(q, k, v, causal=causal, window=window,
+                                     q_offset=q_offset, scale=scale)
+
+
+def _plain_attention_impl(q, k, v, *, causal, window, q_offset, scale):
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def _blocked_causal_attention(q, k, v, *, window, scale, chunk):
+    """Exact causal attention with lower-triangular block iteration and online
+    softmax.  Only blocks intersecting the causal (and window) band are
+    computed: FLOPs ~ S^2/2 (resp. S*window)."""
+    with jax.named_scope("flash_attention"):
+        return _blocked_causal_attention_impl(q, k, v, window=window,
+                                              scale=scale, chunk=chunk)
+
+
+def _blocked_causal_attention_impl(q, k, v, *, window, scale, chunk):
+    B, S, H, hd = q.shape
+    KV, vd = k.shape[2], v.shape[-1]
+    G = H // KV
+    nb = S // chunk
+    assert S % chunk == 0
+    qg = q.reshape(B, nb, chunk, KV, G, hd)
+    kb = k.reshape(B, nb, chunk, KV, hd)
+    vb = v.reshape(B, nb, chunk, KV, vd)
+    win_blocks = None if window is None else max(1, -(-window // chunk))
+
+    pos = jnp.arange(chunk)
+    outs = []
+    for i in range(nb):
+        m = jnp.full((B, chunk, KV, G), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, chunk, KV, G), jnp.float32)
+        acc = jnp.zeros((B, chunk, KV, G, vd), jnp.float32)
+        j_lo = 0 if win_blocks is None else max(0, i - win_blocks)
+        for j in range(j_lo, i + 1):
+            s = jnp.einsum(
+                "bqkgh,bskh->bqkgs",
+                qg[:, i].astype(jnp.float32),
+                kb[:, j].astype(jnp.float32),
+            ) * scale
+            qpos = pos[:, None] + i * chunk
+            kpos = pos[None, :] + j * chunk
+            mask = kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqkgs,bskh->bqkgh", p, vb[:, j].astype(jnp.float32)
+            )
+            m = m_new
+        outs.append((acc / jnp.maximum(l, 1e-30)[..., None]).reshape(B, chunk, H, vd))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def _fori_flash_attention(q, k, v, *, window, scale, chunk):
+    """Exact causal flash attention for INFERENCE (prefill): outer lax.map
+    over q blocks, inner fori_loop with a *dynamic* upper bound — linear HLO
+    size, no masked-block overcompute.  Not reverse-mode differentiable
+    (dynamic trip count), hence inference-only."""
+    with jax.named_scope("flash_attention"):
+        return _fori_flash_attention_impl(q, k, v, window=window, scale=scale,
+                                          chunk=chunk)
+
+
+def _fori_flash_attention_impl(q, k, v, *, window, scale, chunk):
+    B, S, H, hd = q.shape
+    KV, vd = k.shape[2], v.shape[-1]
+    G = H // KV
+    nb = S // chunk
+    qb = q.reshape(B, nb, chunk, KV, G, hd)
+    kb = k.reshape(B, nb, chunk, KV, hd)
+    vb = v.reshape(B, nb, chunk, KV, vd)
+    pos = jnp.arange(chunk)
+    win_blocks = None if window is None else max(1, -(-window // chunk))
+
+    def qblock(i):  # noqa: within flash_attention scope via caller
+        qi = jax.lax.dynamic_index_in_dim(qb, i, 1, keepdims=False).astype(jnp.float32)
+
+        def body(j, carry):
+            m, l, acc = carry
+            kj = jax.lax.dynamic_index_in_dim(kb, j, 1, keepdims=False).astype(jnp.float32)
+            vj = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False).astype(jnp.float32)
+            s = jnp.einsum("bqkgh,bskh->bqkgs", qi, kj) * scale
+            qpos = pos[:, None] + i * chunk
+            kpos = pos[None, :] + j * chunk
+            mask = kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l2 = l * corr + p.sum(axis=-1)
+            acc2 = acc * corr[..., None] + jnp.einsum("bqkgs,bskh->bqkgh", p, vj)
+            return m_new, l2, acc2
+
+        init = (jnp.full((B, chunk, KV, G), NEG_INF, jnp.float32),
+                jnp.zeros((B, chunk, KV, G), jnp.float32),
+                jnp.zeros((B, chunk, KV, G, vd), jnp.float32))
+        lo = jnp.int32(0) if win_blocks is None else jnp.maximum(i - win_blocks, 0)
+        m, l, acc = jax.lax.fori_loop(lo, i + 1, body, init)
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).reshape(B, chunk, H, vd)
+
+    out = jax.lax.map(qblock, jnp.arange(nb))          # (nb, B, chunk, H, vd)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, vd)
+    return out.astype(q.dtype)
+
+
+def attention_core(q, k, v, *, causal=True, window=None, q_offset=0,
+                   blocked_threshold=4096, chunk=1024, inference=False,
+                   scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(q.shape[-1])
+    Sq, Sk = q.shape[1], k.shape[1]
+    if causal and Sq == Sk and Sk >= blocked_threshold and Sk % chunk == 0:
+        if inference:
+            big_chunk = max(chunk, Sk // 16)
+            if Sk % big_chunk == 0:
+                return _fori_flash_attention(q, k, v, window=window, scale=scale,
+                                             chunk=big_chunk)
+        return _blocked_causal_attention(q, k, v, window=window, scale=scale, chunk=chunk)
+    return _plain_attention(q, k, v, causal=causal, window=window,
+                            q_offset=q_offset, scale=scale)
+
+
+# --------------------------------------------------------------- GQA layer
+def gqa_attention(cfg: ModelConfig, p, x, *, positions, cache=None, cache_pos=None,
+                  causal=True, window=None, kv_override=None):
+    """Grouped-query attention with RoPE, optional qk-norm / sliding window.
+
+    cache: dict(k=(B, C, KV, hd), v=...) ring/linear buffer, written at
+    cache_pos.  Returns (out, new_cache).
+    kv_override: (k, v) for cross-attention (whisper decoder)."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = dense(x, p["wq"]).reshape(B, S, H, hd)
+    if kv_override is None:
+        k = dense(x, p["wk"]).reshape(B, S, KV, hd)
+        v = dense(x, p["wv"]).reshape(B, S, KV, hd)
+    else:
+        k, v = kv_override
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"]) if kv_override is None else k
+    if kv_override is None and positions is not None:
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    q_offset = 0
+    new_cache = cache
+    if cache is not None and kv_override is None:
+        C = cache["k"].shape[1]
+        if "pos" in cache and S >= C:
+            # long prefill into a window ring: attention runs over the fresh
+            # k/v (blocked SWA); only the last C tokens enter the ring, laid
+            # out so slot(p) == p % C.
+            shift = jnp.mod(cache_pos + S - C, C)
+            ck = jnp.roll(k[:, -C:], shift, axis=1)
+            cv = jnp.roll(v[:, -C:], shift, axis=1)
+            kpos = jnp.roll(positions[:, -C:], shift, axis=1)
+            new_cache = dict(k=ck, v=cv, pos=kpos)
+            out = attention_core(q, k, v, causal=causal, window=window,
+                                 q_offset=cache_pos, inference=True)
+            return dense(out.reshape(B, S, H * hd), p["wo"]), new_cache
+        if "pos" in cache:
+            # ring buffer (sliding-window cache shorter than the sequence)
+            idx = cache_pos % C
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
+            # unroll the ring into causal order is unnecessary: use positions
+            kpos = cache["pos"]
+            kpos = jax.lax.dynamic_update_slice(kpos, positions.reshape(B, -1), (0, idx))
+            new_cache = dict(k=ck, v=cv, pos=kpos)
+            # attend with explicit position mask
+            return _ring_decode_attend(cfg, p, q, new_cache, positions), new_cache
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, cache_pos, 0, 0))
+        new_cache = dict(k=ck, v=cv)
+        k, v = ck, cv
+        q_offset = cache_pos
+        # mask out not-yet-written slots via causal mask (positions beyond
+        # cache_pos + S are > qpos, already excluded)
+    out = attention_core(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                         inference=cache is not None or kv_override is not None)
+    return dense(out.reshape(B, S, H * hd), p["wo"]), new_cache
+
+
+def _ring_decode_attend(cfg: ModelConfig, p, q, cache, positions):
+    """Decode attention over a ring buffer with explicit per-slot positions."""
+    B, S, H, hd = q.shape
+    KV = cfg.num_kv_heads
+    G = H // KV
+    k, v, kpos = cache["k"], cache["v"], cache["pos"]
+    qg = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = positions.reshape(B, -1)
+    valid = (
+        (kpos[:, None, :] >= 0)
+        & (kpos[:, None, :] <= qpos[..., None])
+        & (kpos[:, None, :] > qpos[..., None] - (cfg.window or 1 << 30))
+    )
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    pr = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", pr, v.astype(jnp.float32))
+    out = out.reshape(B, S, H * hd).astype(q.dtype)
+    return dense(out, p["wo"])
+
+
+# --------------------------------------------------------------- MLA layer
+def mla_attention(cfg: ModelConfig, p, x, *, positions, cache=None, cache_pos=None):
+    """Multi-head Latent Attention (DeepSeek-V3).
+
+    Training/prefill: expanded form (materialise per-head K/V from the
+    latent).  Decode: absorbed form — queries are projected into the latent
+    space and attention runs against the (kv_lora + rope) cache directly,
+    MQA-style; W_uk / W_uv are absorbed into the query/output projections.
+    """
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    cq = rms_norm(dense(x, p["q_down"]), p["q_down_norm"])
+    q = dense(cq, p["q_up"]).reshape(B, S, H, qk)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    kv = dense(x, p["kv_down"])
+    c_kv = rms_norm(kv[..., : m.kv_lora_rank], p["kv_down_norm"])
+    k_rope = kv[..., m.kv_lora_rank:].reshape(B, S, 1, m.qk_rope_head_dim)
+    cos, sin = rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+
+    scale = 1.0 / math.sqrt(qk)
+    if cache is not None:
+        # ---- absorbed decode/prefill path: attention runs in the latent
+        # space, MQA-style (KV = 1): q_lat = q_nope @ W_uk, keys/values are
+        # the (kv_lora + rope) cache itself; W_uv is applied to the output.
+        lat = jnp.concatenate([c_kv, k_rope[:, :, 0]], axis=-1)  # (B,S,r+rope)
+        clat = jax.lax.dynamic_update_slice(cache["lat"], lat, (0, cache_pos, 0))
+        new_cache = dict(lat=clat)
+        w_uk = p["k_up"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+        q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+        q_all = jnp.concatenate([q_lat, q_rope.astype(jnp.float32)], axis=-1)
+        k_all = clat[:, :, None, :]                         # (B,Sc,1,r+rope)
+        v_all = clat[:, :, None, : m.kv_lora_rank]          # (B,Sc,1,r)
+        o_lat = attention_core(q_all.astype(x.dtype), k_all, v_all,
+                               causal=True, q_offset=cache_pos,
+                               inference=True, scale=scale)
+        w_uv = p["v_up"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+        out = jnp.einsum("bqhr,rhv->bqhv", o_lat.astype(jnp.float32),
+                         w_uv.astype(jnp.float32))
+        out = out.reshape(B, S, H * m.v_head_dim).astype(x.dtype)
+        return dense(out, p["wo"]), new_cache
+
+    # ---- expanded train/prefill path ----
+    k_nope = dense(c_kv, p["k_up"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = dense(c_kv, p["v_up"]).reshape(B, S, H, m.v_head_dim)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_head_dim))], -1)
+    qq = jnp.concatenate([q_nope, q_rope], -1)
+    out = attention_core(qq, k, v, causal=True)
+    out = out.reshape(B, S, H * m.v_head_dim)
+    return dense(out, p["wo"]), None

@@ -1,0 +1,520 @@
+"""Unified model assembly for all assigned architectures.
+
+One parameter/init/apply stack covers:
+  dense decoders (llama-style; olmo non-parametric LN; qwen3 qk-norm;
+  phi3; deepseek-coder), MoE decoders (mixtral SWA; deepseek-v3 MLA+MoE+MTP),
+  SSM (mamba2), hybrid (recurrentgemma RG-LRU 2:1 local attention),
+  encoder-decoder (whisper, stub audio frontend), VLM (pixtral, stub patch
+  frontend).
+
+Layers are stacked and driven by `lax.scan` (compact HLO — essential for the
+512-device dry-run compiles), with `jax.checkpoint` rematerialisation per
+block.  Decode uses per-layer caches scanned alongside the parameters.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from . import layers as ly
+from .moe import moe_layer
+from .ssm import mamba2_layer
+from .rglru import rglru_layer
+
+Params = Any
+
+# Optional sequence-parallel activation sharding, set by the launcher
+# (repro.launch.dryrun / train): a PartitionSpec applied to the residual
+# stream at every block boundary.  None = let GSPMD propagate freely.
+_ACT_SPEC = {"spec": None}
+
+
+def set_activation_spec(spec):
+    _ACT_SPEC["spec"] = spec
+
+
+def _constrain_act(x):
+    spec = _ACT_SPEC["spec"]
+    if spec is not None and x.ndim == 3 and x.shape[1] >= 16 and x.shape[1] % 16 == 0:
+        return jax.lax.with_sharding_constraint(x, spec)
+    return x
+
+
+# ---------------------------------------------------------------------- init
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _mat(key, shape, dtype, scale=None):
+    std = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def _attn_init(cfg: ModelConfig, key, dtype):
+    H, KV, hd, D = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _mat(ks[0], (D, H * hd), dtype),
+        "wk": _mat(ks[1], (D, KV * hd), dtype),
+        "wv": _mat(ks[2], (D, KV * hd), dtype),
+        "wo": _mat(ks[3], (H * hd, D), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _mla_init(cfg: ModelConfig, key, dtype):
+    m, D, H = cfg.mla, cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "q_down": _mat(ks[0], (D, m.q_lora_rank), dtype),
+        "q_down_norm": jnp.zeros((m.q_lora_rank,), jnp.float32),
+        "q_up": _mat(ks[1], (m.q_lora_rank, H * qk), dtype),
+        "kv_down": _mat(ks[2], (D, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "kv_down_norm": jnp.zeros((m.kv_lora_rank,), jnp.float32),
+        "k_up": _mat(ks[3], (m.kv_lora_rank, H * m.qk_nope_head_dim), dtype),
+        "v_up": _mat(ks[4], (m.kv_lora_rank, H * m.v_head_dim), dtype),
+        "wo": _mat(ks[5], (H * m.v_head_dim, D), dtype),
+    }
+
+
+def _mlp_init(cfg: ModelConfig, key, dtype, d_ff=None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _mat(ks[0], (D, F), dtype),
+        "w_up": _mat(ks[1], (D, F), dtype),
+        "w_down": _mat(ks[2], (F, D), dtype),
+    }
+
+
+def _moe_init(cfg: ModelConfig, key, dtype):
+    m, D = cfg.moe, cfg.d_model
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": _mat(ks[0], (D, m.num_experts), jnp.float32),
+        "experts_gate": _mat(ks[1], (m.num_experts, D, m.d_ff_expert), dtype),
+        "experts_up": _mat(ks[2], (m.num_experts, D, m.d_ff_expert), dtype),
+        "experts_down": _mat(ks[3], (m.num_experts, m.d_ff_expert, D), dtype,
+                             scale=1.0 / math.sqrt(m.d_ff_expert)),
+    }
+    if m.num_shared:
+        p["shared_gate"] = _mat(ks[4], (m.num_shared, D, m.d_ff_expert), dtype)
+        p["shared_up"] = _mat(ks[5], (m.num_shared, D, m.d_ff_expert), dtype)
+        p["shared_down"] = _mat(ks[6], (m.num_shared, m.d_ff_expert, D), dtype,
+                                scale=1.0 / math.sqrt(m.d_ff_expert))
+    return p
+
+
+def _ssm_init(cfg: ModelConfig, key, dtype):
+    s, D = cfg.ssm, cfg.d_model
+    din = s.expand * D
+    H = din // s.head_dim
+    N = s.d_state
+    ks = jax.random.split(key, 3)
+    return {
+        "in_proj": _mat(ks[0], (D, 2 * din + 2 * N + H), dtype),
+        "conv_w": _mat(ks[1], (s.d_conv, din + 2 * N), jnp.float32, scale=0.5),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "a_log": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "out_proj": _mat(ks[2], (din, D), dtype),
+    }
+
+
+def _rec_init(cfg: ModelConfig, key, dtype):
+    r, D = cfg.rglru, cfg.d_model
+    W = r.lru_width or D
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _mat(ks[0], (D, W), dtype),
+        "gate_proj": _mat(ks[1], (D, W), dtype),
+        "conv_w": _mat(ks[2], (r.conv_width, W), jnp.float32, scale=0.5),
+        "w_r": _mat(ks[3], (W, W), dtype),
+        "w_i": _mat(ks[4], (W, W), dtype),
+        "lam": jnp.full((W,), 0.5, jnp.float32),
+        "out_proj": _mat(ks[5], (W, D), dtype),
+    }
+
+
+def _norm_init(cfg):
+    return None if cfg.nonparametric_norm else jnp.zeros((cfg.d_model,), jnp.float32)
+
+
+def _block_init(cfg: ModelConfig, key, kind: str):
+    """kind: attn | mla | ssm | rec | enc | dec"""
+    dtype = _dt(cfg)
+    ks = jax.random.split(key, 4)
+    p = {}
+    if kind == "ssm":
+        p["norm"] = _norm_init(cfg)
+        p["ssm"] = _ssm_init(cfg, ks[0], dtype)
+        return p
+    if kind == "rec":
+        p["attn_norm"] = _norm_init(cfg)
+        p["rec"] = _rec_init(cfg, ks[0], dtype)
+        p["mlp_norm"] = _norm_init(cfg)
+        p["mlp"] = _mlp_init(cfg, ks[1], dtype)
+        return p
+    p["attn_norm"] = _norm_init(cfg)
+    p["attn"] = _mla_init(cfg, ks[0], dtype) if kind == "mla" else _attn_init(cfg, ks[0], dtype)
+    if kind == "dec":
+        p["cross_norm"] = _norm_init(cfg)
+        p["cross"] = _attn_init(cfg, ks[2], dtype)
+    p["mlp_norm"] = _norm_init(cfg)
+    if cfg.moe is not None and kind in ("attn", "mla"):
+        p["moe"] = _moe_init(cfg, ks[1], dtype)
+    else:
+        p["mlp"] = _mlp_init(cfg, ks[1], dtype)
+    return p
+
+
+def _stacked(init_fn, key, n):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def decoder_kind(cfg: ModelConfig) -> str:
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.mla is not None:
+        return "mla"
+    return "attn"
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = _dt(cfg)
+    ks = jax.random.split(key, 8)
+    p = {"tok_embed": _mat(ks[0], (cfg.vocab_size, cfg.d_model), dtype, scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["out_head"] = _mat(ks[1], (cfg.d_model, cfg.vocab_size), dtype)
+    p["final_norm"] = _norm_init(cfg)
+
+    if cfg.family == "hybrid":
+        pat = cfg.rglru.pattern
+        nb = cfg.num_layers // len(pat)
+        rem = cfg.num_layers - nb * len(pat)
+        def super_init(k):
+            kk = jax.random.split(k, len(pat))
+            return {f"{kind}{i}": _block_init(cfg, kk[i], "rec" if kind == "rec" else "attn")
+                    for i, kind in enumerate(pat)}
+        p["super"] = _stacked(super_init, ks[2], nb)
+        if rem:
+            p["tail"] = _stacked(lambda k: _block_init(cfg, k, "rec"), ks[3], rem)
+    elif cfg.family == "encdec":
+        p["enc"] = _stacked(lambda k: _block_init(cfg, k, "attn"), ks[2], cfg.encoder_layers)
+        p["enc_norm"] = _norm_init(cfg)
+        p["dec"] = _stacked(lambda k: _block_init(cfg, k, "dec"), ks[3], cfg.num_layers)
+    else:
+        kind = decoder_kind(cfg)
+        p["layers"] = _stacked(lambda k: _block_init(cfg, k, kind), ks[2], cfg.num_layers)
+    if cfg.mtp_depth:
+        p["mtp_proj"] = _mat(ks[4], (2 * cfg.d_model, cfg.d_model), dtype)
+        p["mtp_block"] = _block_init(cfg, ks[5], decoder_kind(cfg))
+        p["mtp_norm"] = _norm_init(cfg)
+    return p
+
+
+# --------------------------------------------------------------------- cache
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None) -> Any:
+    """Decode caches, stacked per layer (leading layer axis for scan)."""
+    dtype = dtype or _dt(cfg)
+    H, KV, hd, D = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim, cfg.d_model
+
+    def attn_cache(window):
+        C = min(cache_len, window) if window else cache_len
+        c = {"k": jnp.zeros((batch, C, KV, hd), dtype),
+             "v": jnp.zeros((batch, C, KV, hd), dtype)}
+        if window and cache_len > window:
+            c["pos"] = jnp.full((batch, C), -1, jnp.int32)
+        return c
+
+    def stack(tree, n):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree)
+
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        din = s.expand * D
+        nh = din // s.head_dim
+        one = {"conv": jnp.zeros((batch, s.d_conv - 1, din + 2 * s.d_state), dtype),
+               "state": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32)}
+        return {"layers": stack(one, cfg.num_layers)}
+    if cfg.family == "hybrid":
+        r = cfg.rglru
+        W = r.lru_width or D
+        pat = r.pattern
+        nb = cfg.num_layers // len(pat)
+        rem = cfg.num_layers - nb * len(pat)
+        rec = {"conv": jnp.zeros((batch, r.conv_width - 1, W), dtype),
+               "h": jnp.zeros((batch, W), jnp.float32)}
+        sup = {}
+        for i, kind in enumerate(pat):
+            sup[f"{kind}{i}"] = rec if kind == "rec" else attn_cache(r.window)
+        out = {"super": stack(sup, nb)}
+        if rem:
+            out["tail"] = stack(rec, rem)
+        return out
+    if cfg.family == "encdec":
+        one = {"self": attn_cache(None),
+               "cross_k": jnp.zeros((batch, cfg.encoder_seq, KV, hd), dtype),
+               "cross_v": jnp.zeros((batch, cfg.encoder_seq, KV, hd), dtype)}
+        return {"dec": stack(one, cfg.num_layers)}
+    one = (
+        {"lat": jnp.zeros((batch, cache_len,
+                           cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim), dtype)}
+        if cfg.mla is not None else attn_cache(cfg.window)
+    )
+    return {"layers": stack(one, cfg.num_layers)}
+
+
+# ------------------------------------------------------------------- blocks
+def _apply_block(cfg: ModelConfig, p, x, positions, cache, cache_pos, kind,
+                 enc_out=None):
+    """One transformer block.  Returns (x, aux_loss, new_cache)."""
+    aux = jnp.float32(0.0)
+    if kind == "ssm":
+        h, nc = mamba2_layer(cfg, p["ssm"], ly.norm(cfg, p.get("norm"), x), cache=cache)
+        return x + h, aux, nc
+    if kind == "rec":
+        h, nc = rglru_layer(cfg, p["rec"], ly.norm(cfg, p.get("attn_norm"), x), cache=cache)
+        x = x + h
+        x = x + ly.swiglu(p["mlp"], ly.norm(cfg, p.get("mlp_norm"), x))
+        return x, aux, nc
+    # attention blocks
+    window = cfg.window
+    causal = kind != "enc"
+    if kind == "attn_local":
+        window = cfg.rglru.window
+    h_in = ly.norm(cfg, p.get("attn_norm"), x)
+    if kind == "mla":
+        h, nc = ly.mla_attention(cfg, p["attn"], h_in, positions=positions,
+                                 cache=cache, cache_pos=cache_pos)
+    else:
+        h, nc = ly.gqa_attention(cfg, p["attn"], h_in, positions=positions,
+                                 cache=cache if kind != "dec" else
+                                 (cache["self"] if cache is not None else None),
+                                 cache_pos=cache_pos, causal=causal, window=window)
+    x = x + h
+    if kind == "dec":
+        if enc_out is not None:
+            # train or prefill: compute cross K/V from the encoder output
+            ck = ly.dense(enc_out, p["cross"]["wk"]).reshape(
+                enc_out.shape[0], enc_out.shape[1], cfg.num_kv_heads, cfg.resolved_head_dim)
+            cv = ly.dense(enc_out, p["cross"]["wv"]).reshape(
+                enc_out.shape[0], enc_out.shape[1], cfg.num_kv_heads, cfg.resolved_head_dim)
+            kv = (ck, cv)
+        else:
+            kv = (cache["cross_k"], cache["cross_v"])
+        h, _ = ly.gqa_attention(cfg, p["cross"], ly.norm(cfg, p.get("cross_norm"), x),
+                                positions=None, causal=False, kv_override=kv)
+        x = x + h
+        nc = {"self": nc, "cross_k": kv[0], "cross_v": kv[1]} if cache is not None else None
+    h_in = ly.norm(cfg, p.get("mlp_norm"), x)
+    if "moe" in p:
+        from .moe_a2a import a2a_available, moe_layer_a2a
+        if a2a_available(cfg, h_in.shape[1]):
+            h, aux = moe_layer_a2a(cfg, p["moe"], h_in)
+        else:
+            h, aux = moe_layer(cfg, p["moe"], h_in)
+    else:
+        h = ly.swiglu(p["mlp"], h_in)
+    return x + h, aux, nc
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _run_stack(cfg: ModelConfig, stack, x, positions, kind, cache=None,
+               cache_pos=0, enc_out=None):
+    """Scan a homogeneous layer stack. Returns (x, aux, new_cache)."""
+
+    if cache is None:
+        def body(carry, lp):
+            xx, aux = carry
+            xx, a2, _ = _apply_block(cfg, lp, xx, positions, None, 0, kind, enc_out)
+            return (_constrain_act(xx), aux + a2), None
+        body = _maybe_remat(cfg, body)
+        (x, aux), _ = jax.lax.scan(body, (_constrain_act(x), jnp.float32(0.0)), stack)
+        return x, aux, None
+
+    def body(carry, xs):
+        xx, aux = carry
+        lp, lc = xs
+        xx, a2, nc = _apply_block(cfg, lp, xx, positions, lc, cache_pos, kind, enc_out)
+        return (_constrain_act(xx), aux + a2), nc
+    body = _maybe_remat(cfg, body)
+    (x, aux), new_cache = jax.lax.scan(body, (x, jnp.float32(0.0)), (stack, cache))
+    return x, aux, new_cache
+
+
+def _run_hybrid(cfg: ModelConfig, params, x, positions, cache=None, cache_pos=0):
+    pat = cfg.rglru.pattern
+    kinds = {f"{k}{i}": ("rec" if k == "rec" else "attn_local") for i, k in enumerate(pat)}
+
+    def body(carry, xs):
+        xx, aux = carry
+        if cache is None:
+            lp = xs
+            lc = {k: None for k in kinds}
+        else:
+            lp, lc = xs
+        ncs = {}
+        for name in [f"{k}{i}" for i, k in enumerate(pat)]:
+            xx, a2, nc = _apply_block(cfg, lp[name], xx, positions, lc[name],
+                                      cache_pos, kinds[name])
+            aux = aux + a2
+            ncs[name] = nc
+        return (xx, aux), (ncs if cache is not None else None)
+
+    body = _maybe_remat(cfg, body)
+    xs = params["super"] if cache is None else (params["super"], cache["super"])
+    (x, aux), new_sup = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+    new_cache = {"super": new_sup} if cache is not None else None
+    if "tail" in params:
+        tc = cache["tail"] if cache is not None else None
+        x, a2, new_tail = _run_stack(cfg, params["tail"], x, positions, "rec", tc, cache_pos)
+        aux += a2
+        if cache is not None:
+            new_cache["tail"] = new_tail
+    return x, aux, new_cache
+
+
+# ------------------------------------------------------------------ forward
+def embed(cfg: ModelConfig, params, tokens):
+    return params["tok_embed"][tokens].astype(_dt(cfg)) * math.sqrt(cfg.d_model)
+
+
+def unembed(cfg: ModelConfig, params, x):
+    w = params["tok_embed"].T if cfg.tie_embeddings else params["out_head"]
+    return jnp.einsum("...d,dv->...v", x, w)
+
+
+def forward(cfg: ModelConfig, params, batch, cache=None, cache_pos=0):
+    """Full-sequence forward (train / prefill).  batch keys:
+    tokens (B,S); frames (B,Se,D) for encdec; patches (B,P,D) for vlm.
+    Returns (hidden (B,S,D), aux_loss, new_cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(cfg, params, tokens)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S)) + cache_pos
+
+    if cfg.family == "encdec":
+        enc_x = batch["frames"].astype(_dt(cfg))
+        pe = jnp.broadcast_to(
+            jnp.arange(enc_x.shape[1], dtype=jnp.int32)[None], enc_x.shape[:2])
+        enc_out, _, _ = _run_stack(cfg, params["enc"], enc_x, pe, "enc")
+        enc_out = ly.norm(cfg, params.get("enc_norm"), enc_out)
+        x, aux, nc = _run_stack(cfg, params["dec"], x, positions, "dec",
+                                cache["dec"] if cache is not None else None,
+                                cache_pos, enc_out=enc_out)
+        new_cache = {"dec": nc} if cache is not None else None
+    elif cfg.family == "hybrid":
+        x, aux, new_cache = _run_hybrid(cfg, params, x, positions, cache, cache_pos)
+    else:
+        if cfg.family == "vlm" and "patches" in batch:
+            patches = batch["patches"].astype(_dt(cfg))
+            x = jnp.concatenate([patches, x], axis=1)
+            S = x.shape[1]
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        kind = decoder_kind(cfg)
+        lc = cache["layers"] if cache is not None else None
+        x, aux, nc = _run_stack(cfg, params["layers"], x, positions, kind, lc, cache_pos)
+        new_cache = {"layers": nc} if cache is not None else None
+    x = ly.norm(cfg, params.get("final_norm"), x)
+    return x, aux, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """One decode step.  tokens (B, 1); pos: scalar int32 absolute position.
+    Returns (logits (B, vocab), new_cache)."""
+    B = tokens.shape[0]
+    x = embed(cfg, params, tokens)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.family == "encdec":
+        x, _, nc = _run_stack(cfg, params["dec"], x, positions, "dec",
+                              cache["dec"], pos)
+        new_cache = {"dec": nc}
+    elif cfg.family == "hybrid":
+        x, _, new_cache = _run_hybrid(cfg, params, x, positions, cache, pos)
+    else:
+        kind = decoder_kind(cfg)
+        x, _, nc = _run_stack(cfg, params["layers"], x, positions, kind,
+                              cache["layers"], pos)
+        new_cache = {"layers": nc}
+    x = ly.norm(cfg, params.get("final_norm"), x)
+    logits = unembed(cfg, params, x[:, 0]).astype(jnp.float32)
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------- loss
+def chunked_ce(cfg: ModelConfig, params, hidden, targets, mask, chunk=512):
+    """Cross-entropy without materialising (B, S, V) logits: lax.map over
+    sequence chunks (vocab up to 256k stays in-bounds)."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nch = S // chunk
+    h = hidden.reshape(B, nch, chunk, D).swapaxes(0, 1)
+    t = targets.reshape(B, nch, chunk).swapaxes(0, 1)
+    m = mask.reshape(B, nch, chunk).swapaxes(0, 1)
+
+    def one(args):
+        hh, tt, mm = args
+        logits = unembed(cfg, params, hh).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tt[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mm
+        return nll.sum(), mm.sum()
+
+    nll, cnt = jax.lax.map(one, (h, t, m))
+    return nll.sum() / jnp.maximum(cnt.sum(), 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """Next-token CE (+ MoE aux + optional MTP head). Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    hidden, aux, _ = forward(cfg, params, batch)
+    if cfg.family == "vlm" and "patches" in batch:
+        hidden = hidden[:, batch["patches"].shape[1]:]
+    targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    if "mask" in batch:
+        mask = mask * batch["mask"]
+    ce = chunked_ce(cfg, params, hidden, targets, mask)
+    loss = ce + 0.01 * aux
+    metrics = {"ce": ce, "aux": aux}
+    if cfg.mtp_depth:
+        # DeepSeek-style MTP: combine h_t with emb(t+1), one extra block,
+        # shared head predicts t+2.
+        e_next = embed(cfg, params, targets)
+        h = jnp.concatenate([hidden, e_next], axis=-1)
+        h = jnp.einsum("bsd,df->bsf", h, params["mtp_proj"])
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        h, _, _ = _apply_block(cfg, params["mtp_block"], h, positions, None, 0,
+                               decoder_kind(cfg))
+        h = ly.norm(cfg, params.get("mtp_norm"), h)
+        t2 = jnp.concatenate([tokens[:, 2:], tokens[:, :2]], axis=1)
+        m2 = mask.at[:, -2:].set(0.0)
+        mtp = chunked_ce(cfg, params, h, t2, m2)
+        loss = loss + 0.3 * mtp
+        metrics["mtp"] = mtp
+    return loss, metrics

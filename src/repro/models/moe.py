@@ -1,0 +1,83 @@
+"""Mixture-of-Experts layer with sort-based dispatch and SFC expert placement.
+
+Dispatch is capacity-bounded and sort-based (argsort by expert id + scatter
+into (E, C, D) buffers), so compute scales with *active* tokens only —
+no (T, E, C) one-hot dispatch tensors.  Expert buffers are sharded over the
+'model' mesh axis (expert parallelism); the token scatter/gather lowers to
+an all-to-all under GSPMD.
+
+The expert->device order follows the SFC placement module: experts are kept
+contiguous per device, which keeps the all-to-all block-structured, and
+`repro.core.placement.expert_placement` re-partitions experts by measured
+load between training phases (see examples/sfc_expert_placement.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def moe_capacity(cfg: ModelConfig, tokens: int) -> int:
+    m = cfg.moe
+    c = int(tokens * m.top_k / m.num_experts * m.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8 lanes
+
+
+def moe_layer(cfg: ModelConfig, p, x):
+    """x: (B, S, D) -> (B, S, D).  Router in float32, experts in model dtype."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.num_experts, m.top_k
+    C = moe_capacity(cfg, T)
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, K)                     # (T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = ids.reshape(-1)                                # (T*K,)
+    # position of each routed token within its expert (sort-based ranking)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos_sorted = jnp.arange(T * K) - seg_start[sorted_e]
+    pos = jnp.zeros(T * K, jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    keep = pos < C                                          # capacity drop
+
+    tok_idx = jnp.arange(T * K) // K
+    buf = jnp.zeros((E, C, D), x.dtype)
+    buf = buf.at[jnp.where(keep, flat_e, E - 1),
+                 jnp.where(keep, pos, C - 1)].add(
+        jnp.where(keep[:, None], xt[tok_idx], 0).astype(x.dtype)
+    )
+
+    # expert FFN (SwiGLU): (E, C, D) x (E, D, F)
+    g = jnp.einsum("ecd,edf->ecf", buf, p["experts_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["experts_up"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["experts_down"])
+
+    # gather back + weighted combine
+    out_rows = y[jnp.where(keep, flat_e, 0), jnp.where(keep, pos, 0)]
+    out_rows = jnp.where(keep[:, None], out_rows, 0)
+    contrib = out_rows * gate.reshape(-1)[:, None].astype(out_rows.dtype)
+    out = jax.ops.segment_sum(contrib, tok_idx, num_segments=T)
+
+    if m.num_shared:
+        sg = jnp.einsum("td,sdf->tsf", xt, p["shared_gate"])
+        su = jnp.einsum("td,sdf->tsf", xt, p["shared_up"])
+        out = out + jnp.einsum("tsf,sfd->td", jax.nn.silu(sg) * su, p["shared_down"])
+    return out.reshape(B, S, D).astype(x.dtype), _aux_loss(probs, ids, E)
+
+
+def _aux_loss(probs, ids, E):
+    """Switch-style load-balance auxiliary loss."""
+    T, K = ids.shape
+    me = probs.mean(0)                                       # (E,)
+    one = jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32)
+    ce = one.mean(0)
+    return E * jnp.sum(me * ce)

@@ -1,0 +1,150 @@
+"""Expert-parallel MoE dispatch via shard_map + all-to-all.
+
+The GSPMD formulation in `moe.py` scatters tokens into a logically-global
+(E, C, D) buffer; under pjit the combine becomes buffer-sized partial-sum
+all-reduces (EXPERIMENTS.md §Perf, Cell A/C).  This module re-expresses the
+dispatch the way expert-parallel systems do it on the wire:
+
+  1. tokens are sequence-sharded across the 'model' axis (every device owns
+     a distinct token slice);
+  2. each device packs its routed tokens into per-destination-shard,
+     per-expert capacity slots: buf (tp, E_local, C_e, D);
+  3. ONE all-to-all over 'model' moves token payloads only;
+  4. each shard runs its local experts on the received (E_local, tp*C_e, D)
+     batch; the reverse all-to-all returns outputs to the token owners.
+
+Requires num_experts % tp == 0 (deepseek-v3: 256 % 16; mixtral's E=8 < 16
+keeps the tensor-parallel-inside-expert fallback).  Enabled per-run via
+`set_moe_impl` (the dry-run/launcher sets it; default stays GSPMD).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+
+_IMPL = {"mesh": None, "dp_axes": (), "model_axis": "model"}
+
+
+def set_moe_impl(mesh=None, dp_axes=(), model_axis="model"):
+    """Install (or clear, with mesh=None) the a2a dispatch for moe layers."""
+    _IMPL.update(mesh=mesh, dp_axes=tuple(dp_axes), model_axis=model_axis)
+
+
+def a2a_available(cfg: ModelConfig, seq_len: int) -> bool:
+    mesh = _IMPL["mesh"]
+    if mesh is None or cfg.moe is None:
+        return False
+    tp = mesh.shape.get(_IMPL["model_axis"], 1)
+    return (cfg.moe.num_experts % tp == 0 and tp > 1
+            and seq_len % tp == 0 and seq_len >= tp)
+
+
+def moe_layer_a2a(cfg: ModelConfig, p, x):
+    """Drop-in replacement for moe.moe_layer when a2a_available()."""
+    mesh = _IMPL["mesh"]
+    ax = _IMPL["model_axis"]
+    dp = _IMPL["dp_axes"]
+    m = cfg.moe
+    tp = mesh.shape[ax]
+    B, S, D = x.shape
+    E = m.num_experts
+    E_l = E // tp
+    # per-source-shard, per-expert capacity
+    T_l = (B * S) // tp // max(_dp_size(mesh, dp), 1)
+    C_e = max(8, -(-int(T_l * m.top_k / E * m.capacity_factor) // 8) * 8)
+
+    fsdp_ax = dp if cfg.fsdp else ()
+
+    def body(x_l, router, eg, eu, ed, *shared):
+        if fsdp_ax:
+            # ZeRO: gather the local experts' weights over the FSDP axes for
+            # this layer only; AD reduce-scatters dW back (same wire bytes as
+            # the GSPMD formulation, but token payloads now go via all-to-all)
+            for a in fsdp_ax:
+                eg = jax.lax.all_gather(eg, a, axis=1, tiled=True)
+                eu = jax.lax.all_gather(eu, a, axis=1, tiled=True)
+                ed = jax.lax.all_gather(ed, a, axis=2, tiled=True)
+        Bl, Sl, _ = x_l.shape
+        Tl = Bl * Sl
+        xt = x_l.reshape(Tl, D)
+        logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                            router.astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, ids = jax.lax.top_k(probs, m.top_k)            # (Tl, K)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+        flat_e = ids.reshape(-1)                             # (Tl*K,) global expert
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        seg = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+        pos_sorted = jnp.arange(Tl * m.top_k) - seg[sorted_e]
+        pos = jnp.zeros(Tl * m.top_k, jnp.int32).at[order].set(
+            pos_sorted.astype(jnp.int32))
+        keep = pos < C_e
+        dest = flat_e // E_l                                 # target shard
+        e_loc = flat_e % E_l
+        tok = jnp.arange(Tl * m.top_k) // m.top_k
+
+        # pack: (tp, E_l, C_e, D)
+        buf = jnp.zeros((tp, E_l, C_e, D), x_l.dtype)
+        buf = buf.at[
+            jnp.where(keep, dest, 0), jnp.where(keep, e_loc, 0),
+            jnp.where(keep, pos, C_e - 1)
+        ].add(jnp.where(keep[:, None], xt[tok], 0).astype(x_l.dtype))
+
+        recv = jax.lax.all_to_all(buf, ax, split_axis=0, concat_axis=0,
+                                  tiled=False)               # (tp, E_l, C_e, D)
+        work = recv.transpose(1, 0, 2, 3).reshape(E_l, tp * C_e, D)
+        g = jnp.einsum("ecd,edf->ecf", work, eg)
+        u = jnp.einsum("ecd,edf->ecf", work, eu)
+        y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, ed)
+        y = y.reshape(E_l, tp, C_e, D).transpose(1, 0, 2, 3)
+        back = jax.lax.all_to_all(y, ax, split_axis=0, concat_axis=0,
+                                  tiled=False)               # (tp, E_l, C_e, D)
+
+        rows = back[jnp.where(keep, dest, 0), jnp.where(keep, e_loc, 0),
+                    jnp.where(keep, pos, 0)]
+        rows = jnp.where(keep[:, None], rows, 0)
+        contrib = rows * gate.reshape(-1)[:, None].astype(rows.dtype)
+        out = jax.ops.segment_sum(contrib, tok, num_segments=Tl)
+
+        if shared:
+            sg, su, sd = shared
+            hg = jnp.einsum("td,sdf->tsf", xt, sg)
+            hu = jnp.einsum("td,sdf->tsf", xt, su)
+            out = out + jnp.einsum("tsf,sfd->td", jax.nn.silu(hg) * hu, sd)
+
+        # switch aux loss from local stats, averaged over all shards
+        me = probs.mean(0)
+        ce = jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32).mean(0)
+        aux = E * jnp.sum(me * ce)
+        aux = jax.lax.pmean(aux, (*dp, ax)) if dp else jax.lax.pmean(aux, ax)
+        return out.reshape(Bl, Sl, D).astype(x_l.dtype), aux
+
+    shared_specs, shared_args = (), ()
+    if m.num_shared:
+        shared_specs = (P(), P(), P())
+        shared_args = (p["shared_gate"], p["shared_up"], p["shared_down"])
+    wspec = (P(ax, dp if (cfg.fsdp and dp) else None, None),
+             P(ax, dp if (cfg.fsdp and dp) else None, None),
+             P(ax, None, dp if (cfg.fsdp and dp) else None))
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp if dp else None, ax, None), P(), *wspec, *shared_specs),
+        out_specs=(P(dp if dp else None, ax, None), P()),
+        check_rep=False,
+    )
+    return fn(x, p["router"], p["experts_gate"], p["experts_up"],
+              p["experts_down"], *shared_args)
+
+
+def _dp_size(mesh, dp_axes):
+    n = 1
+    for a in dp_axes:
+        n *= mesh.shape[a]
+    return n

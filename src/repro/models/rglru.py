@@ -1,0 +1,73 @@
+"""RecurrentGemma building blocks: RG-LRU recurrence + local-attention mix.
+
+The RG-LRU (Real-Gated Linear Recurrent Unit, De et al. 2024):
+    r_t = sigmoid(W_r x_t),  i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+Training uses an associative scan over the sequence (log-depth on TPU);
+decode keeps h as O(1) state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+_C = 8.0
+
+
+def _lru_scan(a, bx):
+    """h_t = a_t h_{t-1} + bx_t via associative scan. a, bx: (B, S, W)."""
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, b1 * a2 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return hh
+
+
+def rglru_layer(cfg: ModelConfig, p, x, *, cache=None):
+    """Recurrent block: conv1d -> RG-LRU -> out proj. x (B,S,D).
+
+    cache: dict(conv=(B,K-1,W), h=(B,W)) for decode."""
+    r = cfg.rglru
+    B, S, D = x.shape
+    W = r.lru_width or D
+    xw = jnp.einsum("bsd,dw->bsw", x, p["in_proj"])
+    gate_branch = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["gate_proj"]))
+
+    # causal depthwise conv
+    K = r.conv_width
+    if cache is None:
+        pad = jnp.zeros((B, K - 1, W), xw.dtype)
+        xp = jnp.concatenate([pad, xw], axis=1)
+        new_conv = None
+    else:
+        xp = jnp.concatenate([cache["conv"].astype(xw.dtype), xw], axis=1)
+        new_conv = xp[:, -(K - 1):]
+    xc = sum(xp[:, i : i + S] * p["conv_w"][i][None, None] for i in range(K))
+
+    rg = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, p["w_r"]).astype(jnp.float32))
+    ig = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, p["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * rg
+    a = jnp.exp(log_a)
+    gated = ig * xc.astype(jnp.float32)
+    bx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+
+    if cache is None:
+        h = _lru_scan(a, bx)
+        new_h = None
+    else:
+        # scan with initial state h0: h_t = scan(a, bx)_t + (prod a_{1..t}) h0
+        h = _lru_scan(a, bx)
+        cum_a = jax.lax.associative_scan(jnp.multiply, a, axis=1)
+        h = h + cum_a * cache["h"][:, None].astype(h.dtype)
+        new_h = h[:, -1]
+    y = (h.astype(x.dtype) * gate_branch)
+    out = jnp.einsum("bsw,wd->bsd", y, p["out_proj"])
+    new_cache = None if cache is None else dict(conv=new_conv, h=new_h)
+    return out.astype(x.dtype), new_cache

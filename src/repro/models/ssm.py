@@ -1,0 +1,139 @@
+"""Mamba-2 (State-Space Duality) block — chunked training scan + O(1) decode.
+
+Follows the SSD formulation (Dao & Gu 2024): within chunks the recurrence is
+computed as masked attention-like einsums (MXU-friendly), across chunks a
+small state (H, P, N) is carried by an associative scan.  Decode keeps the
+(conv, state) pair and costs O(1) per token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv over time: x (B, S, C), w (K, C).
+    state: (B, K-1, C) trailing context for decode. Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i][None, None] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return y.astype(x.dtype), new_state
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk, h0=None):
+    """SSD scan.  xh (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).  Math (per head):
+      h_t = exp(A dt_t) h_{t-1} + dt_t * B_t x_t
+      y_t = C_t . h_t
+    h0: optional initial state (prefill continuation).
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0
+    xc = xh.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H)
+    Bc = Bm.reshape(B, nc, chunk, N)
+    Cc = Cm.reshape(B, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]              # (B,nc,l,H) log-decay, <= 0
+    cums = jnp.cumsum(dA, axis=2)                  # inclusive cumsum within chunk
+
+    # ---- intra-chunk (lower-triangular "attention") ----
+    # L[i,j] = exp(cums_i - cums_j) for i >= j   (decay from j+1..i), * dt_j
+    diff = cums[:, :, :, None, :] - cums[:, :, None, :, :]      # (B,nc,l,l,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    y_intra = jnp.einsum(
+        "bcij,bcijh,bcjh,bcjhp->bcihp",
+        CB, L, dtc.astype(jnp.float32), xc.astype(jnp.float32),
+    )
+
+    # ---- chunk states and inter-chunk scan ----
+    seg_end = cums[:, :, -1:, :]                   # (B,nc,1,H) total chunk decay
+    decay_to_end = jnp.exp(seg_end - cums)         # (B,nc,l,H)
+    states = jnp.einsum(
+        "bcjn,bcjh,bcjh,bcjhp->bchpn",
+        Bc.astype(jnp.float32), (dtc * 1.0).astype(jnp.float32),
+        decay_to_end.astype(jnp.float32), xc.astype(jnp.float32),
+    )                                              # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(seg_end[:, :, 0, :])     # (B,nc,H)
+
+    def scan_fn(h, inp):
+        st, dec = inp
+        h = h * dec[..., None, None] + st
+        return h, h
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, hs = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    hs = hs.transpose(1, 0, 2, 3, 4)               # (B,nc,H,P,N) state at chunk END
+    h_prev = jnp.concatenate([h0[:, None], hs[:, :-1]], axis=1)
+
+    # ---- inter-chunk contribution: y_j += C_j . (decay_to_j * h_prev) ----
+    decay_from_start = jnp.exp(cums)               # (B,nc,l,H)
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchpn->bcihp",
+        Cc.astype(jnp.float32), decay_from_start.astype(jnp.float32), h_prev,
+    )
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y.astype(xh.dtype), hs[:, -1]
+
+
+def mamba2_layer(cfg: ModelConfig, p, x, *, cache=None):
+    """x (B,S,D) -> (B,S,D).  cache: dict(conv=(B,K-1,C), state=(B,H,P,N))."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    din = s.expand * D
+    H = din // s.head_dim
+    P, N = s.head_dim, s.d_state
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xb, Bm, Cm, dt = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + N, 2 * din + 2 * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xb, Bm, Cm], axis=-1)
+    conv_out, new_conv = _causal_conv(
+        conv_in, p["conv_w"], None if cache is None else cache["conv"]
+    )
+    conv_out = jax.nn.silu(conv_out)
+    xb = conv_out[..., :din].reshape(B, S, H, P)
+    Bm = conv_out[..., din : din + N]
+    Cm = conv_out[..., din + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))    # (H,) negative
+
+    if cache is None:
+        y, _ = ssd_chunked(xb, dt, A, Bm, Cm, min(s.chunk, S))
+        new_state = None
+    elif S > 1:
+        # prefill continuation: chunked scan carrying the cached state
+        y, new_state = ssd_chunked(xb, dt, A, Bm, Cm, min(s.chunk, S),
+                                   h0=cache["state"])
+    else:
+        # O(1) decode: h = h * exp(A dt) + dt * B x ; y = C . h
+        h = cache["state"]
+        dec = jnp.exp(A[None] * dt[:, 0])           # (B,H)
+        upd = jnp.einsum("bn,bh,bhp->bhpn", Bm[:, 0].astype(jnp.float32),
+                         dt[:, 0], xb[:, 0].astype(jnp.float32))
+        h = h * dec[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)[:, None]
+        new_state = h
+    y = y + xb.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, din).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_cache = None if cache is None else dict(conv=new_conv, state=new_state)
+    return out.astype(x.dtype), new_cache

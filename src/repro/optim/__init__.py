@@ -1,0 +1,9 @@
+from .optimizers import OptState, adafactor_update, adamw_update, init_opt_state, apply_updates
+from .schedule import cosine_schedule
+from .compression import compress_int8, decompress_int8, compressed_psum
+
+__all__ = [
+    "OptState", "init_opt_state", "adamw_update", "adafactor_update",
+    "apply_updates", "cosine_schedule",
+    "compress_int8", "decompress_int8", "compressed_psum",
+]

@@ -1,0 +1,130 @@
+"""Fault-tolerant training runtime.
+
+Responsibilities (the 1000-node checklist, realised single-process here and
+structured so each piece maps 1:1 onto a multi-host deployment):
+
+  * checkpoint/restart — async checkpoints every k steps; restart resumes
+    from the latest complete step with an IDENTICAL data stream (the
+    pipeline is a pure function of step, see repro.data.pipeline);
+  * preemption — SIGTERM/SIGINT install a "save at next step boundary" flag
+    (TPU preemption notice pattern);
+  * elastic re-scaling — gathered checkpoints restore onto any mesh;
+    `DataPipeline.reshard` re-derives each rank's slice;
+  * straggler mitigation — a step-time watchdog flags slow steps; the
+    mitigation hook re-balances load via the paper's weighted SFC partition
+    (`repro.core.placement.target_ranks` over per-rank step-time weights),
+    the same algorithm the mesh layer uses for elements;
+  * determinism — losses depend only on (seed, step), asserted in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import signal
+import time
+from pathlib import Path
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.data import DataPipeline
+from repro.models import init_params
+from repro.optim import init_opt_state
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_steps: int = 200
+    lr: float = 3e-4
+    straggler_factor: float = 2.0   # step slower than factor*median => flagged
+    log_path: Optional[str] = None
+
+
+class StepWatchdog:
+    def __init__(self, factor: float):
+        self.factor = factor
+        self.times: list[float] = []
+        self.flagged: list[int] = []
+
+    def record(self, step: int, dt: float):
+        self.times.append(dt)
+        med = float(np.median(self.times[-50:]))
+        if len(self.times) > 5 and dt > self.factor * med:
+            self.flagged.append(step)
+            return True
+        return False
+
+    def rebalance_weights(self, per_rank_times: np.ndarray) -> np.ndarray:
+        """SFC-partition weights for straggler-aware re-balancing: ranks that
+        run slow get proportionally less work on the next partition pass."""
+        from repro.core.placement import target_ranks
+        import jax.numpy as jnp
+        inv = 1.0 / np.maximum(per_rank_times, 1e-9)
+        return np.asarray(target_ranks(jnp.asarray(np.repeat(inv, 8)), len(per_rank_times)))
+
+
+class Trainer:
+    def __init__(self, cfg_model, shape, tcfg: TrainerConfig, *, step_fn,
+                 seed: int = 0, dp_size: int = 1):
+        self.cfg = cfg_model
+        self.shape = shape
+        self.tcfg = tcfg
+        self.step_fn = step_fn
+        self.pipeline = DataPipeline(cfg_model, shape, seed=seed, dp_size=dp_size)
+        self.ckpt = AsyncCheckpointer(tcfg.ckpt_dir)
+        self.watchdog = StepWatchdog(tcfg.straggler_factor)
+        self._preempted = False
+        self.metrics_log: list[dict] = []
+
+    def _install_signals(self):
+        def handler(signum, frame):
+            self._preempted = True
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(sig, handler)
+            except ValueError:
+                pass  # non-main thread (tests)
+
+    def init_or_restore(self, key):
+        params = init_params(self.cfg, key)
+        opt = init_opt_state(params, self.cfg.optimizer, self.cfg.opt_state_dtype)
+        start = 0
+        last = latest_step(self.tcfg.ckpt_dir)
+        if last is not None:
+            (params, opt), manifest = restore_checkpoint(
+                self.tcfg.ckpt_dir, (params, opt))
+            start = manifest["step"] + 1
+        return params, opt, start
+
+    def run(self, key=None):
+        self._install_signals()
+        key = key if key is not None else jax.random.PRNGKey(0)
+        params, opt, start = self.init_or_restore(key)
+        log_f = open(self.tcfg.log_path, "a") if self.tcfg.log_path else None
+        for step in range(start, self.tcfg.max_steps):
+            t0 = time.time()
+            batch = self.pipeline.batch(step)
+            params, opt, metrics = self.step_fn(
+                params, opt, batch, jax.numpy.int32(step))
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            slow = self.watchdog.record(step, dt)
+            rec = {"step": step, "loss": loss, "dt": dt, "straggler": slow}
+            self.metrics_log.append(rec)
+            if log_f:
+                log_f.write(json.dumps(rec) + "\n")
+                log_f.flush()
+            if (step + 1) % self.tcfg.ckpt_every == 0 or self._preempted \
+                    or step + 1 == self.tcfg.max_steps:
+                self.ckpt.save((params, opt), step=step)
+            if self._preempted:
+                break
+        self.ckpt.wait()
+        if log_f:
+            log_f.close()
+        return params, opt, self.metrics_log

@@ -1,0 +1,212 @@
+"""Forest AMR tests: New/Adapt/Partition/Balance/Ghost invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import forest as F
+from repro.core import get_ops
+
+
+def refine_all(tree, elems):
+    return np.ones(len(tree), np.int32)
+
+
+def coarsen_all(tree, elems):
+    return -np.ones(len(tree), np.int32)
+
+
+def fractal_cb(max_level):
+    def cb(tree, elems):
+        b = np.asarray(elems.stype)
+        l = np.asarray(elems.level)
+        return (((b == 0) | (b == 3)) & (l < max_level)).astype(np.int32)
+    return cb
+
+
+@pytest.mark.parametrize("d,K,level,P", [(2, 1, 3, 2), (2, 3, 2, 4), (3, 2, 2, 4), (3, 5, 1, 3)])
+def test_new_uniform_counts_and_validity(d, K, level, P):
+    comm = F.SimComm(P)
+    fs = F.new_uniform(d, K, level, comm)
+    o = get_ops(d)
+    assert F.count_global(fs) == K * o.num_elements(level)
+    assert F.validate(fs)
+    counts = [f.num_local for f in fs]
+    assert max(counts) - min(counts) <= 1  # New is perfectly balanced
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_new_expansion_equals_decode(d):
+    for p in range(5):
+        fa = F.new_uniform_rank(d, 3, 3, p, 5, method="decode")
+        fb = F.new_uniform_rank(d, 3, 3, p, 5, method="successor")
+        np.testing.assert_array_equal(fa.anchor, fb.anchor)
+        np.testing.assert_array_equal(fa.stype, fb.stype)
+        np.testing.assert_array_equal(fa.tree, fb.tree)
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_adapt_refine_then_coarsen_roundtrip(d):
+    comm = F.SimComm(2)
+    fs = F.new_uniform(d, 1, 2, comm)
+    fs2 = [F.adapt(f, refine_all) for f in fs]
+    o = get_ops(d)
+    assert F.count_global(fs2) == o.num_elements(3)
+    assert F.validate(fs2)
+    fs3 = [F.adapt(f, coarsen_all) for f in fs2]
+    # coarsening recovers level 2 wherever families are rank-complete
+    assert F.validate(fs3)
+    assert F.count_global(fs3) <= F.count_global(fs2) // 2
+
+
+def test_adapt_refine_coarsen_not_in_same_call():
+    """Paper's recursion assumptions: refine-created elements are not
+    re-coarsened within one adapt call (and vice versa)."""
+    comm = F.SimComm(1)
+    fs = F.new_uniform(3, 1, 1, comm)
+
+    calls = {"n": 0}
+
+    def flip(tree, elems):
+        calls["n"] += 1
+        l = np.asarray(elems.level)
+        return np.where(l == 1, 1, -1).astype(np.int32)  # refine coarse, coarsen fine
+
+    out = F.adapt(fs[0], flip, recursive=True)
+    # all level-1 got refined to level 2; the new level-2 children voted -1
+    # but must NOT be coarsened in the same call
+    assert set(np.unique(out.level)) == {2}
+    assert F.validate([out])
+
+
+def test_fractal_adapt_matches_transfer_matrix():
+    """Validates Adapt against the analytic count of the paper's Fig. 12
+    fractal pattern (types 0 and 3 refined recursively)."""
+    d, K, k0, depth = 3, 2, 2, 2
+    comm = F.SimComm(4)
+    fs = F.new_uniform(d, K, k0, comm)
+    fs = [F.adapt(f, fractal_cb(k0 + depth), recursive=True) for f in fs]
+    got = F.count_global(fs)
+
+    # transfer matrix over types
+    from repro.core.tables import get_tables
+    t = get_tables(3)
+    M = np.zeros((6, 6), np.int64)
+    for b in range(6):
+        for i in range(8):
+            M[b, t.child_type[b, i]] += 1
+    c = np.zeros(6, np.int64)
+    c[0] = K
+    for _ in range(k0):
+        c = c @ M
+    refinable = c[0] + c[3]
+    others = c.sum() - refinable
+    Fj = 1
+    for _ in range(depth):
+        Fj = 4 * Fj + 4
+    want = refinable * Fj + others
+    assert got == want
+
+
+def test_partition_balances_weighted():
+    comm = F.SimComm(4)
+    fs = F.new_uniform(3, 2, 2, comm)
+    fs = [F.adapt(f, fractal_cb(4), recursive=True) for f in fs]
+    fs = F.partition(fs, comm)
+    counts = [f.num_local for f in fs]
+    assert max(counts) - min(counts) <= 1
+    assert F.validate(fs)
+    # weighted: weight 2^level
+    ws = [2.0 ** f.level for f in fs]
+    fs2 = F.partition(fs, comm, weights=ws)
+    loads = [float((2.0 ** f.level).sum()) for f in fs2]
+    assert F.validate(fs2)
+    assert max(loads) / (sum(loads) / len(loads)) < 1.05
+
+
+def test_partition_preserves_global_order():
+    comm = F.SimComm(3)
+    fs = F.new_uniform(3, 2, 2, comm)
+    fs = [F.adapt(f, fractal_cb(3), recursive=True) for f in fs]
+    before = np.concatenate([f.keys for f in fs])
+    tbefore = np.concatenate([f.tree for f in fs])
+    fs2 = F.partition(fs, comm)
+    after = np.concatenate([f.keys for f in fs2])
+    tafter = np.concatenate([f.tree for f in fs2])
+    np.testing.assert_array_equal(before, after)
+    np.testing.assert_array_equal(tbefore, tafter)
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_balance_two_to_one(d):
+    comm = F.SimComm(2)
+    fs = F.new_uniform(d, 1, 1, comm)
+
+    def corner_only(tree, elems):
+        a = np.asarray(elems.anchor)
+        l = np.asarray(elems.level)
+        return ((a.sum(1) == 0) & (l < 5)).astype(np.int32)  # refine origin corner deep
+
+    fs = [F.adapt(f, corner_only, recursive=True) for f in fs]
+    fs = F.balance(fs, comm)
+    assert F.validate(fs)
+    # verify the 2:1 property directly
+    o = get_ops(d)
+    all_keys = np.concatenate([f.keys for f in fs])
+    all_lvl = np.concatenate([f.level for f in fs])
+    order = np.argsort(all_keys)
+    keys, lvls = all_keys[order], all_lvl[order]
+    from repro.core import u64 as u64m
+    import jax.numpy as jnp
+    for f_ in fs:
+        if f_.num_local == 0:
+            continue
+        s = f_.simplices()
+        for face in range(d + 1):
+            nb, _ = o.face_neighbor(s, face)
+            inside = np.asarray(o.is_inside_root(nb))
+            nkey = u64m.to_np(o.morton_key(nb))
+            span = np.uint64(1) << (np.uint64(d) * (np.uint64(o.L) - f_.level.astype(np.uint64)))
+            lo = np.searchsorted(keys, nkey)
+            hi = np.searchsorted(keys, nkey + span)
+            for i in np.nonzero(inside)[0]:
+                if hi[i] > lo[i]:
+                    assert lvls[lo[i]:hi[i]].max() <= f_.level[i] + 1
+
+
+def test_ghost_symmetric_and_remote():
+    comm = F.SimComm(4)
+    fs = F.new_uniform(3, 1, 2, comm)
+    gh = F.ghost(fs, comm)
+    for p, g in enumerate(gh):
+        assert np.all(g["owner"] != p)
+        # every ghost element is an actual leaf on its owner
+        for j in range(len(g["level"])):
+            q = int(g["owner"][j])
+            mask = (
+                (fs[q].level == g["level"][j])
+                & (fs[q].tree == g["tree"][j])
+                & (fs[q].anchor == g["anchor"][j]).all(1)
+                & (fs[q].stype == g["stype"][j])
+            )
+            assert mask.any()
+
+
+def test_iterate_faces():
+    comm = F.SimComm(1)
+    fs = F.new_uniform(3, 1, 2, comm)
+    seen = {}
+
+    def face_fn(f, pairs):
+        seen["pairs"] = pairs
+        return len(pairs)
+
+    F.iterate(fs[0], face_fn=face_fn)
+    pairs = seen["pairs"]
+    # each interior face appears exactly once; count faces of uniform level-2
+    # refinement of one tet: interior faces = (4 faces * n - boundary) / 2
+    n = fs[0].num_local
+    # boundary faces of the root tet: 4 faces, each covered by 4^2 level-2
+    # triangle faces
+    boundary = 4 * 16
+    assert len(pairs) == (4 * n - boundary) // 2

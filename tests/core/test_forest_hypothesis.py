@@ -1,0 +1,59 @@
+"""Hypothesis property tests for forest invariants under random adaptation."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import forest as F
+
+
+@given(st.integers(2, 3), st.integers(0, 2**31 - 1), st.integers(1, 4))
+@settings(max_examples=6, deadline=None)
+def test_random_adapt_preserves_invariants(d, seed, passes):
+    """Any sequence of random refine/coarsen flags keeps the forest valid:
+    TM-sorted, non-overlapping, inside root, volume-complete."""
+    comm = F.SimComm(2)
+    fs = F.new_uniform(d, 2, 2, comm)
+    rng = np.random.default_rng(seed)
+    for _ in range(passes):
+        def cb(tree, elems, r=rng):
+            return r.integers(-1, 2, size=len(tree)).astype(np.int32)
+        fs = [F.adapt(f, cb) for f in fs]
+        assert F.validate(fs)
+    fs = F.partition(fs, comm)
+    assert F.validate(fs)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=4, deadline=None)
+def test_partition_weighted_random_preserves_set(seed):
+    """Weighted partition is a pure redistribution: the global (tree, key)
+    multiset is unchanged and loads are balanced."""
+    comm = F.SimComm(4)
+    fs = F.new_uniform(3, 2, 2, comm)
+    rng = np.random.default_rng(seed)
+    fs = [F.adapt(f, lambda t, e: rng.integers(0, 2, size=len(t)).astype(np.int32))
+          for f in fs]
+    before = sorted(zip(np.concatenate([f.tree for f in fs]).tolist(),
+                        np.concatenate([f.keys for f in fs]).tolist()))
+    ws = [rng.uniform(0.1, 10.0, size=f.num_local) for f in fs]
+    out = F.partition(fs, comm, weights=ws)
+    after = sorted(zip(np.concatenate([f.tree for f in out]).tolist(),
+                       np.concatenate([f.keys for f in out]).tolist()))
+    assert before == after
+    assert F.validate(out)
+
+
+@given(st.integers(2, 3), st.integers(0, 2**31 - 1))
+@settings(max_examples=4, deadline=None)
+def test_balance_idempotent(d, seed):
+    """balance(balance(x)) == balance(x)."""
+    comm = F.SimComm(1)
+    fs = F.new_uniform(d, 1, 1, comm)
+    rng = np.random.default_rng(seed)
+    for _ in range(3):
+        fs = [F.adapt(f, lambda t, e: (rng.random(len(t)) < 0.3).astype(np.int32))
+              for f in fs]
+    b1 = F.balance(fs, comm)
+    b2 = F.balance(b1, comm)
+    np.testing.assert_array_equal(b1[0].keys, b2[0].keys)
+    np.testing.assert_array_equal(b1[0].level, b2[0].level)

@@ -1,0 +1,236 @@
+"""Property tests for the vectorized element algorithms vs. Python oracles."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ops2d, ops3d, simplex, root
+from repro.core import u64 as u64m
+from repro.core import reference as R
+from repro.core.types import Simplex
+
+OPS = {2: ops2d, 3: ops3d}
+
+
+def rand_simplices(d, n, max_level, seed):
+    """Random valid elements by decoding random consecutive indices."""
+    o = OPS[d]
+    rng = np.random.default_rng(seed)
+    lv = rng.integers(1, max_level + 1, size=n)
+    ids = np.array([rng.integers(0, o.num_elements(l)) for l in lv], np.uint64)
+    return o.from_linear_id(u64m.from_int(ids), jnp.asarray(lv, jnp.int32))
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_linear_id_roundtrip_deep_levels(d):
+    o = OPS[d]
+    s = rand_simplices(d, 256, o.L, seed=1)
+    ids = o.linear_id(s)
+    s2 = o.from_linear_id(ids, s.level)
+    np.testing.assert_array_equal(np.asarray(s2.anchor), np.asarray(s.anchor))
+    np.testing.assert_array_equal(np.asarray(s2.stype), np.asarray(s.stype))
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_linear_id_matches_reference(d):
+    o = OPS[d]
+    s = rand_simplices(d, 32, 5, seed=2)
+    ids = u64m.to_np(o.linear_id(s))
+    A, L, B = np.asarray(s.anchor), np.asarray(s.level), np.asarray(s.stype)
+    for i in range(len(ids)):
+        tet = (tuple(int(x) for x in A[i]), int(L[i]), int(B[i]))
+        assert int(ids[i]) == R.ref_linear_id(d, tet)
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_uniform_enumeration_matches_tm_order(d):
+    o = OPS[d]
+    lvl = 2
+    ref = R.ref_uniform_level(d, lvl)
+    n = o.num_elements(lvl)
+    s = o.from_linear_id(u64m.from_int(np.arange(n, dtype=np.uint64)), jnp.full((n,), lvl))
+    got = [
+        (tuple(int(x) for x in np.asarray(s.anchor)[i]), lvl, int(np.asarray(s.stype)[i]))
+        for i in range(n)
+    ]
+    assert got == ref
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_parent_child_roundtrip(d):
+    o = OPS[d]
+    s = rand_simplices(d, 128, o.L - 1, seed=3)
+    for i in range(o.nc):
+        c = o.child_tm(s, i)
+        p = o.parent(c)
+        np.testing.assert_array_equal(np.asarray(p.anchor), np.asarray(s.anchor))
+        np.testing.assert_array_equal(np.asarray(p.stype), np.asarray(s.stype))
+        np.testing.assert_array_equal(np.asarray(o.local_index(c)), np.full(s.shape, i))
+        # Bey/TM index conversion consistency (Algorithm 4.5)
+        bey = o.LOCAL_TO_BEY[s.stype, i]
+        c2 = o.child_bey(s, bey)
+        np.testing.assert_array_equal(np.asarray(c2.anchor), np.asarray(c.anchor))
+        np.testing.assert_array_equal(np.asarray(c2.stype), np.asarray(c.stype))
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_children_against_reference(d):
+    o = OPS[d]
+    s = rand_simplices(d, 16, 4, seed=4)
+    A, L, B = np.asarray(s.anchor), np.asarray(s.level), np.asarray(s.stype)
+    for i in range(len(L)):
+        tet = (tuple(int(x) for x in A[i]), int(L[i]), int(B[i]))
+        want = R.ref_children_bey(d, tet)
+        for bey in range(o.nc):
+            c = o.child_bey(Simplex(s.anchor[i], s.level[i], s.stype[i]), bey)
+            got = (tuple(int(x) for x in np.asarray(c.anchor)), int(c.level), int(c.stype))
+            assert got == want[bey]
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_successor_predecessor(d):
+    o = OPS[d]
+    lvl = 3
+    n = o.num_elements(lvl)
+    ids = np.arange(n - 1, dtype=np.uint64)
+    s = o.from_linear_id(u64m.from_int(ids), jnp.full((n - 1,), lvl))
+    succ = o.successor(s)
+    back = o.predecessor(succ)
+    np.testing.assert_array_equal(np.asarray(back.anchor), np.asarray(s.anchor))
+    np.testing.assert_array_equal(np.asarray(back.stype), np.asarray(s.stype))
+    got_ids = u64m.to_np(o.linear_id(succ))
+    np.testing.assert_array_equal(got_ids, ids + 1)
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_successor_matches_paper_recursion(d):
+    o = OPS[d]
+    lvl = 4 if d == 2 else 3
+    rng = np.random.default_rng(5)
+    ids = rng.integers(0, o.num_elements(lvl) - 1, size=16).astype(np.uint64)
+    s = o.from_linear_id(u64m.from_int(ids), jnp.full((16,), lvl))
+    succ = o.successor(s)
+    A, B = np.asarray(s.anchor), np.asarray(s.stype)
+    SA, SB = np.asarray(succ.anchor), np.asarray(succ.stype)
+    for i in range(16):
+        tet = (tuple(int(x) for x in A[i]), lvl, int(B[i]))
+        want = R.ref_successor(d, tet)
+        assert (tuple(int(x) for x in SA[i]), lvl, int(SB[i])) == want
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_face_neighbor_involution(d):
+    o = OPS[d]
+    s = rand_simplices(d, 256, o.L, seed=6)
+    for f in range(d + 1):
+        nb, fd = o.face_neighbor(s, f)
+        back, f2 = o.face_neighbor(nb, fd)
+        np.testing.assert_array_equal(np.asarray(back.anchor), np.asarray(s.anchor))
+        np.testing.assert_array_equal(np.asarray(back.stype), np.asarray(s.stype))
+        np.testing.assert_array_equal(np.asarray(f2), np.full(s.shape, f))
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_neighbor_shares_d_vertices(d):
+    """Geometric check: a face neighbor shares exactly d corner nodes."""
+    o = OPS[d]
+    s = rand_simplices(d, 64, 6, seed=7)
+    coords = np.asarray(o.coordinates(s))
+    for f in range(d + 1):
+        nb, _ = o.face_neighbor(s, f)
+        nc = np.asarray(o.coordinates(nb))
+        for i in range(64):
+            a = {tuple(v) for v in coords[i].tolist()}
+            b = {tuple(v) for v in nc[i].tolist()}
+            assert len(a & b) == d
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_is_ancestor_vs_oracle(d):
+    o = OPS[d]
+    anc_lvl = 1
+    ref_anc = R.ref_uniform_level(d, anc_lvl)
+    ref_dsc = R.ref_uniform_level(d, anc_lvl + 2)
+    for ta in ref_anc:
+        a = simplex(np.array(ta[0]), ta[1], ta[2])
+        for td in ref_dsc:
+            nsim = simplex(np.array(td[0]), td[1], td[2])
+            got = bool(o.is_ancestor(a, nsim))
+            want = R.ref_is_descendant(d, td, ta)
+            assert got == want, (ta, td)
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_theorem16_locality(d):
+    """Theorem 16 (iii): descendants of T are contiguous in the SFC order."""
+    o = OPS[d]
+    lvl, dl = 1, 2
+    coarse = R.ref_uniform_level(d, lvl)
+    fine = R.ref_uniform_level(d, lvl + dl)  # already TM-sorted
+    for ta in coarse:
+        a = simplex(np.array(ta[0]), ta[1], ta[2])
+        flags = []
+        for td in fine:
+            flags.append(R.ref_is_descendant(d, td, ta))
+        arr = np.array(flags)
+        (idx,) = np.nonzero(arr)
+        assert len(idx) == o.nc ** dl
+        assert idx[-1] - idx[0] + 1 == len(idx), "descendants not contiguous"
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_morton_key_prefix_property(d):
+    """Theorem 16 (i)+(ii) via keys: ancestor keys are <= and prefix-aligned."""
+    o = OPS[d]
+    s = rand_simplices(d, 256, o.L, seed=8)
+    anc = o.ancestor_at_level(s, jnp.maximum(s.level - 3, 0))
+    ks = u64m.to_np(o.morton_key(s))
+    ka = u64m.to_np(o.morton_key(anc))
+    lv = np.asarray(anc.level)
+    # key(anc) is key(s) with the fine digits zeroed
+    shift = np.uint64(d) * (np.uint64(o.L) - lv.astype(np.uint64))
+    np.testing.assert_array_equal(ka >> shift, ks >> shift)
+    assert np.all(ka <= ks)
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_type_ratios_prop8(d):
+    """Proposition 8: types equidistribute in uniform refinements."""
+    o = OPS[d]
+    lvl = 4 if d == 3 else 6
+    n = o.num_elements(lvl)
+    s = o.from_linear_id(u64m.from_int(np.arange(n, dtype=np.uint64)), jnp.full((n,), lvl))
+    counts = np.bincount(np.asarray(s.stype), minlength=o.nt)
+    ratios = counts / n
+    assert np.all(np.abs(ratios - 1 / o.nt) < 0.05), ratios
+
+
+@given(st.integers(0, 2**63 - 1), st.integers(0, 2**63 - 1))
+@settings(max_examples=200, deadline=None)
+def test_u64_arithmetic(a, b):
+    ua, ub = u64m.from_int(a), u64m.from_int(b)
+    assert int(u64m.to_np(u64m.add(ua, ub))) == (a + b) % 2**64
+    assert int(u64m.to_np(u64m.sub(ua, ub))) == (a - b) % 2**64
+    assert bool(u64m.lt(ua, ub)) == (a < b)
+    assert bool(u64m.le(ua, ub)) == (a <= b)
+    assert bool(u64m.eq(ua, ub)) == (a == b)
+    for k in (0, 1, 3, 31, 32, 33, 63):
+        assert int(u64m.to_np(u64m.shl(ua, k))) == (a << k) % 2**64
+        assert int(u64m.to_np(u64m.shr(ua, k))) == a >> k
+        kk = jnp.int32(k)
+        assert int(u64m.to_np(u64m.select_shl(ua, kk, 63))) == (a << k) % 2**64
+        assert int(u64m.to_np(u64m.select_shr(ua, kk, 63))) == a >> k
+
+
+@given(st.integers(1, 5), st.data())
+@settings(max_examples=30, deadline=None)
+def test_hypothesis_roundtrips_3d(lvl, data):
+    o = ops3d
+    I = data.draw(st.integers(0, o.num_elements(lvl) - 1))
+    s = o.from_linear_id(u64m.from_int(I), lvl)
+    assert int(u64m.to_np(o.linear_id(s))) == I
+    if lvl < o.L:
+        kids = o.children_tm(s)
+        ids = u64m.to_np(o.linear_id(kids))
+        np.testing.assert_array_equal(ids, I * o.nc + np.arange(o.nc, dtype=np.uint64))

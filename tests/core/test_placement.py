@@ -1,0 +1,66 @@
+"""Tests for SFC-partition-based load balancing (placement.py)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import placement as P
+
+
+@given(st.lists(st.floats(0.0, 100.0), min_size=8, max_size=256), st.integers(2, 16))
+@settings(max_examples=50, deadline=None)
+def test_target_ranks_contiguous_monotone(ws, nr):
+    w = jnp.asarray(np.array(ws, np.float32))
+    t = np.asarray(P.target_ranks(w, nr))
+    assert (np.diff(t) >= 0).all()
+    assert t.min() >= 0 and t.max() <= nr - 1
+
+
+def test_uniform_weights_perfectly_balanced():
+    w = jnp.ones(128)
+    t = np.asarray(P.target_ranks(w, 8))
+    counts = np.bincount(t, minlength=8)
+    assert (counts == 16).all()
+    off = np.asarray(P.partition_offsets(w, 8))
+    np.testing.assert_array_equal(off, np.arange(9) * 16)
+
+
+def test_weighted_imbalance_bounded():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.exponential(1.0, size=4096).astype(np.float32))
+    t = P.target_ranks(w, 16)
+    imb = float(P.imbalance(w, t, 16))
+    # SFC partition guarantees load <= mean + max_item; here items are small
+    assert imb < 1.10
+
+
+def test_expert_placement_vs_naive():
+    """Skewed expert loads: SFC-weighted placement beats uniform blocking."""
+    rng = np.random.default_rng(1)
+    loads = jnp.asarray((rng.zipf(1.5, size=256) % 1000 + 1).astype(np.float32))
+    dev, imb = P.expert_placement(loads, 16)
+    naive = jnp.repeat(jnp.arange(16), 256 // 16)
+    imb_naive = float(P.imbalance(loads, naive, 16))
+    assert float(imb) <= imb_naive + 1e-6
+    # contiguity
+    assert (np.diff(np.asarray(dev)) >= 0).all()
+
+
+def test_document_partition_token_balance():
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(100, 4096, size=2048).astype(np.float32))
+    rank, imb = P.document_partition(toks, 32)
+    assert float(imb) < 1.05
+
+
+def test_page_order_is_permutation_and_local():
+    order = np.asarray(P.page_order(16, 8))
+    flat = order.reshape(-1)
+    assert sorted(flat.tolist()) == list(range(16 * 8))
+    # locality: consecutive pages of one request are on average closer in the
+    # physical order than under row-major layout across requests
+    d_sfc = np.abs(np.diff(order, axis=1)).mean()
+    rowmajor = np.arange(16 * 8).reshape(8, 16).T.reshape(8, 16)  # request-major
+    d_naive = np.abs(np.diff(rowmajor, axis=1)).mean()
+    assert d_sfc < d_naive

@@ -1,0 +1,190 @@
+"""Cross-check the derived SFC tables against the paper's printed tables.
+
+Every legible entry of the paper's Tables 1-8 / Fig. 8 is transcribed here.
+NOTE on Table 2 (3D), rows b=1 and b=3: the printed T_4/T_5 entries in the
+paper are inconsistent with the paper's own Definition 13 and its Table 6
+(see DESIGN.md "Paper errata"); the values asserted here are the ones
+implied by Definition 13 + Table 1 + Table 6, which our derivation produces.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.tables import get_tables
+
+
+# ----------------------------------------------------------------- 2D tables
+def test_table1_2d_children_types():
+    t = get_tables(2)
+    assert t.child_type.tolist() == [[0, 0, 0, 1], [1, 1, 1, 0]]
+
+
+def test_table2_2d_local_indices():
+    t = get_tables(2)
+    assert t.bey_to_local.tolist() == [[0, 1, 3, 2], [0, 2, 3, 1]]
+
+
+def test_fig8_2d_parent_type():
+    t = get_tables(2)
+    # rows: cube-id c = 0..3; cols: type b = 0,1
+    assert t.parent_type.tolist() == [[0, 1], [0, 0], [1, 1], [0, 1]]
+
+
+def test_table3_2d_face_neighbors():
+    t = get_tables(2)
+    # N.b = 1 - T.b and dual face f~ = 2 - f (paper Table 3)
+    for b in range(2):
+        for f in range(3):
+            assert t.neighbor_type[b, f] == 1 - b
+            assert t.neighbor_face[b, f] == 2 - f
+    # offsets: b=0: f0 -> x+h, f1 -> 0, f2 -> y-h; b=1: f0 -> y+h, f2 -> x-h
+    assert t.neighbor_offset[0].tolist() == [[1, 0], [0, 0], [0, -1]]
+    assert t.neighbor_offset[1].tolist() == [[0, 1], [0, 0], [-1, 0]]
+
+
+def test_tables678_2d():
+    t = get_tables(2)
+    # Table 6: I_loc by (cube-id, own type); paper prints rows b, cols c.
+    assert t.local_index.T.tolist() == [[0, 1, 1, 3], [0, 2, 2, 3]]
+    # Table 7: cube-id of TM-child iloc for parent type P.b
+    assert t.cube_id_of_local.tolist() == [[0, 1, 1, 3], [0, 2, 2, 3]]
+    # Table 8: type of TM-child iloc for parent type P.b
+    assert t.type_of_local.tolist() == [[0, 0, 1, 0], [1, 0, 1, 1]]
+
+
+# ----------------------------------------------------------------- 3D tables
+def test_table1_3d_children_types():
+    t = get_tables(3)
+    want = [
+        [0, 0, 0, 0, 4, 5, 2, 1],
+        [1, 1, 1, 1, 3, 2, 5, 0],
+        [2, 2, 2, 2, 0, 1, 4, 3],
+        [3, 3, 3, 3, 5, 4, 1, 2],
+        [4, 4, 4, 4, 2, 3, 0, 5],
+        [5, 5, 5, 5, 1, 0, 3, 4],
+    ]
+    assert t.child_type.tolist() == want
+
+
+def test_table2_3d_local_indices():
+    t = get_tables(3)
+    # Rows b=1,3: paper-printed T_4/T_5 entries are (2,3); Definition 13 with
+    # Table 1 gives (3,2) — matching the paper's own Table 6.  See module doc.
+    want = [
+        [0, 1, 4, 7, 2, 3, 6, 5],
+        [0, 1, 5, 7, 3, 2, 6, 4],
+        [0, 3, 4, 7, 1, 2, 6, 5],
+        [0, 1, 6, 7, 3, 2, 4, 5],
+        [0, 3, 5, 7, 1, 2, 4, 6],
+        [0, 3, 6, 7, 2, 1, 4, 5],
+    ]
+    assert t.bey_to_local.tolist() == want
+
+
+def test_fig8_3d_parent_type():
+    t = get_tables(3)
+    want = [
+        [0, 1, 2, 3, 4, 5],
+        [0, 1, 1, 1, 0, 0],
+        [2, 2, 2, 3, 3, 3],
+        [1, 1, 2, 2, 2, 1],
+        [5, 5, 4, 4, 4, 5],
+        [0, 0, 0, 5, 5, 5],
+        [4, 3, 3, 3, 4, 4],
+        [0, 1, 2, 3, 4, 5],
+    ]
+    assert t.parent_type.tolist() == want
+
+
+def test_table4_3d_face_neighbors():
+    t = get_tables(3)
+    # types
+    assert t.neighbor_type.tolist() == [
+        [4, 5, 1, 2],
+        [3, 2, 0, 5],
+        [0, 1, 3, 4],
+        [5, 4, 2, 1],
+        [2, 3, 5, 0],
+        [1, 0, 4, 3],
+    ]
+    # dual faces: always (3, 1, 2, 0)
+    assert t.neighbor_face.tolist() == [[3, 1, 2, 0]] * 6
+    # anchor offsets (units of h), from paper Table 4
+    assert t.neighbor_offset[0].tolist() == [[1, 0, 0], [0, 0, 0], [0, 0, 0], [0, -1, 0]]
+    assert t.neighbor_offset[1].tolist() == [[1, 0, 0], [0, 0, 0], [0, 0, 0], [0, 0, -1]]
+    assert t.neighbor_offset[2].tolist() == [[0, 1, 0], [0, 0, 0], [0, 0, 0], [0, 0, -1]]
+    assert t.neighbor_offset[3].tolist() == [[0, 1, 0], [0, 0, 0], [0, 0, 0], [-1, 0, 0]]
+    assert t.neighbor_offset[4].tolist() == [[0, 0, 1], [0, 0, 0], [0, 0, 0], [-1, 0, 0]]
+    assert t.neighbor_offset[5].tolist() == [[0, 0, 1], [0, 0, 0], [0, 0, 0], [0, -1, 0]]
+
+
+def test_table5_3d_outside_perm():
+    t = get_tables(3)
+    # (x_i, x_j, x_k) per type; axes 0=x, 1=y, 2=z (paper Table 5)
+    want = [[0, 1, 2], [0, 2, 1], [1, 2, 0], [1, 0, 2], [2, 0, 1], [2, 1, 0]]
+    assert t.outside_perm.tolist() == want
+
+
+def test_table6_3d_local_index():
+    t = get_tables(3)
+    want_rows_b = [
+        [0, 1, 1, 4, 1, 4, 4, 7],
+        [0, 1, 2, 5, 2, 5, 4, 7],
+        [0, 2, 3, 4, 1, 6, 5, 7],
+        [0, 3, 1, 5, 2, 4, 6, 7],
+        [0, 2, 2, 6, 3, 5, 5, 7],
+        [0, 3, 3, 6, 3, 6, 6, 7],
+    ]
+    assert t.local_index.T.tolist() == want_rows_b
+
+
+def test_table7_3d_cube_id_of_local():
+    t = get_tables(3)
+    want = [
+        [0, 1, 1, 1, 5, 5, 5, 7],
+        [0, 1, 1, 1, 3, 3, 3, 7],
+        [0, 2, 2, 2, 3, 3, 3, 7],
+        [0, 2, 2, 2, 6, 6, 6, 7],
+        [0, 4, 4, 4, 6, 6, 6, 7],
+        [0, 4, 4, 4, 5, 5, 5, 7],
+    ]
+    assert t.cube_id_of_local.tolist() == want
+
+
+def test_prop23_diag_types():
+    # (52g): anchor on the main diagonal -> outside iff N.b != T.b
+    for d in (2, 3):
+        t = get_tables(d)
+        n = t.num_types
+        want = 1 - np.eye(n, dtype=np.int8)
+        if d == 3:
+            assert np.array_equal(t.outside_types_diag, want)
+
+
+def test_prop23_e1_e2_root_types():
+    """Paper Sec 4.4: a tet with anchor in E_1 (x=z) can have types {0,1,2};
+    in E_2 (y=z) types {0,4,5} (for the type-0 root)."""
+    t = get_tables(3)
+    inside_ik = {b for b in range(6) if t.outside_types_ik[0, b] == 0}
+    inside_kj = {b for b in range(6) if t.outside_types_kj[0, b] == 0}
+    assert inside_ik == {0, 1, 2}
+    assert inside_kj == {0, 4, 5}
+
+
+def test_sigma_is_permutation():
+    for d in (2, 3):
+        t = get_tables(d)
+        for b in range(t.num_types):
+            assert sorted(t.bey_to_local[b].tolist()) == list(range(t.num_children))
+            # inverse property
+            for i in range(t.num_children):
+                assert t.local_to_bey[b, t.bey_to_local[b, i]] == i
+
+
+def test_corner_children_keep_type():
+    """Paper Table 1 caption: corner children T_0..T_d have the parent type."""
+    for d in (2, 3):
+        t = get_tables(d)
+        for b in range(t.num_types):
+            for i in range(d + 1):
+                assert t.child_type[b, i] == b

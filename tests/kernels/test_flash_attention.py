@@ -1,0 +1,49 @@
+"""Pallas flash attention vs the plain-attention oracle (interpret mode)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.models.layers import _plain_attention
+
+
+CASES = [
+    # (B, S, H, KV, hd, dtype, window)
+    (1, 256, 2, 2, 32, jnp.float32, None),
+    (2, 256, 4, 2, 64, jnp.float32, None),
+    (1, 512, 4, 1, 32, jnp.float32, None),     # MQA
+    (2, 256, 4, 4, 32, jnp.bfloat16, None),
+    (1, 512, 2, 2, 32, jnp.float32, 100),      # sliding window
+]
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,dtype,window", CASES)
+def test_flash_matches_plain(B, S, H, KV, hd, dtype, window):
+    key = jax.random.PRNGKey(S + H)
+    q = jax.random.normal(key, (B, S, H, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=128, block_k=128, interpret=True)
+    want = _plain_attention(q, k, v, causal=True, window=window, q_offset=0,
+                            scale=1 / math.sqrt(hd))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_block_sizes():
+    B, S, H, KV, hd = 1, 512, 2, 2, 32
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
+    ref = flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    for bq, bk in ((256, 128), (128, 256), (512, 512)):
+        out = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
