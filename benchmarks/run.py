@@ -16,9 +16,16 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
                          (derived = exactness)
   moe_placement          SFC expert placement quality (derived = imbalance
                          ratio naive/sfc)
+  forest_backends        Adapt/Balance wall time per element-ops backend
+                         (reference / jnp / pallas) at several mesh sizes;
+                         asserts bit-identical forests and writes
+                         BENCH_forest.json (derived = speedup vs reference)
   roofline_summary       reads results/dryrun/*.json (derived = roofline
                          fraction); run `python -m repro.launch.dryrun --all`
                          first
+
+CLI: --suite NAME[,NAME...] (default: all), --tiny (smallest sizes only,
+for CI smoke runs).
 """
 
 from __future__ import annotations
@@ -129,25 +136,35 @@ def element_ops():
         row(f"element_op_{name}", us, f"{us * 1000 / n:.1f}ns/elem")
 
 
-def pallas_kernels():
+def pallas_kernels(tiny: bool = False):
     import jax.numpy as jnp
     from repro.core import ops3d, u64
     from repro.kernels import ops as kops
-    n = 4096
+    n = 256 if tiny else 4096
     rng = np.random.default_rng(1)
     lv = jnp.asarray(rng.integers(1, ops3d.L, size=n), jnp.int32)
     ids = u64.from_int(rng.integers(0, 2 ** 40, size=n).astype(np.uint64))
     s = ops3d.from_linear_id(ids, lv)
+    block = min(1024, n)
     want = ops3d.morton_key(s)
-    us = _time(lambda: kops.morton_key(3, s), n=2)
-    hi, lo = kops.morton_key(3, s)
+    us = _time(lambda: kops.morton_key(3, s, block), n=2)
+    hi, lo = kops.morton_key(3, s, block)
     exact = int((np.asarray(hi) == np.asarray(want.hi)).all()
                 and (np.asarray(lo) == np.asarray(want.lo)).all())
     row("pallas_morton_key_interpret", us, f"exact={exact}")
-    nb_k, dual_k = kops.face_neighbor(3, s, 0)
+    nb_k, dual_k = kops.face_neighbor(3, s, 0, block)
     nb_r, dual_r = ops3d.face_neighbor(s, jnp.int32(0))
     exact = int(np.array_equal(np.asarray(nb_k.anchor), np.asarray(nb_r.anchor)))
     row("pallas_face_neighbor_interpret", 0.0, f"exact={exact}")
+    p_k = kops.parent(3, s, block)
+    p_r = ops3d.parent(s)
+    exact = int(np.array_equal(np.asarray(p_k.anchor), np.asarray(p_r.anchor))
+                and np.array_equal(np.asarray(p_k.stype), np.asarray(p_r.stype)))
+    row("pallas_parent_interpret", 0.0, f"exact={exact}")
+    in_k = kops.is_inside_root(3, nb_k, block)
+    in_r = ops3d.is_inside_root(nb_r)
+    exact = int(np.array_equal(np.asarray(in_k), np.asarray(in_r)))
+    row("pallas_is_inside_root_interpret", 0.0, f"exact={exact}")
 
 
 def moe_placement():
@@ -160,6 +177,88 @@ def moe_placement():
     dev, imb = expert_placement(load, 16)
     ratio = float(imbalance(load, naive, 16)) / float(imb)
     row("moe_sfc_placement", us, f"imbalance_gain={ratio:.2f}x")
+
+
+def forest_backends(tiny: bool = False):
+    """Adapt/Balance wall time per element-ops backend at several mesh sizes.
+
+    Asserts bit-identical forests across backends and writes BENCH_forest.json
+    (per size/backend timings + speedups vs the reference backend).
+    """
+    from repro.core import batch
+    from repro.core import forest as F
+
+    d = 3
+    levels = [2] if tiny else [2, 3, 4]
+    backends = ["reference", "jnp", "pallas"]
+    # Interpret-mode Pallas on CPU pays a per-shape compile that dwarfs the
+    # runtime; cap the pallas rows to the two smallest meshes (still "several
+    # sizes"); on TPU all sizes run compiled.
+    pallas_levels = set(levels[:2])
+    report = {"suite": "forest_backends", "d": d, "trees": 2, "ranks": 4,
+              "tiny": tiny, "sizes": []}
+
+    for level in levels:
+        comm = F.SimComm(4)
+        base = F.new_uniform(d, 2, level, comm)
+        n0 = F.count_global(base)
+
+        def corner_cb(tree, elems, cap=level + 2):
+            a = np.asarray(elems.anchor)
+            l = np.asarray(elems.level)
+            return ((a.sum(1) == 0) & (l < cap)).astype(np.int32)
+
+        entry = {"level": level, "elements": n0, "backends": {}}
+        ref_sig = None
+        for be in backends:
+            if be == "pallas" and level not in pallas_levels:
+                entry["backends"][be] = {"skipped": "interpret-mode size cap on CPU"}
+                continue
+            with batch.use_backend(be):
+                us_adapt = _time(
+                    lambda: [F.adapt(f, corner_cb, recursive=True) for f in base], n=2
+                )
+                fs = [F.adapt(f, corner_cb, recursive=True) for f in base]
+                us_bal = _time(lambda: F.balance(fs, comm), n=2)
+                out = F.balance(fs, comm)
+                sig = (
+                    np.concatenate([f.keys for f in out]),
+                    np.concatenate([f.level for f in out]),
+                    np.concatenate([f.tree for f in out]),
+                )
+                if ref_sig is None:
+                    ref_sig = sig
+                identical = all(np.array_equal(a, b) for a, b in zip(sig, ref_sig))
+                assert identical, f"backend {be} diverged from reference at level {level}"
+                rec = {
+                    "adapt_us": us_adapt,
+                    "balance_us": us_bal,
+                    "final_elements": F.count_global(out),
+                    "identical_to_reference": identical,
+                }
+                entry["backends"][be] = rec
+                row(f"forest_{be}_adapt_lvl{level}", us_adapt, f"n={n0}:identical={int(identical)}")
+                row(f"forest_{be}_balance_lvl{level}", us_bal, f"n={n0}")
+        ref = entry["backends"]["reference"]
+        for be, rec in entry["backends"].items():
+            if "adapt_us" in rec:
+                rec["adapt_speedup_vs_reference"] = ref["adapt_us"] / rec["adapt_us"]
+                rec["balance_speedup_vs_reference"] = ref["balance_us"] / rec["balance_us"]
+        report["sizes"].append(entry)
+
+    largest = report["sizes"][-1]
+    best = max(
+        rec["adapt_speedup_vs_reference"]
+        for be, rec in largest["backends"].items()
+        if be != "reference" and "adapt_speedup_vs_reference" in rec
+    )
+    row("forest_backends_largest_speedup", 0.0, f"{best:.2f}x_batched_vs_reference")
+    report["largest_mesh_batched_speedup"] = best
+    # tiny (CI smoke) runs must not clobber the full benchmark artifact
+    name = "BENCH_forest_tiny.json" if tiny else "BENCH_forest.json"
+    out_path = Path(__file__).resolve().parents[1] / name
+    out_path.write_text(json.dumps(report, indent=2))
+    row("forest_backends_json", 0.0, str(out_path))
 
 
 def roofline_summary():
@@ -177,16 +276,40 @@ def roofline_summary():
             f"frac={r['roofline_fraction']:.3f}:bound={r['bottleneck']}")
 
 
-def main() -> None:
+SUITES = {
+    "fig11_new_scaling": lambda tiny: fig11_new_scaling(),
+    "fig11_new_ranks": lambda tiny: fig11_new_ranks(),
+    "fig12_adapt_fractal": lambda tiny: fig12_adapt_fractal(),
+    "partition_weighted": lambda tiny: partition_weighted(),
+    "element_ops": lambda tiny: element_ops(),
+    "pallas_kernels": pallas_kernels,
+    "moe_placement": lambda tiny: moe_placement(),
+    "forest_backends": forest_backends,
+    "roofline_summary": lambda tiny: roofline_summary(),
+}
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--suite", default="all",
+        help="comma-separated suite names (default: all); choices: "
+             + ",".join(SUITES),
+    )
+    ap.add_argument(
+        "--tiny", action="store_true",
+        help="smallest problem sizes only (CI smoke runs)",
+    )
+    args = ap.parse_args(argv)
+    names = list(SUITES) if args.suite == "all" else args.suite.split(",")
+    unknown = [n for n in names if n not in SUITES]
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown}; choices: {list(SUITES)}")
     print("name,us_per_call,derived")
-    fig11_new_scaling()
-    fig11_new_ranks()
-    fig12_adapt_fractal()
-    partition_weighted()
-    element_ops()
-    pallas_kernels()
-    moe_placement()
-    roofline_summary()
+    for n in names:
+        SUITES[n](args.tiny)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,32 @@
+"""Repo-level pytest config: import paths and property-test example caps.
+
+* Puts `src/` on sys.path so `PYTHONPATH=src` is not required to run pytest.
+* Puts `tests/` on sys.path so test modules can import the offline
+  property-test shim (`tests/_pbt.py`) when `hypothesis` is unavailable.
+* When real hypothesis IS installed, registers a `tier1` profile that caps
+  example counts (same knob as the shim: PBT_MAX_EXAMPLES) so the default
+  run finishes in minutes on a single CPU core.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent
+for _p in (_ROOT / "src", _ROOT / "tests", _ROOT):
+    _s = str(_p)
+    if _s not in sys.path:
+        sys.path.insert(0, _s)
+
+try:
+    import hypothesis
+
+    _cap = int(os.environ.get("PBT_MAX_EXAMPLES", "25"))
+    hypothesis.settings.register_profile(
+        "tier1", max_examples=_cap, deadline=None, derandomize=True
+    )
+    hypothesis.settings.load_profile("tier1")
+except ImportError:
+    pass

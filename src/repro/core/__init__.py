@@ -5,6 +5,7 @@ Layers:
   types      — the Tet / Simplex SoA data type (10/14-byte encoding at rest)
   u64        — uint32-pair integer arithmetic (TPU-safe 64-bit emulation)
   ops        — vectorized constant-time element algorithms (paper Section 4)
+  batch      — batched element-ops dispatch (reference / jnp / pallas backends)
   reference  — pure-Python oracles (tests only)
   forest     — forest-of-trees AMR: New / Adapt / Partition / Balance / Ghost
   placement  — SFC-based load balancing applied to LM training workloads
@@ -13,6 +14,7 @@ Layers:
 from .tables import MAXLEVEL, SFCTables, get_tables
 from .types import Simplex, root, simplex
 from .ops import SimplexOps, get_ops, ops2d, ops3d
+from .batch import BatchedOps, get_batch_ops, get_backend, set_backend, use_backend
 from . import u64
 
 __all__ = [
@@ -26,5 +28,10 @@ __all__ = [
     "get_ops",
     "ops2d",
     "ops3d",
+    "BatchedOps",
+    "get_batch_ops",
+    "get_backend",
+    "set_backend",
+    "use_backend",
     "u64",
 ]

@@ -1,0 +1,320 @@
+"""Batched element-ops dispatch layer for the forest hot loops.
+
+The paper's New/Adapt/Balance/Ghost pipelines spend essentially all their
+time in constant-time element queries (parent, children, face-neighbor,
+successor, encode/decode — Sections 4.5-4.6).  This module is the single
+seam through which the forest layer reaches that math, with three
+interchangeable backends over `Simplex` batches:
+
+  reference   the existing `SimplexOps` methods, dispatched eagerly op by op
+              (the seed's behaviour; every intermediate materialises).
+  jnp         the same algorithms under `jax.jit` with power-of-two padding
+              buckets, so each op is one fused XLA program and the number of
+              distinct compiled shapes stays O(log n).
+  pallas      the tiled Pallas kernels from `repro.kernels` (interpret mode
+              on CPU, compiled tiles on TPU).
+
+All three produce bit-identical integer results; the backend knob trades
+dispatch overhead against compile time.  Select globally via the
+``REPRO_BACKEND`` env var, `set_backend()`, or the `use_backend()` context
+manager.  Unknown names fall back to `reference`; a `pallas` backend that
+fails its self-test (e.g. no Pallas lowering on this host) falls back to
+`jnp` — both with a warning, never an error.
+
+Future scaling PRs (sharding, multi-device partition) plug in here: a new
+backend only has to implement the eight-method `BatchedOps` surface.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import u64 as u64m
+from .ops import SimplexOps, get_ops
+from .types import Simplex
+
+__all__ = [
+    "BACKENDS",
+    "BatchedOps",
+    "get_backend",
+    "set_backend",
+    "use_backend",
+    "get_batch_ops",
+]
+
+BACKENDS = ("reference", "jnp", "pallas")
+_ENV_VAR = "REPRO_BACKEND"
+_active: str | None = None  # resolved lazily so the env var can be set late
+
+
+def _resolve(name: str, source: str) -> str:
+    name = name.strip().lower()
+    if name not in BACKENDS:
+        warnings.warn(
+            f"unknown element-ops backend {name!r} from {source}; "
+            f"falling back to 'reference' (choices: {BACKENDS})",
+            stacklevel=3,
+        )
+        return "reference"
+    return name
+
+
+def get_backend() -> str:
+    """The active backend name (env var ``REPRO_BACKEND``, default reference)."""
+    global _active
+    if _active is None:
+        _active = _resolve(os.environ.get(_ENV_VAR, "reference"), f"${_ENV_VAR}")
+    return _active
+
+
+def set_backend(name: str) -> None:
+    global _active
+    _active = _resolve(name, "set_backend()")
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Temporarily switch the element-ops backend (tests / benchmarks)."""
+    global _active
+    prev = get_backend()
+    set_backend(name)
+    try:
+        yield
+    finally:
+        _active = prev
+
+
+# ---------------------------------------------------------------- jnp backend
+def _bucket(n: int) -> int:
+    """Next power-of-two batch size (>= 16): bounds jit recompiles to O(log n)."""
+    return max(16, 1 << max(0, n - 1).bit_length())
+
+
+def _pad1(a, m):
+    return jnp.pad(a, [(0, m - a.shape[0])] + [(0, 0)] * (a.ndim - 1))
+
+
+def _pad_simplex(s: Simplex, m: int) -> Simplex:
+    return Simplex(_pad1(s.anchor, m), _pad1(s.level, m), _pad1(s.stype, m))
+
+
+@functools.lru_cache(maxsize=None)
+def _jnp_fns(d: int):
+    o = get_ops(d)
+    return {
+        "morton_key": jax.jit(o.morton_key),
+        "decode": jax.jit(o.decode_key),
+        "parent": jax.jit(o.parent),
+        "parent_and_local_index": jax.jit(lambda s: (o.parent(s), o.local_index(s))),
+        "children": jax.jit(o.children_tm),
+        "face_neighbor": jax.jit(o.face_neighbor),
+        "successor": jax.jit(o.successor),
+        "is_inside_root": jax.jit(o.is_inside_root),
+        "local_index": jax.jit(o.local_index),
+    }
+
+
+# ------------------------------------------------------------- pallas backend
+@functools.lru_cache(maxsize=None)
+def _pallas_ok(d: int) -> bool:
+    """One-element self-test; on failure the pallas backend degrades to jnp."""
+    try:
+        from repro.kernels import ops as kops
+
+        s = Simplex(
+            jnp.zeros((1, d), jnp.int32), jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32)
+        )
+        kops.morton_key(d, s, 16)
+        return True
+    except Exception as e:  # noqa: BLE001 - any lowering failure means fallback
+        warnings.warn(f"pallas backend unavailable for d={d} ({e!r}); using jnp")
+        return False
+
+
+# -------------------------------------------------------------------- dispatch
+class BatchedOps:
+    """Backend-bound batched element ops over `Simplex` arrays of shape (n,).
+
+    The eight methods mirror the paper's constant-time element algorithms;
+    every forest hot loop (adapt's child generation and family-head scan,
+    balance's neighbor sweeps, ghost's boundary pass) consumes exactly this
+    surface.
+    """
+
+    def __init__(self, d: int, backend: str):
+        backend = _resolve(backend, "get_batch_ops()")
+        if backend == "pallas" and not _pallas_ok(d):
+            backend = "jnp"
+        self.d = d
+        self.backend = backend
+        self.ops: SimplexOps = get_ops(d)
+
+    # -- helpers -----------------------------------------------------------
+    def _which(self, n: int) -> str:
+        # Empty batches short-circuit to the eager path (a Pallas grid of 0
+        # tiles is invalid, and there is nothing to fuse anyway).
+        return "reference" if n == 0 else self.backend
+
+    def _jnp(self, name, s: Simplex, *extra):
+        n = s.level.shape[0]
+        m = _bucket(n)
+        out = _jnp_fns(self.d)[name](_pad_simplex(s, m), *extra)
+        return out, n
+
+    @staticmethod
+    def _cut(x, n):
+        return jax.tree_util.tree_map(lambda a: a[:n], x)
+
+    def _pallas(self, fn, s: Simplex, *extra):
+        """Bucket-pad before the jit'd kernel wrapper (same O(log n) compiled
+        shapes as the jnp path), then slice the outputs back."""
+        n = s.level.shape[0]
+        m = _bucket(n)
+        return self._cut(fn(self.d, _pad_simplex(s, m), *extra, min(1024, m)), n)
+
+    # -- API ---------------------------------------------------------------
+    def morton_key(self, s: Simplex) -> u64m.U64:
+        """Level-padded consecutive index (the mixed-level SFC sort key)."""
+        which = self._which(s.level.shape[0])
+        if which == "reference":
+            return self.ops.morton_key(s)
+        if which == "jnp":
+            out, n = self._jnp("morton_key", s)
+            return self._cut(out, n)
+        from repro.kernels import ops as kops
+
+        hi, lo = self._pallas(kops.morton_key, s)
+        return u64m.U64(hi, lo)
+
+    def morton_key_np(self, s: Simplex) -> np.ndarray:
+        """Host-side uint64 keys (the forest's storage format)."""
+        return u64m.to_np(self.morton_key(s))
+
+    def decode(self, key: u64m.U64, level) -> Simplex:
+        """Algorithm 4.8 from a level-padded key (inverse of `morton_key`)."""
+        level = jnp.asarray(level, jnp.int32)
+        which = self._which(key.hi.shape[0])
+        if which == "reference":
+            return self.ops.decode_key(key, level)
+        if which == "jnp":
+            n = key.hi.shape[0]
+            m = _bucket(n)
+            padded = u64m.U64(_pad1(key.hi, m), _pad1(key.lo, m))
+            return self._cut(_jnp_fns(self.d)["decode"](padded, _pad1(level, m)), n)
+        from repro.kernels import ops as kops
+
+        n = key.hi.shape[0]
+        m = _bucket(n)
+        padded = u64m.U64(_pad1(key.hi, m), _pad1(key.lo, m))
+        return self._cut(
+            kops.decode(self.d, padded, _pad1(level, m), min(1024, m)), n
+        )
+
+    def parent(self, s: Simplex) -> Simplex:
+        """Algorithm 4.3."""
+        which = self._which(s.level.shape[0])
+        if which == "reference":
+            return self.ops.parent(s)
+        if which == "jnp":
+            out, n = self._jnp("parent", s)
+            return self._cut(out, n)
+        from repro.kernels import ops as kops
+
+        return self._pallas(kops.parent, s)
+
+    def parent_and_local_index(self, s: Simplex):
+        """Fused Algorithm 4.3 + Table 6: (parent, TM child index) in one
+        pass — the pair every family scan needs together."""
+        which = self._which(s.level.shape[0])
+        if which == "reference":
+            return self.ops.parent(s), self.ops.local_index(s)
+        if which == "jnp":
+            out, n = self._jnp("parent_and_local_index", s)
+            return self._cut(out, n)
+        from repro.kernels import ops as kops
+
+        return self._pallas(kops.parent_and_local_index, s)
+
+    def children(self, s: Simplex) -> Simplex:
+        """All 2^d children in TM order: batch shape (n, 2^d)."""
+        which = self._which(s.level.shape[0])
+        if which == "reference":
+            return self.ops.children_tm(s)
+        if which == "jnp":
+            out, n = self._jnp("children", s)
+            return self._cut(out, n)
+        from repro.kernels import ops as kops
+
+        return self._pallas(kops.children, s)
+
+    def face_neighbor(self, s: Simplex, face):
+        """Algorithm 4.6: (same-level neighbor, dual face)."""
+        which = self._which(s.level.shape[0])
+        if which == "reference":
+            return self.ops.face_neighbor(s, jnp.int32(face))
+        if which == "jnp":
+            out, n = self._jnp("face_neighbor", s, jnp.int32(face))
+            return self._cut(out, n)
+        from repro.kernels import ops as kops
+
+        face = jnp.asarray(face, jnp.int32)
+        if face.ndim:
+            face = _pad1(face, _bucket(s.level.shape[0]))
+        return self._pallas(kops.face_neighbor, s, face)
+
+    def successor(self, s: Simplex) -> Simplex:
+        """Batch Algorithm 4.10: next same-level element along the SFC."""
+        which = self._which(s.level.shape[0])
+        if which == "reference":
+            return self.ops.successor(s)
+        if which == "jnp":
+            out, n = self._jnp("successor", s)
+            return self._cut(out, n)
+        from repro.kernels import ops as kops
+
+        return self._pallas(kops.successor, s)
+
+    def is_inside_root(self, s: Simplex):
+        """Section 4.4 inside-root test (Proposition 23 vs. the root simplex)."""
+        which = self._which(s.level.shape[0])
+        if which == "reference":
+            return self.ops.is_inside_root(s)
+        if which == "jnp":
+            out, n = self._jnp("is_inside_root", s)
+            return self._cut(out, n)
+        from repro.kernels import ops as kops
+
+        return self._pallas(kops.is_inside_root, s)
+
+    def local_index(self, s: Simplex):
+        """TM child index within the parent (paper Table 6)."""
+        which = self._which(s.level.shape[0])
+        if which == "reference":
+            return self.ops.local_index(s)
+        if which == "jnp":
+            out, n = self._jnp("local_index", s)
+            return self._cut(out, n)
+        from repro.kernels import ops as kops
+
+        return self._pallas(kops.local_index, s)
+
+
+@functools.lru_cache(maxsize=None)
+def _cached(d: int, backend: str) -> BatchedOps:
+    return BatchedOps(d, backend)
+
+
+def get_batch_ops(d: int, backend: str | None = None) -> BatchedOps:
+    """The batched element-ops dispatcher for dimension `d`.
+
+    With no explicit `backend`, follows the global knob at every call — so
+    `use_backend(...)` contexts affect forests that were built earlier.
+    """
+    return _cached(d, backend if backend is not None else get_backend())

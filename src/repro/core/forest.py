@@ -9,10 +9,12 @@ This module is the distributed-algorithm layer.  It is written in SPMD style:
 every function computes one rank's view, and cross-rank exchanges go through
 an explicit `Comm` object.  `SimComm` executes P ranks in one process (used
 by tests/benchmarks on this box); the identical call structure maps onto
-jax.distributed / MPI on a real machine.  The heavy per-element math is the
-vectorized `SimplexOps` (gathers + integer ALU — TPU/SIMD friendly), while
-variable-size bookkeeping stays in numpy on the host, matching how meshing
-layers sit next to accelerator compute in production frameworks.
+jax.distributed / MPI on a real machine.  The heavy per-element math goes
+through the batched dispatch layer `repro.core.batch` (reference / jnp /
+pallas backends over `Simplex` batches — gathers + integer ALU, TPU/SIMD
+friendly), while variable-size bookkeeping stays in numpy on the host,
+matching how meshing layers sit next to accelerator compute in production
+frameworks.
 
 Inter-tree face connectivity is intentionally out of scope, exactly as in the
 paper (Balance/Ghost "require additional theoretical work"); we implement
@@ -28,6 +30,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from . import u64 as u64m
+from .batch import BatchedOps, get_batch_ops
 from .ops import SimplexOps, get_ops
 from .types import Simplex
 
@@ -89,6 +92,11 @@ class Forest:
         return get_ops(self.d)
 
     @property
+    def bops(self) -> BatchedOps:
+        """Batched element ops under the globally selected backend."""
+        return get_batch_ops(self.d)
+
+    @property
     def num_local(self) -> int:
         return len(self.level)
 
@@ -97,7 +105,7 @@ class Forest:
 
     def replace_elements(self, anchor, level, stype, tree) -> "Forest":
         s = Simplex(jnp.asarray(anchor), jnp.asarray(level), jnp.asarray(stype))
-        keys = u64m.to_np(self.ops.morton_key(s))
+        keys = self.bops.morton_key_np(s)
         return dataclasses.replace(
             self,
             anchor=np.asarray(anchor, np.int32),
@@ -159,7 +167,10 @@ def new_uniform_rank(d: int, num_trees: int, level: int, rank: int, num_ranks: i
         e_last = g_last - t * n_per_tree if t == trees[-1] else n_per_tree
         ids = np.arange(e_first, e_last, dtype=np.uint64)
         if method == "decode":
-            s = o.from_linear_id(u64m.from_int(ids), jnp.full(len(ids), level, jnp.int32))
+            keys = ids << np.uint64(o.d * (o.L - level))
+            s = get_batch_ops(d).decode(
+                u64m.from_int(keys), jnp.full(len(ids), level, jnp.int32)
+            )
         elif method == "successor":
             s = _range_by_expansion(o, int(e_first), int(e_last), level)
         else:
@@ -234,15 +245,17 @@ AdaptCallback = Callable[[np.ndarray, Simplex], np.ndarray]
 
 
 def _family_heads(f: Forest) -> np.ndarray:
-    """Boolean mask: element i starts a complete family of 2^d siblings."""
-    o, n, nc = f.ops, f.num_local, f.ops.nc
+    """Boolean mask: element i starts a complete family of 2^d siblings.
+
+    One batched parent/local-index/key sweep over all local elements."""
+    b, n, nc = f.bops, f.num_local, f.ops.nc
     heads = np.zeros(n, bool)
     if n < nc:
         return heads
     s = f.simplices()
-    iloc = np.asarray(o.local_index(s))
-    parent = o.parent(s)
-    pkey = u64m.to_np(o.morton_key(parent))
+    parent, iloc = b.parent_and_local_index(s)
+    iloc = np.asarray(iloc)
+    pkey = b.morton_key_np(parent)
     cand = np.nonzero((iloc[: n - nc + 1] == 0) & (f.level[: n - nc + 1] > 0))[0]
     ok = np.ones(len(cand), bool)
     for k in range(1, nc):
@@ -267,6 +280,7 @@ def adapt(f: Forest, callback: AdaptCallback, recursive: bool = False,
     """
     o = f.ops
     nc = o.nc
+    bops = f.bops
     refined_origin = np.zeros(f.num_local, bool)   # created by refine this call
     coarsened_origin = np.zeros(f.num_local, bool)
     for _ in range(max_passes):
@@ -320,7 +334,7 @@ def adapt(f: Forest, callback: AdaptCallback, recursive: bool = False,
         if len(ridx):
             rs = Simplex(jnp.asarray(f.anchor[ridx]), jnp.asarray(f.level[ridx]),
                          jnp.asarray(f.stype[ridx]))
-            kids = o.children_tm(rs)
+            kids = bops.children(rs)
             ka = np.asarray(kids.anchor)      # (m, nc, d)
             kl = np.asarray(kids.level)
             kb = np.asarray(kids.stype)
@@ -334,7 +348,7 @@ def adapt(f: Forest, callback: AdaptCallback, recursive: bool = False,
         if len(hidx):
             hs = Simplex(jnp.asarray(f.anchor[hidx]), jnp.asarray(f.level[hidx]),
                          jnp.asarray(f.stype[hidx]))
-            par = o.parent(hs)
+            par = bops.parent(hs)
             A[offs[hidx]] = np.asarray(par.anchor)
             L[offs[hidx]] = np.asarray(par.level)
             B[offs[hidx]] = np.asarray(par.stype)
@@ -397,6 +411,7 @@ def balance(forests: list[Forest], comm: SimComm, max_rounds: int = 64) -> list[
     """
     d = forests[0].d
     o = get_ops(d)
+    bops = get_batch_ops(d)
     for _ in range(max_rounds):
         # Global sorted (tree, key, level) table — simulator-level shortcut.
         all_tree = np.concatenate([f.tree for f in forests])
@@ -413,9 +428,9 @@ def balance(forests: list[Forest], comm: SimComm, max_rounds: int = 64) -> list[
             s = f.simplices()
             need = np.zeros(f.num_local, bool)
             for face in range(d + 1):
-                nb, _ = o.face_neighbor(s, face)
-                inside = np.asarray(o.is_inside_root(nb))
-                nkey = u64m.to_np(o.morton_key(nb))
+                nb, _ = bops.face_neighbor(s, face)
+                inside = np.asarray(bops.is_inside_root(nb))
+                nkey = bops.morton_key_np(nb)
                 span = np.uint64(1) << (np.uint64(d) * (np.uint64(o.L) - f.level.astype(np.uint64)))
                 # per-tree slices of the global sorted leaf table
                 need_f = np.zeros(f.num_local, bool)
@@ -452,6 +467,7 @@ def ghost(forests: list[Forest], comm: SimComm) -> list[dict]:
     element arrays and their owner ranks."""
     d = forests[0].d
     o = get_ops(d)
+    bops = get_batch_ops(d)
     P = comm.P
     # partition markers: first (tree,key) per rank
     markers = comm.allgather([f.global_first_desc_key() for f in forests])
@@ -478,9 +494,9 @@ def ghost(forests: list[Forest], comm: SimComm) -> list[dict]:
         s = f.simplices()
         cand = []
         for face in range(d + 1):
-            nb, _ = o.face_neighbor(s, face)
-            inside = np.asarray(o.is_inside_root(nb))
-            nkey = u64m.to_np(o.morton_key(nb))
+            nb, _ = bops.face_neighbor(s, face)
+            inside = np.asarray(bops.is_inside_root(nb))
+            nkey = bops.morton_key_np(nb)
             for t in np.unique(f.tree):
                 sel = np.nonzero((f.tree == t) & inside)[0]
                 if not len(sel):
@@ -516,8 +532,7 @@ def ghost(forests: list[Forest], comm: SimComm) -> list[dict]:
         keys = np.array([c[1] for c in uniq], np.uint64)
         levels = np.array([c[2] for c in uniq], np.int32)
         owners = np.array([c[3] for c in uniq], np.int32)
-        ids = u64m.from_int(keys >> (np.uint64(d) * (np.uint64(o.L) - levels.astype(np.uint64))))
-        gs = o.from_linear_id(ids, jnp.asarray(levels))
+        gs = bops.decode(u64m.from_int(keys), jnp.asarray(levels))
         out.append({"anchor": np.asarray(gs.anchor), "level": levels, "stype": np.asarray(gs.stype),
                     "tree": trees, "owner": owners})
     return out
@@ -527,7 +542,7 @@ def ghost(forests: list[Forest], comm: SimComm) -> list[dict]:
 def iterate(f: Forest, elem_fn=None, face_fn=None):
     """Paper's Iterate: run callbacks over local elements and interior local
     same-tree face pairs (hanging faces delivered as (coarse, fine) pairs)."""
-    o = f.ops
+    bops = f.bops
     results = []
     if elem_fn is not None:
         results.append(elem_fn(f.tree, f.simplices()))
@@ -538,9 +553,9 @@ def iterate(f: Forest, elem_fn=None, face_fn=None):
             key_index[(int(f.tree[i]), int(f.keys[i]), int(f.level[i]))] = i
         pairs = []
         for face in range(f.d + 1):
-            nb, dual = o.face_neighbor(s, face)
-            inside = np.asarray(o.is_inside_root(nb))
-            nkey = u64m.to_np(o.morton_key(nb))
+            nb, dual = bops.face_neighbor(s, face)
+            inside = np.asarray(bops.is_inside_root(nb))
+            nkey = bops.morton_key_np(nb)
             nlvl = np.asarray(nb.level)
             for i in np.nonzero(inside)[0]:
                 j = key_index.get((int(f.tree[i]), int(nkey[i]), int(nlvl[i])))
@@ -571,7 +586,7 @@ def validate(forests: list[Forest]) -> bool:
         return False
     # inside root
     for f in forests:
-        if f.num_local and not np.asarray(o.is_inside_root(f.simplices())).all():
+        if f.num_local and not np.asarray(f.bops.is_inside_root(f.simplices())).all():
             return False
     # coverage: sum of 2^{-d*level} == num_trees
     vol = (1.0 / (1 << d) ** all_level.astype(np.float64)).sum()

@@ -250,6 +250,16 @@ class SimplexOps:
             b = self.TYPE_OF_LOCAL[b, iloc]
         return Simplex(anchor, level, b)
 
+    def decode_key(self, key: u64m.U64, level) -> Simplex:
+        """Inverse of `morton_key` at a given level: drop the level padding
+        and run Algorithm 4.8.  This is the decode entry point the batched
+        backends share (the Pallas decode kernel consumes padded keys too)."""
+        level = jnp.asarray(level, jnp.int32)
+        lid = u64m.select_shr(
+            key, (jnp.asarray(self.L, jnp.int32) - level) * self.d, self.d * self.L
+        )
+        return self.from_linear_id(lid, level)
+
     def successor(self, s: Simplex) -> Simplex:
         """Next same-level simplex in SFC order (batch Algorithm 4.10)."""
         return self.from_linear_id(u64m.inc(self.linear_id(s)), s.level)

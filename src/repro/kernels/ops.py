@@ -69,3 +69,47 @@ def successor(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK) -> Simplex:
     outs = sfc.successor_kernel(d, *arrays, block=block, interpret=_interpret())
     anchor = jnp.stack([o[:n] for o in outs[:d]], axis=-1)
     return Simplex(anchor, s.level, outs[d][:n])
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def parent_and_local_index(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK):
+    """One pass of the fused parent/local-index kernel: (parent, iloc)."""
+    n = s.level.shape[0]
+    np_ = _pad(n, block)
+    arrays = _padded(_fields(s) + [s.level, s.stype], np_)
+    outs = sfc.parent_kernel(d, *arrays, block=block, interpret=_interpret())
+    anchor = jnp.stack([o[:n] for o in outs[:d]], axis=-1)
+    return Simplex(anchor, s.level - 1, outs[d][:n]), outs[d + 1][:n]
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def parent(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK) -> Simplex:
+    return parent_and_local_index(d, s, block)[0]
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def local_index(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK):
+    """TM child index within the parent (second output of the parent kernel)."""
+    return parent_and_local_index(d, s, block)[1]
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def children(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK) -> Simplex:
+    """All 2^d TM-ordered children: batch shape (n, 2^d)."""
+    n = s.level.shape[0]
+    np_ = _pad(n, block)
+    arrays = _padded(_fields(s) + [s.level, s.stype], np_)
+    outs = sfc.children_kernel(d, *arrays, block=block, interpret=_interpret())
+    anchor = jnp.stack([o[:n] for o in outs[:d]], axis=-1)  # (n, nc, d)
+    nc = 2 ** d
+    level = jnp.broadcast_to((s.level + 1)[:, None], (n, nc))
+    return Simplex(anchor, level, outs[d][:n])
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def is_inside_root(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK):
+    n = s.level.shape[0]
+    np_ = _pad(n, block)
+    arrays = _padded(_fields(s) + [s.level, s.stype], np_)
+    outs = sfc.inside_root_kernel(d, *arrays, block=block, interpret=_interpret())
+    return outs[0][:n].astype(bool)

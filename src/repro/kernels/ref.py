@@ -31,10 +31,29 @@ def morton_key_ref(d, *arrays):
 
 def decode_ref(d, hi, lo, level):
     o = get_ops(d)
-    lid = u64m.select_shr(u64m.U64(hi, lo), (o.L - level) * d, d * o.L)
-    s = o.from_linear_id(lid, level)
+    s = o.decode_key(u64m.U64(hi, lo), level)
     outs = [s.anchor[..., k] for k in range(d)]
     return (*outs, s.stype)
+
+
+def parent_ref(d, *arrays):
+    o = get_ops(d)
+    s = _simplex(d, *arrays)
+    p = o.parent(s)
+    outs = [p.anchor[..., k] for k in range(d)]
+    return (*outs, p.stype, o.local_index(s))
+
+
+def children_ref(d, *arrays):
+    o = get_ops(d)
+    kids = o.children_tm(_simplex(d, *arrays))  # (..., nc) batch
+    outs = [kids.anchor[..., k] for k in range(d)]
+    return (*outs, kids.stype)
+
+
+def is_inside_root_ref(d, *arrays):
+    o = get_ops(d)
+    return o.is_inside_root(_simplex(d, *arrays))
 
 
 def face_neighbor_ref(d, *arrays):

@@ -215,6 +215,106 @@ def _successor_body(d: int, refs):
     ob_ref[...] = bo
 
 
+def _parent_body(d: int, refs):
+    """Parent Tet-id (Algorithm 4.3) + local index (paper Table 6), fused:
+    one cube-id extraction feeds both lookups via the packed `enc` table."""
+    L = MAXLEVEL[d]
+    enc, _, _ = _packed_tables(d)
+    nc = 2 ** d
+    if d == 3:
+        x_ref, y_ref, z_ref, lvl_ref, b_ref, ox_ref, oy_ref, oz_ref, ob_ref, oi_ref = refs
+        coords = (x_ref[...], y_ref[...], z_ref[...])
+        outs = (ox_ref, oy_ref, oz_ref)
+    else:
+        x_ref, y_ref, lvl_ref, b_ref, ox_ref, oy_ref, ob_ref, oi_ref = refs
+        coords = (x_ref[...], y_ref[...])
+        outs = (ox_ref, oy_ref)
+    lvl = lvl_ref[...]
+    b = b_ref[...]
+    h = (jnp.int32(1) << (L - lvl)).astype(jnp.int32)
+    cid = jnp.zeros(b.shape, jnp.int32)
+    for k, c in enumerate(coords):
+        cid = cid | jnp.where((c & h) != 0, jnp.int32(1 << k), 0)
+    packed = _lut(enc, b * nc + cid)
+    for k, c in enumerate(coords):
+        outs[k][...] = c & ~h
+    ob_ref[...] = packed >> 3
+    oi_ref[...] = packed & 7
+
+
+def _children_body(d: int, refs):
+    """All 2^d children in TM order (Algorithm 4.5), one (block, 2^d) tile
+    per output field."""
+    L = MAXLEVEL[d]
+    _, dec, _ = _packed_tables(d)
+    nc = 2 ** d
+    if d == 3:
+        x_ref, y_ref, z_ref, lvl_ref, b_ref, ox_ref, oy_ref, oz_ref, ob_ref = refs
+        coords = (x_ref[...], y_ref[...], z_ref[...])
+        outs = (ox_ref, oy_ref, oz_ref)
+    else:
+        x_ref, y_ref, lvl_ref, b_ref, ox_ref, oy_ref, ob_ref = refs
+        coords = (x_ref[...], y_ref[...])
+        outs = (ox_ref, oy_ref)
+    lvl = lvl_ref[...]
+    b = b_ref[...]
+    h2 = ((jnp.int32(1) << (L - lvl)) >> 1).astype(jnp.int32)
+    cols = [[] for _ in range(d)]
+    type_cols = []
+    for iloc in range(nc):
+        packed = _lut(dec, b * nc + iloc)
+        cid = packed & 7
+        type_cols.append(packed >> 3)
+        for k, c in enumerate(coords):
+            cols[k].append(c + h2 * ((cid >> k) & 1))
+    for k in range(d):
+        outs[k][...] = jnp.stack(cols[k], axis=-1)
+    ob_ref[...] = jnp.stack(type_cols, axis=-1)
+
+
+def _inside_body(d: int, refs):
+    """Constant-time inside-root test (Proposition 23 with T = root, type 0):
+    the axis permutation and boundary type sets collapse to per-type
+    constants baked into the instruction stream."""
+    L = MAXLEVEL[d]
+    t = get_tables(d)
+    p = tuple(int(v) for v in t.outside_perm[0])
+    KJ = tuple(int(v) for v in t.outside_types_kj[0])
+    IK = tuple(int(v) for v in t.outside_types_ik[0])
+    DIAG = tuple(int(v) for v in t.outside_types_diag[0])
+    if d == 3:
+        x_ref, y_ref, z_ref, lvl_ref, b_ref, o_ref = refs
+        coords = (x_ref[...], y_ref[...], z_ref[...])
+    else:
+        x_ref, y_ref, lvl_ref, b_ref, o_ref = refs
+        coords = (x_ref[...], y_ref[...])
+    lvl = lvl_ref[...]
+    b = b_ref[...]
+    ht = jnp.int32(1 << L)
+    ai = coords[p[0]]
+    aj = coords[p[1]]
+    at_root = (lvl == 0) & (b == 0)
+    for c in coords:
+        at_root = at_root & (c == 0)
+    if d == 2:
+        inside = (aj >= 0) & (ai < ht) & (aj <= ai)
+        ok_diag = _lut(KJ, b) == 0
+        inside = inside & ((aj != ai) | ok_diag)
+    else:
+        ak = coords[p[2]]
+        inside = (aj >= 0) & (ai < ht) & (ak <= ai) & (aj <= ak)
+        eq_ik = ak == ai
+        eq_kj = aj == ak
+        ok_ik = _lut(IK, b) == 0
+        ok_kj = _lut(KJ, b) == 0
+        ok_diag = _lut(DIAG, b) == 0
+        ok = jnp.where(
+            eq_ik & eq_kj, ok_diag, jnp.where(eq_ik, ok_ik, jnp.where(eq_kj, ok_kj, True))
+        )
+        inside = inside & ok
+    o_ref[...] = (at_root | ((lvl > 0) & inside)).astype(jnp.int32)
+
+
 # --------------------------------------------------------------- pallas_call
 def _specs(n_in, n_out, block):
     spec = pl.BlockSpec((block,), lambda i: (i,))
@@ -261,6 +361,54 @@ def face_neighbor_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret:
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32)] * (d + 2),
+        interpret=interpret,
+    )(*arrays)
+
+
+def parent_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """arrays: x, y, (z,), level, type — int32 (N,).
+    Returns x, y, (z,), type of the parent plus the element's TM local index
+    (the parent's level is the caller's `level - 1`)."""
+    n = arrays[0].shape[0]
+    in_specs, out_specs = _specs(len(arrays), d + 2, block)
+    return pl.pallas_call(
+        lambda *refs: _parent_body(d, refs),
+        grid=(n // block,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32)] * (d + 2),
+        interpret=interpret,
+    )(*arrays)
+
+
+def children_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """arrays: x, y, (z,), level, type — int32 (N,).
+    Returns x, y, (z,), type of all 2^d TM-ordered children, each (N, 2^d)."""
+    n = arrays[0].shape[0]
+    nc = 2 ** d
+    in_specs, _ = _specs(len(arrays), 0, block)
+    out_spec = pl.BlockSpec((block, nc), lambda i: (i, 0))
+    return pl.pallas_call(
+        lambda *refs: _children_body(d, refs),
+        grid=(n // block,),
+        in_specs=in_specs,
+        out_specs=[out_spec] * (d + 1),
+        out_shape=[jax.ShapeDtypeStruct((n, nc), jnp.int32)] * (d + 1),
+        interpret=interpret,
+    )(*arrays)
+
+
+def inside_root_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """arrays: x, y, (z,), level, type — int32 (N,).
+    Returns an int32 0/1 mask: does the element lie inside the root simplex?"""
+    n = arrays[0].shape[0]
+    in_specs, out_specs = _specs(len(arrays), 1, block)
+    return pl.pallas_call(
+        lambda *refs: _inside_body(d, refs),
+        grid=(n // block,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32)],
         interpret=interpret,
     )(*arrays)
 

@@ -111,10 +111,19 @@ def _dot_flops(line: str, shape_of) -> float:
     out_elems = 1
     for d in out_shapes[0][1]:
         out_elems *= d
-    # operands
+    # operands: newer XLA prints inline types (`dot(f32[64,64]{1,0} %a, ...)`),
+    # older prints bare names (`dot(%a, %b)`) — handle both
     ops = re.search(r"dot\(([^)]*)\)", rhs)
-    lhs_name = ops.group(1).split(",")[0].strip().lstrip("%") if ops else None
-    lhs_dims = shape_of.get(lhs_name)
+    lhs_dims = None
+    if ops:
+        args_str = ops.group(1)
+        inline = _shapes_in(args_str.split("%")[0])  # type before first operand name
+        if inline:
+            lhs_dims = inline[0][1]
+        else:
+            names = re.findall(r"%([\w.\-]+)", args_str)
+            lhs_name = names[0] if names else args_str.split(",")[0].strip()
+            lhs_dims = shape_of.get(lhs_name)
     cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
     if lhs_dims is None or cd is None:
         return 2.0 * out_elems  # degenerate fallback
@@ -137,8 +146,15 @@ def _conv_flops(line: str, shape_of) -> float:
     ops = re.search(r"convolution\(([^)]*)\)", rhs)
     if not ops:
         return 0.0
-    rhs_name = ops.group(1).split(",")[1].strip().lstrip("%")
-    kdims = shape_of.get(rhs_name, [1])
+    args_str = ops.group(1)
+    inline = _shapes_in(args_str)  # inline operand types (newer XLA)
+    if len(inline) >= 2:
+        kdims = inline[1][1]
+    else:
+        names = re.findall(r"%([\w.\-]+)", args_str)
+        rhs_name = (names[1] if len(names) > 1
+                    else args_str.split(",")[-1].strip())
+        kdims = shape_of.get(rhs_name, [1])
     k = 1
     for d in kdims:
         k *= d

@@ -1,0 +1,27 @@
+"""Shared test helpers (tests/ is on sys.path via the root conftest)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import u64 as u64m
+from repro.core.ops import get_ops
+
+
+def rand_simplices(d, n, seed, min_level=1, max_level=None, margin=0):
+    """Random valid elements by decoding random consecutive indices.
+
+    `margin` keeps ids away from the end of the level range (so e.g.
+    `successor` stays inside the tree).  Ids are clamped to 2^62 to stay
+    below the uint64 emulation's comfortable range at d=3, MAXLEVEL.
+    """
+    o = get_ops(d)
+    max_level = o.L if max_level is None else max_level
+    rng = np.random.default_rng(seed)
+    lv = rng.integers(min_level, max_level + 1, size=n)
+    ids = np.array(
+        [rng.integers(0, max(1, min(o.num_elements(l), 2**62) - margin)) for l in lv],
+        np.uint64,
+    )
+    return o.from_linear_id(u64m.from_int(ids), jnp.asarray(lv, jnp.int32))

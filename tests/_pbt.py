@@ -1,0 +1,180 @@
+"""Offline fallback shim for the `hypothesis` subset used by this repo.
+
+This box has no network access and no `hypothesis` wheel, yet the property
+tests are the backbone of the SFC verification story.  The shim implements
+the tiny `given/settings/strategies` surface the test modules use, backed by
+bounded random sampling with a *fixed per-test seed* (derived from the test
+name), so runs are deterministic and failures reproducible.
+
+Usage (in test modules)::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:          # offline: bounded random sampling
+        from _pbt import given, settings, strategies as st
+
+Supported strategies: ``integers``, ``floats``, ``booleans``, ``sampled_from``,
+``lists``, ``tuples``, ``data``.  Supported settings: ``max_examples``
+(capped by the ``PBT_MAX_EXAMPLES`` env var, default 25, to keep tier-1
+fast), ``deadline`` (ignored — no per-example timing here).
+
+This is intentionally NOT a shrinking/coverage-guided engine; it is a
+deterministic sampler so the suite collects and runs with or without the
+real hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import random
+import zlib
+
+__all__ = ["given", "settings", "strategies", "st"]
+
+# Global cap so the default tier-1 run finishes in minutes on one CPU core.
+_MAX_EXAMPLES_CAP = int(os.environ.get("PBT_MAX_EXAMPLES", "25"))
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+# ------------------------------------------------------------------ strategies
+class Strategy:
+    """A strategy is just `example(rng) -> value`."""
+
+    def __init__(self, fn, name="strategy"):
+        self._fn = fn
+        self._name = name
+
+    def example(self, rng: random.Random):
+        return self._fn(rng)
+
+    def map(self, f):
+        return Strategy(lambda rng: f(self._fn(rng)), f"{self._name}.map")
+
+    def filter(self, pred, max_tries: int = 1000):
+        def draw(rng):
+            for _ in range(max_tries):
+                v = self._fn(rng)
+                if pred(v):
+                    return v
+            raise ValueError(f"{self._name}.filter: no example in {max_tries} tries")
+
+        return Strategy(draw, f"{self._name}.filter")
+
+    def __repr__(self):
+        return f"<pbt {self._name}>"
+
+
+class DataObject:
+    """Stand-in for hypothesis' interactive `data()` draws."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: Strategy, label=None):
+        return strategy.example(self._rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=None):
+        if max_value is None:
+            max_value = 2**63 - 1
+
+        def draw(rng):
+            # Bias toward boundaries: property bugs live at the edges.
+            r = rng.random()
+            if r < 0.05:
+                return min_value
+            if r < 0.10:
+                return max_value
+            return rng.randint(min_value, max_value)
+
+        return Strategy(draw, f"integers({min_value},{max_value})")
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_ignored):
+        def draw(rng):
+            r = rng.random()
+            if r < 0.05:
+                return float(min_value)
+            if r < 0.10:
+                return float(max_value)
+            return rng.uniform(min_value, max_value)
+
+        return Strategy(draw, f"floats({min_value},{max_value})")
+
+    @staticmethod
+    def booleans():
+        return Strategy(lambda rng: rng.random() < 0.5, "booleans")
+
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        return Strategy(lambda rng: seq[rng.randrange(len(seq))], "sampled_from")
+
+    @staticmethod
+    def lists(elements: Strategy, min_size=0, max_size=16):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+
+        return Strategy(draw, f"lists({min_size},{max_size})")
+
+    @staticmethod
+    def tuples(*strategies):
+        return Strategy(lambda rng: tuple(s.example(rng) for s in strategies), "tuples")
+
+    @staticmethod
+    def data():
+        return Strategy(lambda rng: DataObject(rng), "data")
+
+
+strategies = _Strategies()
+st = strategies
+
+
+# ------------------------------------------------------------ given / settings
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Decorator recording example-count preferences (deadline is ignored)."""
+
+    def deco(fn):
+        fn._pbt_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(*strategies_args, **strategies_kwargs):
+    """Run the wrapped test on `max_examples` deterministic random samples."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_pbt_settings", None) or getattr(
+                fn, "_pbt_settings", {}
+            )
+            n = min(cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES), _MAX_EXAMPLES_CAP)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            for i in range(n):
+                rng = random.Random((seed << 20) + i)
+                extra = [s.example(rng) for s in strategies_args]
+                kw = {k: s.example(rng) for k, s in strategies_kwargs.items()}
+                kw.update(kwargs)
+                try:
+                    fn(*args, *extra, **kw)
+                except Exception as e:  # noqa: BLE001 - reraise with repro info
+                    raise AssertionError(
+                        f"pbt example {i}/{n} failed for {fn.__qualname__} "
+                        f"with args={extra!r} kwargs={kw!r}: {e}"
+                    ) from e
+
+        # pytest must not inspect the original signature (it would treat the
+        # strategy-filled params as fixtures): drop the __wrapped__ pointer
+        # functools.wraps installed so the wrapper presents (*args, **kwargs).
+        wrapper.__dict__.pop("__wrapped__", None)
+        # Let an outer @settings(...) applied above @given take effect too.
+        wrapper._pbt_settings = dict(getattr(fn, "_pbt_settings", {}))
+        return wrapper
+
+    return deco

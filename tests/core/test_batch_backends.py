@@ -1,0 +1,137 @@
+"""Differential tests: the three element-ops backends agree bit-for-bit.
+
+`reference` (eager SimplexOps), `jnp` (jitted + padded), and `pallas`
+(tiled kernels, interpret mode on CPU) must produce identical integers for
+every op over random batches at d=2 and d=3 across levels 0..MAXLEVEL.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _helpers import rand_simplices
+from repro.core import batch, get_ops
+from repro.core import u64 as u64m
+
+# pallas rows run the interpret-mode kernels: correct but compile-heavy on
+# one CPU core, so they carry the `slow` marker (still in the full suite).
+BACKENDS = ["jnp", pytest.param("pallas", marks=pytest.mark.slow)]
+
+N = 64  # one padding bucket -> one jit/interpret compile per op
+
+
+def assert_simplex_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.anchor), np.asarray(b.anchor))
+    np.testing.assert_array_equal(np.asarray(a.level), np.asarray(b.level))
+    np.testing.assert_array_equal(np.asarray(a.stype), np.asarray(b.stype))
+
+
+@pytest.fixture(params=[2, 3])
+def d(request):
+    return request.param
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_parent_and_local_index_parity(d, backend):
+    s = rand_simplices(d, N, seed=10 + d, min_level=1)
+    ref = batch.get_batch_ops(d, "reference")
+    got = batch.get_batch_ops(d, backend)
+    assert_simplex_equal(got.parent(s), ref.parent(s))
+    np.testing.assert_array_equal(
+        np.asarray(got.local_index(s)), np.asarray(ref.local_index(s))
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_children_parity(d, backend):
+    o = get_ops(d)
+    s = rand_simplices(d, N, seed=20 + d, min_level=0, max_level=o.L - 1)
+    ref = batch.get_batch_ops(d, "reference")
+    got = batch.get_batch_ops(d, backend)
+    assert_simplex_equal(got.children(s), ref.children(s))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_face_neighbor_and_inside_parity(d, backend):
+    s = rand_simplices(d, N, seed=30 + d, min_level=0)
+    ref = batch.get_batch_ops(d, "reference")
+    got = batch.get_batch_ops(d, backend)
+    for face in range(d + 1):
+        nb_g, dual_g = got.face_neighbor(s, face)
+        nb_r, dual_r = ref.face_neighbor(s, face)
+        assert_simplex_equal(nb_g, nb_r)
+        np.testing.assert_array_equal(np.asarray(dual_g), np.asarray(dual_r))
+        # neighbors include outside-root elements: the interesting cases
+        np.testing.assert_array_equal(
+            np.asarray(got.is_inside_root(nb_g)), np.asarray(ref.is_inside_root(nb_r))
+        )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_successor_parity(d, backend):
+    s = rand_simplices(d, N, seed=40 + d, min_level=1, margin=1)
+    ref = batch.get_batch_ops(d, "reference")
+    got = batch.get_batch_ops(d, backend)
+    assert_simplex_equal(got.successor(s), ref.successor(s))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_morton_key_decode_roundtrip_parity(d, backend):
+    s = rand_simplices(d, N, seed=50 + d, min_level=0)
+    ref = batch.get_batch_ops(d, "reference")
+    got = batch.get_batch_ops(d, backend)
+    kg, kr = got.morton_key(s), ref.morton_key(s)
+    np.testing.assert_array_equal(np.asarray(kg.hi), np.asarray(kr.hi))
+    np.testing.assert_array_equal(np.asarray(kg.lo), np.asarray(kr.lo))
+    np.testing.assert_array_equal(got.morton_key_np(s), ref.morton_key_np(s))
+    assert_simplex_equal(got.decode(kg, s.level), s)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_empty_batch_all_ops(d, backend):
+    o = get_ops(d)
+    s = o.from_linear_id(u64m.from_int(np.zeros(0, np.uint64)), jnp.zeros(0, jnp.int32))
+    b = batch.get_batch_ops(d, backend)
+    assert b.morton_key_np(s).shape == (0,)
+    assert b.parent(s).level.shape == (0,)
+    assert b.children(s).level.shape == (0, o.nc)
+    assert b.successor(s).level.shape == (0,)
+    assert np.asarray(b.is_inside_root(s)).shape == (0,)
+    nb, dual = b.face_neighbor(s, 0)
+    assert nb.level.shape == (0,)
+
+
+def test_backend_knob_env_and_context(monkeypatch):
+    monkeypatch.setattr(batch, "_active", None)
+    monkeypatch.setenv("REPRO_BACKEND", "jnp")
+    assert batch.get_backend() == "jnp"
+    with batch.use_backend("reference"):
+        assert batch.get_backend() == "reference"
+        assert batch.get_batch_ops(2).backend == "reference"
+    assert batch.get_backend() == "jnp"
+
+
+def test_backend_knob_unknown_falls_back(monkeypatch):
+    monkeypatch.setattr(batch, "_active", None)
+    monkeypatch.setenv("REPRO_BACKEND", "tpu-v7")
+    with pytest.warns(UserWarning, match="unknown element-ops backend"):
+        assert batch.get_backend() == "reference"
+    with pytest.warns(UserWarning):
+        batch.set_backend("nope")
+    assert batch.get_backend() == "reference"
+    batch.set_backend("reference")
+
+
+def test_level_sweep_full_range_jnp(d):
+    """Every level 0..MAXLEVEL appears at least once in a parity sweep."""
+    o = get_ops(d)
+    lv = jnp.asarray(np.arange(o.L + 1, dtype=np.int32))
+    ids = u64m.from_int(np.zeros(o.L + 1, np.uint64))
+    s = o.from_linear_id(ids, lv)
+    ref = batch.get_batch_ops(d, "reference")
+    got = batch.get_batch_ops(d, "jnp")
+    np.testing.assert_array_equal(got.morton_key_np(s), ref.morton_key_np(s))
+    assert_simplex_equal(got.decode(got.morton_key(s), lv), s)
+    np.testing.assert_array_equal(
+        np.asarray(got.is_inside_root(s)), np.asarray(ref.is_inside_root(s))
+    )

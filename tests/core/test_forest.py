@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline box: bounded random sampling shim (tests/_pbt.py)
+    from _pbt import given, settings, strategies as st
 
 from repro.core import forest as F
 from repro.core import get_ops

@@ -1,7 +1,10 @@
 """Hypothesis property tests for forest invariants under random adaptation."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline box: bounded random sampling shim (tests/_pbt.py)
+    from _pbt import given, settings, strategies as st
 
 from repro.core import forest as F
 

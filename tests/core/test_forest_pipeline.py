@@ -1,0 +1,118 @@
+"""Forest invariants through the full pipeline, per rank count and backend:
+
+new_uniform -> adapt -> partition -> balance on 1, 2, and 4 simulated ranks,
+for d=2 and d=3, under every element-ops backend.  Checks `validate()`,
+exact `count_global` refinement arithmetic, ascending (tree, TM-index) leaf
+order, and bit-identical results across backends.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import batch
+from repro.core import forest as F
+from repro.core import get_ops
+
+BACKENDS = ["reference", "jnp", pytest.param("pallas", marks=pytest.mark.slow)]
+
+
+def corner_cb(tree, elems):
+    """Refine every element whose anchor is the origin corner (one per tree
+    at each level, so the arithmetic below stays exact)."""
+    a = np.asarray(elems.anchor)
+    return (a.sum(axis=1) == 0).astype(np.int32)
+
+
+def _run_pipeline(d, P, level=2, trees=2):
+    o = get_ops(d)
+    comm = F.SimComm(P)
+    fs = F.new_uniform(d, trees, level, comm)
+    n0 = F.count_global(fs)
+    assert n0 == trees * o.num_elements(level)
+    assert F.validate(fs)
+
+    # adapt: each refined element is replaced by 2^d children
+    n_refined = sum(int(corner_cb(f.tree, f.simplices()).sum()) for f in fs)
+    fs = [F.adapt(f, corner_cb) for f in fs]
+    assert F.count_global(fs) == n0 + n_refined * (o.nc - 1)
+    assert F.validate(fs)
+
+    fs = F.partition(fs, comm)
+    assert F.count_global(fs) == n0 + n_refined * (o.nc - 1)  # pure redistribution
+    counts = [f.num_local for f in fs]
+    assert max(counts) - min(counts) <= 1
+    assert F.validate(fs)
+
+    fs = F.balance(fs, comm)
+    assert F.count_global(fs) >= n0 + n_refined * (o.nc - 1)
+    assert F.validate(fs)
+
+    # leaves ascending in (tree, TM-index) order, per rank and globally
+    prev = (-1, -1)
+    for f in fs:
+        for t, k in zip(f.tree.tolist(), f.keys.tolist()):
+            assert (t, k) > prev, "leaves not in ascending (tree, key) order"
+            prev = (t, k)
+    return fs
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("P", [1, 2, 4])
+@pytest.mark.parametrize("d", [2, 3])
+def test_pipeline_invariants(d, P, backend):
+    # pallas interpret mode pays a per-shape compile on CPU: shrink the mesh
+    # (the invariants are size-independent; parity at scale is benchmarked).
+    kw = dict(level=1, trees=1) if backend == "pallas" else {}
+    with batch.use_backend(backend):
+        _run_pipeline(d, P, **kw)
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_pipeline_bit_identical_across_backends(d):
+    """Acceptance: adapt and balance produce bit-identical forests under all
+    backends (pallas covered by the slow-marked pipeline runs above plus the
+    kernel-level parity suite)."""
+    sigs = {}
+    for backend in ("reference", "jnp"):
+        with batch.use_backend(backend):
+            fs = _run_pipeline(d, P=2)
+            sigs[backend] = [
+                (f.keys.copy(), f.level.copy(), f.tree.copy(), f.anchor.copy(),
+                 f.stype.copy())
+                for f in fs
+            ]
+    for fa, fb in zip(sigs["reference"], sigs["jnp"]):
+        for a, b in zip(fa, fb):
+            np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("d", [2, 3])
+def test_pipeline_bit_identical_pallas(d):
+    sigs = {}
+    for backend in ("reference", "pallas"):
+        with batch.use_backend(backend):
+            fs = _run_pipeline(d, P=1, level=1, trees=1)
+            sigs[backend] = [(f.keys.copy(), f.level.copy()) for f in fs]
+    for fa, fb in zip(sigs["reference"], sigs["pallas"]):
+        for a, b in zip(fa, fb):
+            np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_deep_refinement_balance_grows(d):
+    """Recursive corner refinement by 2 levels forces balance to insert
+    elements (2:1 across faces), and the result stays valid."""
+    comm = F.SimComm(2)
+    fs = F.new_uniform(d, 1, 1, comm)
+
+    def deep_cb(tree, elems, cap=3):
+        a = np.asarray(elems.anchor)
+        l = np.asarray(elems.level)
+        return ((a.sum(axis=1) == 0) & (l < cap)).astype(np.int32)
+
+    fs = [F.adapt(f, deep_cb, recursive=True) for f in fs]
+    before = F.count_global(fs)
+    fs = F.balance(fs, comm)
+    assert F.count_global(fs) > before
+    assert F.validate(fs)

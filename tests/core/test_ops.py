@@ -3,29 +3,25 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline box: bounded random sampling shim (tests/_pbt.py)
+    from _pbt import given, settings, strategies as st
 
 from repro.core import ops2d, ops3d, simplex, root
 from repro.core import u64 as u64m
 from repro.core import reference as R
 from repro.core.types import Simplex
 
+from _helpers import rand_simplices
+
 OPS = {2: ops2d, 3: ops3d}
-
-
-def rand_simplices(d, n, max_level, seed):
-    """Random valid elements by decoding random consecutive indices."""
-    o = OPS[d]
-    rng = np.random.default_rng(seed)
-    lv = rng.integers(1, max_level + 1, size=n)
-    ids = np.array([rng.integers(0, o.num_elements(l)) for l in lv], np.uint64)
-    return o.from_linear_id(u64m.from_int(ids), jnp.asarray(lv, jnp.int32))
 
 
 @pytest.mark.parametrize("d", [2, 3])
 def test_linear_id_roundtrip_deep_levels(d):
     o = OPS[d]
-    s = rand_simplices(d, 256, o.L, seed=1)
+    s = rand_simplices(d, 256, seed=1, max_level=o.L)
     ids = o.linear_id(s)
     s2 = o.from_linear_id(ids, s.level)
     np.testing.assert_array_equal(np.asarray(s2.anchor), np.asarray(s.anchor))
@@ -35,7 +31,7 @@ def test_linear_id_roundtrip_deep_levels(d):
 @pytest.mark.parametrize("d", [2, 3])
 def test_linear_id_matches_reference(d):
     o = OPS[d]
-    s = rand_simplices(d, 32, 5, seed=2)
+    s = rand_simplices(d, 32, seed=2, max_level=5)
     ids = u64m.to_np(o.linear_id(s))
     A, L, B = np.asarray(s.anchor), np.asarray(s.level), np.asarray(s.stype)
     for i in range(len(ids)):
@@ -60,7 +56,7 @@ def test_uniform_enumeration_matches_tm_order(d):
 @pytest.mark.parametrize("d", [2, 3])
 def test_parent_child_roundtrip(d):
     o = OPS[d]
-    s = rand_simplices(d, 128, o.L - 1, seed=3)
+    s = rand_simplices(d, 128, seed=3, max_level=o.L - 1)
     for i in range(o.nc):
         c = o.child_tm(s, i)
         p = o.parent(c)
@@ -77,7 +73,7 @@ def test_parent_child_roundtrip(d):
 @pytest.mark.parametrize("d", [2, 3])
 def test_children_against_reference(d):
     o = OPS[d]
-    s = rand_simplices(d, 16, 4, seed=4)
+    s = rand_simplices(d, 16, seed=4, max_level=4)
     A, L, B = np.asarray(s.anchor), np.asarray(s.level), np.asarray(s.stype)
     for i in range(len(L)):
         tet = (tuple(int(x) for x in A[i]), int(L[i]), int(B[i]))
@@ -122,7 +118,7 @@ def test_successor_matches_paper_recursion(d):
 @pytest.mark.parametrize("d", [2, 3])
 def test_face_neighbor_involution(d):
     o = OPS[d]
-    s = rand_simplices(d, 256, o.L, seed=6)
+    s = rand_simplices(d, 256, seed=6, max_level=o.L)
     for f in range(d + 1):
         nb, fd = o.face_neighbor(s, f)
         back, f2 = o.face_neighbor(nb, fd)
@@ -135,7 +131,7 @@ def test_face_neighbor_involution(d):
 def test_neighbor_shares_d_vertices(d):
     """Geometric check: a face neighbor shares exactly d corner nodes."""
     o = OPS[d]
-    s = rand_simplices(d, 64, 6, seed=7)
+    s = rand_simplices(d, 64, seed=7, max_level=6)
     coords = np.asarray(o.coordinates(s))
     for f in range(d + 1):
         nb, _ = o.face_neighbor(s, f)
@@ -183,7 +179,7 @@ def test_theorem16_locality(d):
 def test_morton_key_prefix_property(d):
     """Theorem 16 (i)+(ii) via keys: ancestor keys are <= and prefix-aligned."""
     o = OPS[d]
-    s = rand_simplices(d, 256, o.L, seed=8)
+    s = rand_simplices(d, 256, seed=8, max_level=o.L)
     anc = o.ancestor_at_level(s, jnp.maximum(s.level - 3, 0))
     ks = u64m.to_np(o.morton_key(s))
     ka = u64m.to_np(o.morton_key(anc))

@@ -1,0 +1,53 @@
+"""At-rest encoding tests (paper Remark 20): pack/unpack round-trip and the
+exact 10-bytes-per-triangle / 14-bytes-per-tetrahedron storage bound."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _helpers import rand_simplices
+from repro.core import get_ops
+from repro.core import u64 as u64m
+from repro.core.types import Simplex, nbytes_at_rest, pack, simplex, unpack
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_pack_unpack_roundtrip(d):
+    s = rand_simplices(d, 257, seed=d, min_level=0)
+    back = unpack(pack(s))
+    np.testing.assert_array_equal(np.asarray(back.anchor), np.asarray(s.anchor))
+    np.testing.assert_array_equal(np.asarray(back.level), np.asarray(s.level))
+    np.testing.assert_array_equal(np.asarray(back.stype), np.asarray(s.stype))
+    assert back.anchor.dtype == jnp.int32
+    assert back.level.dtype == jnp.int32
+    assert back.stype.dtype == jnp.int32
+
+
+@pytest.mark.parametrize("d,per_elem", [(2, 10), (3, 14)])
+def test_nbytes_at_rest_matches_remark_20(d, per_elem):
+    """Remark 20: 4 bytes per coordinate + 1 byte level + 1 byte type
+    = exactly 10 B per triangle, 14 B per tetrahedron."""
+    for n in (1, 7, 1024):
+        s = rand_simplices(d, n, seed=n + d, min_level=0)
+        assert nbytes_at_rest(s) == per_elem * n
+        blob = pack(s)
+        actual = sum(a.nbytes for a in blob.values())
+        assert actual == nbytes_at_rest(s)
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_pack_preserves_extremes(d):
+    """Deep levels use the full int32 coordinate range; level/type must
+    survive the int8 narrowing (MAXLEVEL <= 30 < 127, types < 6)."""
+    o = get_ops(d)
+    ids = u64m.from_int(np.array([o.num_elements(o.L) - 1], np.uint64))
+    s = o.from_linear_id(ids, jnp.full(1, o.L, jnp.int32))
+    back = unpack(pack(s))
+    np.testing.assert_array_equal(np.asarray(back.anchor), np.asarray(s.anchor))
+    assert int(back.level[0]) == o.L
+    assert int(back.stype[0]) == int(np.asarray(s.stype)[0])
+
+
+def test_scalar_simplex_nbytes():
+    assert nbytes_at_rest(simplex(np.zeros(3), 0, 0)) == 14
+    assert nbytes_at_rest(simplex(np.zeros(2), 0, 0)) == 10

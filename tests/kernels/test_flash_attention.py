@@ -10,6 +10,9 @@ import pytest
 from repro.kernels.flash_attention import flash_attention
 from repro.models.layers import _plain_attention
 
+# interpret-mode attention sweeps: minutes on one CPU core
+pytestmark = pytest.mark.slow
+
 
 CASES = [
     # (B, S, H, KV, hd, dtype, window)

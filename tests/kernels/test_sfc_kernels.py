@@ -4,18 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _helpers import rand_simplices
 from repro.core import u64 as u64m
 from repro.core.ops import get_ops
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
-
-
-def rand_simplices(d, n, max_level, seed):
-    o = get_ops(d)
-    rng = np.random.default_rng(seed)
-    lv = rng.integers(1, max_level + 1, size=n)
-    ids = np.array([rng.integers(0, min(o.num_elements(l), 2**62)) for l in lv], np.uint64)
-    return o.from_linear_id(u64m.from_int(ids), jnp.asarray(lv, jnp.int32))
 
 
 SHAPES = [7, 250]  # small: interpret-mode compiles are expensive on 1 CPU core
@@ -25,7 +18,7 @@ SHAPES = [7, 250]  # small: interpret-mode compiles are expensive on 1 CPU core
 @pytest.mark.parametrize("n", SHAPES)
 def test_morton_key_kernel(d, n):
     o = get_ops(d)
-    s = rand_simplices(d, n, o.L, seed=n)
+    s = rand_simplices(d, n, seed=n, max_level=o.L)
     hi, lo = kops.morton_key(d, s)
     # oracle needs the padded key of the element itself
     want = o.morton_key(s)
@@ -37,7 +30,7 @@ def test_morton_key_kernel(d, n):
 @pytest.mark.parametrize("n", SHAPES)
 def test_decode_kernel_roundtrip(d, n):
     o = get_ops(d)
-    s = rand_simplices(d, n, o.L, seed=n + 1)
+    s = rand_simplices(d, n, seed=n + 1, max_level=o.L)
     key = o.morton_key(s)
     out = kops.decode(d, key, s.level)
     np.testing.assert_array_equal(np.asarray(out.anchor), np.asarray(s.anchor))
@@ -48,7 +41,7 @@ def test_decode_kernel_roundtrip(d, n):
 @pytest.mark.parametrize("n", [130])
 def test_face_neighbor_kernel(d, n):
     o = get_ops(d)
-    s = rand_simplices(d, n, o.L, seed=n + 2)
+    s = rand_simplices(d, n, seed=n + 2, max_level=o.L)
     for f in range(d + 1):
         nb, dual = kops.face_neighbor(d, s, f)
         want_nb, want_dual = o.face_neighbor(s, jnp.int32(f))
@@ -57,6 +50,7 @@ def test_face_neighbor_kernel(d, n):
         np.testing.assert_array_equal(np.asarray(dual), np.asarray(want_dual))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("d", [2, 3])
 @pytest.mark.parametrize("n", [130])
 def test_successor_kernel(d, n):
@@ -72,9 +66,53 @@ def test_successor_kernel(d, n):
 
 
 @pytest.mark.parametrize("d", [2, 3])
+@pytest.mark.parametrize("n", [130])
+def test_parent_kernel(d, n):
+    o = get_ops(d)
+    rng = np.random.default_rng(n + 4)
+    lv = rng.integers(1, o.L + 1, size=n)
+    ids = np.array([rng.integers(0, min(o.num_elements(l), 2**62)) for l in lv], np.uint64)
+    s = o.from_linear_id(u64m.from_int(ids), jnp.asarray(lv, jnp.int32))
+    p = kops.parent(d, s)
+    want = o.parent(s)
+    np.testing.assert_array_equal(np.asarray(p.anchor), np.asarray(want.anchor))
+    np.testing.assert_array_equal(np.asarray(p.level), np.asarray(want.level))
+    np.testing.assert_array_equal(np.asarray(p.stype), np.asarray(want.stype))
+    iloc = kops.local_index(d, s)
+    np.testing.assert_array_equal(np.asarray(iloc), np.asarray(o.local_index(s)))
+
+
+@pytest.mark.parametrize("d", [2, 3])
+@pytest.mark.parametrize("n", [130])
+def test_children_kernel(d, n):
+    o = get_ops(d)
+    s = rand_simplices(d, n, seed=n + 5, max_level=o.L - 1)
+    kids = kops.children(d, s)
+    want = o.children_tm(s)
+    np.testing.assert_array_equal(np.asarray(kids.anchor), np.asarray(want.anchor))
+    np.testing.assert_array_equal(np.asarray(kids.level), np.asarray(want.level))
+    np.testing.assert_array_equal(np.asarray(kids.stype), np.asarray(want.stype))
+
+
+@pytest.mark.parametrize("d", [2, 3])
+@pytest.mark.parametrize("n", [130])
+def test_inside_root_kernel(d, n):
+    """Face neighbors step outside the root: the interesting inputs."""
+    o = get_ops(d)
+    s = rand_simplices(d, n, seed=n + 6, max_level=o.L)
+    got = kops.is_inside_root(d, s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(o.is_inside_root(s)))
+    for f in range(d + 1):
+        nb, _ = o.face_neighbor(s, jnp.int32(f))
+        got = kops.is_inside_root(d, nb)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(o.is_inside_root(nb)))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("d", [2, 3])
 def test_kernel_block_sizes(d):
     o = get_ops(d)
-    s = rand_simplices(d, 100, o.L, seed=99)
+    s = rand_simplices(d, 100, seed=99, max_level=o.L)
     for block in (64, 256):
         hi, lo = kops.morton_key(d, s, block)
         want = o.morton_key(s)
@@ -86,7 +124,7 @@ def test_kernel_block_sizes(d):
 def test_ref_module_consistency(d):
     """kernels.ref (the documented oracle) equals core.ops on raw arrays."""
     o = get_ops(d)
-    s = rand_simplices(d, 256, o.L, seed=5)
+    s = rand_simplices(d, 256, seed=5, max_level=o.L)
     fields = [s.anchor[..., k] for k in range(d)]
     hi, lo = kref.morton_key_ref(d, *fields, s.stype)
     want = o.morton_key(s)
@@ -94,3 +132,13 @@ def test_ref_module_consistency(d):
     np.testing.assert_array_equal(np.asarray(lo), np.asarray(want.lo))
     outs = kref.decode_ref(d, hi, lo, s.level)
     np.testing.assert_array_equal(np.asarray(outs[d]), np.asarray(s.stype))
+    raw = (*fields, s.level, s.stype)
+    pouts = kref.parent_ref(d, *raw)
+    want_p = o.parent(s)
+    np.testing.assert_array_equal(np.asarray(pouts[d]), np.asarray(want_p.stype))
+    np.testing.assert_array_equal(np.asarray(pouts[d + 1]), np.asarray(o.local_index(s)))
+    couts = kref.children_ref(d, *raw)
+    np.testing.assert_array_equal(np.asarray(couts[d]), np.asarray(o.children_tm(s).stype))
+    np.testing.assert_array_equal(
+        np.asarray(kref.is_inside_root_ref(d, *raw)), np.asarray(o.is_inside_root(s))
+    )

@@ -32,6 +32,7 @@ def make_batch(cfg, key, B, S):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_NAMES)
 def test_train_loss_finite(arch):
     cfg = tiny(arch)
@@ -47,6 +48,7 @@ def test_train_loss_finite(arch):
     assert all(np.isfinite(np.asarray(l)).all() for l in leaves[:5])
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_NAMES)
 def test_prefill_decode_matches_forward(arch):
     cfg = tiny(arch)

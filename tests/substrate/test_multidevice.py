@@ -73,6 +73,7 @@ print("elastic checkpoint OK")
 """
 
 
+@pytest.mark.slow
 def test_multidevice_suite():
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,

@@ -11,6 +11,7 @@ import pytest
 ROOT = Path(__file__).resolve().parents[1]
 
 
+@pytest.mark.slow
 def test_quickstart_example_runs():
     r = subprocess.run(
         [sys.executable, str(ROOT / "examples" / "quickstart.py")],
@@ -21,6 +22,7 @@ def test_quickstart_example_runs():
     assert "roundtrip on rank 0: True" in r.stdout
 
 
+@pytest.mark.slow
 def test_amr_fractal_example_counts():
     r = subprocess.run(
         [sys.executable, str(ROOT / "examples" / "amr_fractal.py")],
@@ -31,6 +33,7 @@ def test_amr_fractal_example_counts():
     assert r.stdout.count("True") >= 3  # measured == analytic at k=1,2,3
 
 
+@pytest.mark.slow
 def test_train_example_tiny_runs_and_restarts(tmp_path):
     env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"}
     args = [sys.executable, str(ROOT / "examples" / "train_lm.py"),
@@ -82,6 +85,7 @@ def test_hlo_cost_model_counts_loops():
     assert abs(res["flops"] - want) / want < 0.01, res["flops"]
 
 
+@pytest.mark.slow
 def test_fem_diffusion_example():
     r = subprocess.run(
         [sys.executable, str(ROOT / "examples" / "fem_diffusion.py")],
