@@ -20,6 +20,10 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
                          (reference / jnp / pallas) at several mesh sizes;
                          asserts bit-identical forests and writes
                          BENCH_forest.json (derived = speedup vs reference)
+  multitree              cross-tree Balance/Ghost on the 2-tree (2D) and
+                         6-tree (3D) cube domains per backend; asserts
+                         bit-identity and that refinement ripples across
+                         tree faces (derived = cross-tree ghost fraction)
   roofline_summary       reads results/dryrun/*.json (derived = roofline
                          fraction); run `python -m repro.launch.dryrun --all`
                          first
@@ -261,6 +265,57 @@ def forest_backends(tiny: bool = False):
     row("forest_backends_json", 0.0, str(out_path))
 
 
+def multitree(tiny: bool = False):
+    """Cross-tree Balance/Ghost wall time on connected cube domains.
+
+    2 simulated ranks, corner refinement in tree 0 rippling across the glued
+    tree faces; asserts bit-identical forests and ghost layers between the
+    reference and jnp backends and reports the cross-tree ghost fraction."""
+    from repro.core import batch
+    from repro.core import cmesh as C
+    from repro.core import forest as F
+
+    cases = [(2, 2, 4)] if tiny else [(2, 3, 5), (3, 2, 4)]
+    for d, base, deep in cases:
+        cm = C.cmesh_unit_cube(d)
+        comm = F.SimComm(2)
+        base_fs = F.new_uniform(d, cm.num_trees, base, comm, cmesh=cm)
+
+        def corner(tree, elems, cap=deep):
+            a = np.asarray(elems.anchor)
+            l = np.asarray(elems.level)
+            return ((np.asarray(tree) == 0) & (a.sum(1) == 0) & (l < cap)).astype(np.int32)
+
+        sigs = {}
+        for be in ("reference", "jnp"):
+            with batch.use_backend(be):
+                fs = [F.adapt(f, corner, recursive=True) for f in base_fs]
+                us_bal = _time(lambda: F.balance(fs, comm), n=2)
+                out = F.balance(fs, comm)
+                us_gh = _time(lambda: F.ghost(out, comm), n=2)
+                gh = F.ghost(out, comm)
+                sigs[be] = (
+                    np.concatenate([f.keys for f in out]),
+                    np.concatenate([f.tree for f in out]),
+                    [tuple(map(tuple, g["anchor"])) for g in gh],
+                    [tuple(int(v) for k in ("level", "stype", "tree", "owner")
+                           for v in g[k]) for g in gh],
+                )
+                n = F.count_global(out)
+                n_gh = sum(len(g["level"]) for g in gh)
+                cross = 0
+                for p, g in enumerate(gh):
+                    local_trees = set(out[p].tree.tolist())
+                    cross += sum(1 for t in g["tree"].tolist() if t not in local_trees)
+                row(f"multitree_{be}_balance_d{d}", us_bal, f"n={n}")
+                row(f"multitree_{be}_ghost_d{d}", us_gh,
+                    f"ghosts={n_gh}:crosstree={cross / max(n_gh, 1):.2f}")
+        for a, b in zip(sigs["reference"], sigs["jnp"]):
+            assert a == b if isinstance(a, list) else np.array_equal(a, b), \
+                f"jnp diverged from reference on multitree d={d}"
+    row("multitree_identical", 0.0, "reference==jnp")
+
+
 def roofline_summary():
     d = Path(__file__).resolve().parents[1] / "results" / "dryrun"
     if not d.exists():
@@ -285,6 +340,7 @@ SUITES = {
     "pallas_kernels": pallas_kernels,
     "moe_placement": lambda tiny: moe_placement(),
     "forest_backends": forest_backends,
+    "multitree": multitree,
     "roofline_summary": lambda tiny: roofline_summary(),
 }
 

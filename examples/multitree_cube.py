@@ -1,0 +1,77 @@
+"""Inter-tree connectivity demo: one connected cube domain of Kuhn simplices.
+
+The paper restricts Balance/Ghost to a single root simplex; the coarse-mesh
+layer `repro.core.cmesh` lifts that: the unit cube splits into d! root
+simplices (2 triangles / 6 tetrahedra) glued along their shared faces, and
+refinement driven inside ONE tree ripples across tree faces during Balance,
+while Ghost returns remote leaves from *other* trees, re-expressed in their
+owner tree's coordinates.
+
+    PYTHONPATH=src python examples/multitree_cube.py
+"""
+
+import numpy as np
+
+from repro.core import cmesh as C
+from repro.core import forest as F
+
+
+def corner_cb(deep):
+    def cb(tree, elems):
+        a = np.asarray(elems.anchor)
+        l = np.asarray(elems.level)
+        return ((np.asarray(tree) == 0) & (a.sum(1) == 0) & (l < deep)).astype(np.int32)
+    return cb
+
+
+def main():
+    for d, base, deep in ((2, 2, 5), (3, 1, 4)):
+        cm = C.cmesh_unit_cube(d)
+        n_conn = int((cm.face_tree >= 0).sum())
+        print(f"== d={d}: {cm.num_trees}-tree cube, {n_conn} glued tree faces ==")
+        comm = F.SimComm(2)
+        fs = F.new_uniform(d, cm.num_trees, base, comm, cmesh=cm)
+
+        # refine the origin corner of tree 0 only
+        fs = [F.adapt(f, corner_cb(deep), recursive=True) for f in fs]
+        before = F.count_global(fs)
+        per_tree_before = np.bincount(
+            np.concatenate([f.tree for f in fs]), minlength=cm.num_trees
+        )
+
+        fs = F.balance(fs, comm)
+        per_tree = np.bincount(
+            np.concatenate([f.tree for f in fs]), minlength=cm.num_trees
+        )
+        print(f"   balance: {before} -> {F.count_global(fs)} elements; per tree "
+              f"{per_tree_before.tolist()} -> {per_tree.tolist()} "
+              f"(refinement crossed the tree faces)")
+
+        gh = F.ghost(fs, comm)
+        total = sum(len(g["level"]) for g in gh)
+        cross = 0
+        for p, g in enumerate(gh):
+            local_trees = set(fs[p].tree.tolist())
+            cross += sum(1 for t in g["tree"].tolist() if t not in local_trees)
+        print(f"   ghost: {total} entries, {cross} from trees the rank holds "
+              f"no elements of; validate(fs, gh) = {F.validate(fs, gh)}")
+
+        # face classification on rank 0 (the old is_root_boundary, split)
+        s = fs[0].simplices()
+        kinds = np.stack([F.face_kind(fs[0], s, f) for f in range(d + 1)])
+        print(f"   rank-0 faces: {int((kinds == F.FACE_INTERIOR).sum())} interior, "
+              f"{int((kinds == F.FACE_INTER_TREE).sum())} inter-tree, "
+              f"{int((kinds == F.FACE_DOMAIN_BOUNDARY).sum())} domain boundary")
+
+    # fully periodic cube: no boundary at all
+    cm = C.cmesh_unit_cube(2, periodic=(True, True))
+    comm = F.SimComm(1)
+    fs = F.new_uniform(2, cm.num_trees, 2, comm, cmesh=cm)
+    s = fs[0].simplices()
+    nb = sum(int((F.face_kind(fs[0], s, f) == F.FACE_DOMAIN_BOUNDARY).sum())
+             for f in range(3))
+    print(f"== periodic 2D cube: {nb} boundary faces (torus) ==")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ Layers:
   u64        — uint32-pair integer arithmetic (TPU-safe 64-bit emulation)
   ops        — vectorized constant-time element algorithms (paper Section 4)
   batch      — batched element-ops dispatch (reference / jnp / pallas backends)
+  cmesh      — coarse-mesh inter-tree connectivity (gluing tables, transforms)
   reference  — pure-Python oracles (tests only)
   forest     — forest-of-trees AMR: New / Adapt / Partition / Balance / Ghost
   placement  — SFC-based load balancing applied to LM training workloads
@@ -15,12 +16,26 @@ from .tables import MAXLEVEL, SFCTables, get_tables
 from .types import Simplex, root, simplex
 from .ops import SimplexOps, get_ops, ops2d, ops3d
 from .batch import BatchedOps, get_batch_ops, get_backend, set_backend, use_backend
+from .cmesh import (
+    Cmesh,
+    cmesh_brick,
+    cmesh_disconnected,
+    cmesh_rotated_pair,
+    cmesh_single,
+    cmesh_unit_cube,
+)
 from . import u64
 
 __all__ = [
     "MAXLEVEL",
     "SFCTables",
     "get_tables",
+    "Cmesh",
+    "cmesh_brick",
+    "cmesh_disconnected",
+    "cmesh_rotated_pair",
+    "cmesh_single",
+    "cmesh_unit_cube",
     "Simplex",
     "root",
     "simplex",

@@ -22,7 +22,8 @@ fails its self-test (e.g. no Pallas lowering on this host) falls back to
 `jnp` — both with a warning, never an error.
 
 Future scaling PRs (sharding, multi-device partition) plug in here: a new
-backend only has to implement the eight-method `BatchedOps` surface.
+backend only has to implement the `BatchedOps` method surface (the eight
+per-element algorithms plus the cross-tree `tree_transform`).
 """
 
 from __future__ import annotations
@@ -118,6 +119,7 @@ def _jnp_fns(d: int):
         "successor": jax.jit(o.successor),
         "is_inside_root": jax.jit(o.is_inside_root),
         "local_index": jax.jit(o.local_index),
+        "tree_transform": jax.jit(o.tree_transform),
     }
 
 
@@ -142,10 +144,11 @@ def _pallas_ok(d: int) -> bool:
 class BatchedOps:
     """Backend-bound batched element ops over `Simplex` arrays of shape (n,).
 
-    The eight methods mirror the paper's constant-time element algorithms;
-    every forest hot loop (adapt's child generation and family-head scan,
-    balance's neighbor sweeps, ghost's boundary pass) consumes exactly this
-    surface.
+    The methods mirror the paper's constant-time element algorithms (plus
+    the cross-tree coordinate change of `repro.core.cmesh`); every forest
+    hot loop (adapt's child generation and family-head scan, balance's and
+    ghost's neighbor sweeps — across tree faces included) consumes exactly
+    this surface.
     """
 
     def __init__(self, d: int, backend: str):
@@ -304,6 +307,35 @@ class BatchedOps:
         from repro.kernels import ops as kops
 
         return self._pallas(kops.local_index, s)
+
+    def tree_transform(self, s: Simplex, M, c, typemap) -> Simplex:
+        """Cross-tree coordinate change (the `repro.core.cmesh` gluing map):
+        anchor' = M @ anchor + c with the reflected-axis anchor correction,
+        type through the per-connection `typemap`.  The translation is
+        carried modulo 2^32 (see `cmesh.wrap_i32`) so all backends wrap
+        identically."""
+        from .cmesh import wrap_i32
+
+        M = np.asarray(M, np.int64)
+        c32 = wrap_i32(c)
+        tm = np.asarray(typemap, np.int64)
+        which = self._which(s.level.shape[0])
+        if which == "reference":
+            return self.ops.tree_transform(s, M, c32, tm)
+        if which == "jnp":
+            out, n = self._jnp(
+                "tree_transform", s,
+                jnp.asarray(M, jnp.int32), jnp.asarray(c32), jnp.asarray(tm, jnp.int32),
+            )
+            return self._cut(out, n)
+        from repro.kernels import ops as kops
+
+        key = (
+            tuple(tuple(int(v) for v in row) for row in M.tolist()),
+            tuple(int(v) for v in c32.tolist()),
+            tuple(int(v) for v in tm.tolist()),
+        )
+        return self._pallas(kops.tree_transform, s, *key)
 
 
 @functools.lru_cache(maxsize=None)

@@ -1,0 +1,389 @@
+"""Coarse-mesh inter-tree connectivity for the forest (paper's stated extension).
+
+The paper restricts Balance and Ghost to a single root simplex and names
+multi-tree face connectivity as the open extension ("additional theoretical
+work"); Holke's dissertation and t8code supply the missing layer: a *coarse
+mesh* (cmesh) of K root simplices with per-face gluing data, plus an
+element-level transform that re-expresses a boundary element's outside
+face-neighbor in the neighbor tree's coordinate system.
+
+Every tree's local frame is the reference root simplex ``S_0`` at scale
+``2^MAXLEVEL``.  A gluing between two trees is an affine automorphism of the
+Freudenthal (Kuhn) complex
+
+    x  ->  M @ x + c,
+
+where ``M`` is a *global-sign signed permutation* (``M = sigma * P`` with
+``P`` a permutation matrix and ``sigma`` in {+1, -1}) and ``c`` an integer
+translation.  Signed permutations with mixed signs do NOT preserve the Kuhn
+triangulation (they flip the cube diagonal the types share), so they are
+rejected; the global-sign family is exactly the lattice-isometry stabilizer
+of the complex.  As everywhere in this repo the per-connection tables
+(type map, vertex/face map) are *derived* from first principles — by
+transforming the reference simplices and re-matching them — not transcribed.
+
+Constructors for canonical domains:
+
+  cmesh_single          one tree, all faces domain boundary
+  cmesh_disconnected    K isolated trees (the legacy forest behaviour)
+  cmesh_unit_cube       the d!-simplex Kuhn decomposition of one cube
+                        (2 triangles in 2D, 6 tetrahedra in 3D)
+  cmesh_brick           an n1 x n2 (x n3) array of Kuhn cubes, optionally
+                        periodic per axis (wrap gluings are translations)
+  cmesh_rotated_pair    2D: a triangle and its point-reflected copy glued
+                        into a parallelogram (exercises sigma = -1)
+
+The element-level entry point is ``transform_across_face(s, tree, face)``;
+the batched backends reach the same math through
+``BatchedOps.tree_transform`` so the forest hot loops stay bit-identical
+across reference / jnp / pallas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from functools import lru_cache
+
+import jax.numpy as jnp
+import numpy as np
+
+from .ops import get_ops
+from .tables import MAXLEVEL, get_tables, root_face_planes
+from .types import Simplex
+
+__all__ = [
+    "Cmesh",
+    "cmesh_single",
+    "cmesh_disconnected",
+    "cmesh_unit_cube",
+    "cmesh_brick",
+    "cmesh_rotated_pair",
+    "signed_perm_maps",
+    "wrap_i32",
+]
+
+
+def wrap_i32(a) -> np.ndarray:
+    """Two's-complement int32 wrap of an int64 array.
+
+    Gluing translations can reach 2*2^MAXLEVEL (= 2^31 in 2D), one past the
+    int32 range; since every *valid* transformed anchor lands back in
+    [0, 2^MAXLEVEL), doing the transform arithmetic modulo 2^32 is exact —
+    all integer backends (numpy, jnp, Pallas) wrap identically."""
+    a = np.asarray(a, np.int64)
+    return ((a + 2**31) % 2**32 - 2**31).astype(np.int32)
+
+
+# ------------------------------------------------------------ derived pieces
+@lru_cache(maxsize=None)
+def _signed_perm_maps_cached(d: int, M_key: tuple) -> tuple:
+    t = get_tables(d)
+    nt = t.num_types
+    M = np.asarray(M_key, np.int64)
+    typemap = np.zeros(nt, np.int32)
+    vertmap = np.zeros((nt, d + 1), np.int32)
+    refs = [
+        [tuple(r) for r in t.ref_verts[b].astype(np.int64).tolist()] for b in range(nt)
+    ]
+    for b in range(nt):
+        W = t.ref_verts[b].astype(np.int64) @ M.T
+        # The image cube's min corner: every type contains the cube's main
+        # diagonal, so the min over image vertices is the image anchor.
+        rel = [tuple(r) for r in (W - W.min(axis=0)).tolist()]
+        for b2 in range(nt):
+            if set(rel) == set(refs[b2]):
+                typemap[b] = b2
+                for a in range(d + 1):
+                    vertmap[b, a] = refs[b2].index(rel[a])
+                break
+        else:
+            raise ValueError(
+                f"linear part {M.tolist()} is not an automorphism of the "
+                f"Freudenthal complex (d={d}); only global-sign signed "
+                "permutations are admissible"
+            )
+    return typemap, vertmap
+
+
+def signed_perm_maps(d: int, M) -> tuple[np.ndarray, np.ndarray]:
+    """(typemap, vertmap) of the complex automorphism with linear part `M`.
+
+    typemap[b]    = type of the image of a type-b simplex.
+    vertmap[b, a] = vertex index (in the image's reference numbering) that
+                    vertex `a` of a type-b simplex maps to; since face f is
+                    the face opposite vertex f, this is also the face map.
+    Raises ValueError when `M` does not preserve the Kuhn triangulation.
+    """
+    M = np.asarray(M, np.int64)
+    tm, vm = _signed_perm_maps_cached(d, tuple(map(tuple, M.tolist())))
+    return tm.copy(), vm.copy()
+
+
+def _perm_matrix_for_type(d: int, b: int) -> np.ndarray:
+    """The unique permutation matrix mapping S_0 onto S_b (brute-forced;
+    permutations act simply transitively on the Kuhn simplices of a cube)."""
+    t = get_tables(d)
+    target = set(map(tuple, t.ref_verts[b].astype(np.int64).tolist()))
+    for perm in itertools.permutations(range(d)):
+        P = np.zeros((d, d), np.int64)
+        for a, pa in enumerate(perm):
+            P[pa, a] = 1
+        img = set(tuple(v) for v in (t.ref_verts[0].astype(np.int64) @ P.T).tolist())
+        if img == target:
+            return P
+    raise AssertionError(f"no permutation maps S_0 to S_{b} (d={d})")
+
+
+# ------------------------------------------------------------------- Cmesh
+_Conn = dataclasses.make_dataclass(
+    "Connection", ["tree", "face", "M", "c", "typemap", "facemap"]
+)
+
+
+@dataclasses.dataclass(eq=False)
+class Cmesh:
+    """K root simplices with per-face (neighbor tree, neighbor face,
+    gluing transform) tables, all in each tree's local frame (root = S_0
+    at scale 2^MAXLEVEL).
+
+    face_tree[t, f] is -1 where face f of tree t is a *domain boundary*;
+    otherwise the face is an *inter-tree face* and (face_M, face_c) map
+    tree-t coordinates into the neighbor tree's frame.
+    """
+
+    d: int
+    num_trees: int
+    face_tree: np.ndarray      # (K, d+1) int32, -1 = domain boundary
+    face_face: np.ndarray      # (K, d+1) int32, neighbor's face index
+    face_M: np.ndarray         # (K, d+1, d, d) int32 gluing linear part
+    face_c: np.ndarray         # (K, d+1, d) int64 gluing translation (scale 2^L)
+    face_typemap: np.ndarray   # (K, d+1, d!) int32 type map under face_M
+    face_facemap: np.ndarray   # (K, d+1, d!, d+1) int32 vertex/face map
+    tree_embed_M: np.ndarray   # (K, d, d) int32 world embedding linear part
+    tree_embed_o: np.ndarray   # (K, d) int64 world cube offset (unit scale)
+
+    @property
+    def L(self) -> int:
+        return MAXLEVEL[self.d]
+
+    def is_connected(self, tree: int, root_face: int) -> bool:
+        """True where `root_face` of `tree` is an inter-tree face (False =
+        domain boundary) — the split of the old is_root_boundary notion."""
+        return bool(self.face_tree[tree, root_face] >= 0)
+
+    def connection(self, tree: int, root_face: int):
+        """The gluing record of an inter-tree face (None at the boundary)."""
+        if not self.is_connected(tree, root_face):
+            return None
+        return _Conn(
+            int(self.face_tree[tree, root_face]),
+            int(self.face_face[tree, root_face]),
+            self.face_M[tree, root_face],
+            self.face_c[tree, root_face],
+            self.face_typemap[tree, root_face],
+            self.face_facemap[tree, root_face],
+        )
+
+    # ------------------------------------------------------------ geometry
+    def root_face_of(self, s: Simplex, face) -> np.ndarray:
+        """Which root facet contains face `face` of each element (vectorized
+        plane tests against the derived facet equations); -1 when the face
+        is interior.  `face` is a scalar or (n,) element-face index."""
+        o = get_ops(self.d)
+        coords = np.asarray(o.coordinates(s), np.int64)  # (n, d+1, d)
+        face = np.broadcast_to(np.asarray(face, np.int32), coords.shape[:1])
+        keep = np.arange(self.d + 1)[None, :] != face[:, None]  # (n, d+1)
+        V = coords[keep].reshape(coords.shape[0], self.d, self.d)
+        out = np.full(V.shape[0], -1, np.int32)
+        for rf, (n_, r_) in enumerate(root_face_planes(self.d)):
+            on = (V @ np.asarray(n_, np.int64) == (r_ << self.L)).all(axis=1)
+            out[on] = rf
+        return out
+
+    # ----------------------------------------------------------- transform
+    def transform_across_face(self, s: Simplex, tree: int, root_face: int,
+                              bops=None) -> tuple[Simplex, int]:
+        """Map elements `s` (in `tree`'s frame, lying just OUTSIDE its root
+        across `root_face`) into the neighbor tree's frame: (s', tree').
+
+        With `bops` (a BatchedOps), the batched backend does the math —
+        reference / jnp / pallas stay bit-identical; otherwise the eager
+        SimplexOps path runs."""
+        tree, root_face = int(tree), int(root_face)
+        t2 = int(self.face_tree[tree, root_face])
+        if t2 < 0:
+            raise ValueError(f"tree {tree} face {root_face} is a domain boundary")
+        M = self.face_M[tree, root_face]
+        c = self.face_c[tree, root_face]
+        tm = self.face_typemap[tree, root_face]
+        if bops is not None:
+            return bops.tree_transform(s, M, c, tm), t2
+        return get_ops(self.d).tree_transform(s, M, wrap_i32(c), tm), t2
+
+    def world_vertices(self, tree: int, s: Simplex) -> np.ndarray:
+        """(n, d+1, d) int64 vertex coordinates in the global world lattice
+        (scale 2^L per unit cube) — the frame the brute-force test oracles
+        match in."""
+        o = get_ops(self.d)
+        coords = np.asarray(o.coordinates(s), np.int64)
+        M = self.tree_embed_M[tree].astype(np.int64)
+        off = self.tree_embed_o[tree].astype(np.int64) << self.L
+        return coords @ M.T + off
+
+
+# ------------------------------------------------------------- construction
+def _from_embeddings(d: int, embeds, box=None, periodic=None) -> Cmesh:
+    """Derive the full connectivity from per-tree world embeddings
+    ``world = M_t @ local + o_t * 2^L`` (unit-scale integer offsets `o_t`),
+    by brute-force face matching in world coordinates — the same
+    derive-don't-transcribe approach as `tables.py`."""
+    t = get_tables(d)
+    L = MAXLEVEL[d]
+    nt = t.num_types
+    K = len(embeds)
+    periodic = tuple(periodic) if periodic is not None else (False,) * d
+    rv0 = t.ref_verts[0].astype(np.int64)
+
+    Ms, os_ = [], []
+    world = []
+    for M, o in embeds:
+        M = np.asarray(M, np.int64)
+        o = np.asarray(o, np.int64)
+        signed_perm_maps(d, M)  # validates admissibility
+        Ms.append(M)
+        os_.append(o)
+        world.append(rv0 @ M.T + o)
+
+    # face registry in (wrapped) world coordinates at unit scale
+    reg: dict[frozenset, list] = {}
+    for tr in range(K):
+        for f in range(d + 1):
+            V = np.delete(world[tr], f, axis=0)
+            w = np.zeros(d, np.int64)
+            if box is not None:
+                for k in range(d):
+                    if periodic[k] and np.all(V[:, k] == box[k]):
+                        w[k] = -box[k]
+            key = frozenset(map(tuple, (V + w).tolist()))
+            reg.setdefault(key, []).append((tr, f, w))
+
+    face_tree = np.full((K, d + 1), -1, np.int32)
+    face_face = np.zeros((K, d + 1), np.int32)
+    face_M = np.tile(np.eye(d, dtype=np.int32), (K, d + 1, 1, 1))
+    face_c = np.zeros((K, d + 1, d), np.int64)
+    face_typemap = np.tile(np.arange(nt, dtype=np.int32), (K, d + 1, 1))
+    face_facemap = np.tile(np.arange(d + 1, dtype=np.int32), (K, d + 1, nt, 1))
+
+    for key, lst in reg.items():
+        if len(lst) == 1:
+            continue  # domain boundary
+        if len(lst) != 2:
+            raise ValueError(f"face {sorted(key)} shared by {len(lst)} trees")
+        for (t1, f1, w1), (t2, f2, w2) in (lst, lst[::-1]):
+            M = Ms[t2].T @ Ms[t1]
+            c = (Ms[t2].T @ (os_[t1] - os_[t2] + w1 - w2)) << L
+            # adjacent cubes keep |c| <= 2*2^L (the factor 2 needs a
+            # reflected embedding, e.g. the rotated pair)
+            assert np.abs(c).max(initial=0) <= (2 << L), "non-adjacent gluing"
+            tm, vm = signed_perm_maps(d, M)
+            face_tree[t1, f1] = t2
+            face_face[t1, f1] = f2
+            face_M[t1, f1] = M
+            face_c[t1, f1] = c
+            face_typemap[t1, f1] = tm
+            face_facemap[t1, f1] = vm
+
+    cm = Cmesh(
+        d=d, num_trees=K,
+        face_tree=face_tree, face_face=face_face,
+        face_M=face_M, face_c=face_c,
+        face_typemap=face_typemap, face_facemap=face_facemap,
+        tree_embed_M=np.stack(Ms).astype(np.int32),
+        tree_embed_o=np.stack(os_),
+    )
+    _check_connectivity(cm)
+    return cm
+
+
+def _check_connectivity(cm: Cmesh) -> None:
+    """Construction-time proofs: every gluing is involutive (composes with
+    its reverse to the identity) and maps the level-0 outside neighbor of
+    the source root exactly onto the neighbor tree's root."""
+    d, L = cm.d, cm.L
+    o = get_ops(d)
+    root = Simplex(
+        jnp.zeros((1, d), jnp.int32), jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32)
+    )
+    for t1 in range(cm.num_trees):
+        for f1 in range(d + 1):
+            t2 = int(cm.face_tree[t1, f1])
+            if t2 < 0:
+                continue
+            f2 = int(cm.face_face[t1, f1])
+            assert int(cm.face_tree[t2, f2]) == t1 and int(cm.face_face[t2, f2]) == f1
+            M12, c12 = cm.face_M[t1, f1].astype(np.int64), cm.face_c[t1, f1]
+            M21, c21 = cm.face_M[t2, f2].astype(np.int64), cm.face_c[t2, f2]
+            assert np.array_equal(M21 @ M12, np.eye(d, dtype=np.int64))
+            assert np.array_equal(M21 @ c12 + c21, np.zeros(d, np.int64))
+            # level-0: the outside neighbor across f1 IS the neighbor tree
+            nb, dual = o.face_neighbor(root, f1)
+            s2, tt = cm.transform_across_face(nb, t1, f1)
+            assert tt == t2
+            assert int(np.asarray(s2.stype)[0]) == 0 and int(np.asarray(s2.level)[0]) == 0
+            assert np.array_equal(np.asarray(s2.anchor)[0], np.zeros(d, np.int32))
+            bnb = int(np.asarray(nb.stype)[0])
+            assert int(cm.face_facemap[t1, f1, bnb, int(np.asarray(dual)[0])]) == f2
+
+
+def cmesh_disconnected(d: int, num_trees: int) -> Cmesh:
+    """K isolated trees — every tree face is a domain boundary (the legacy
+    forest behaviour, and the meaning of `Forest.cmesh is None`).  Trees are
+    embedded two cubes apart along axis 0 so world coordinates stay unique."""
+    e0 = np.zeros(d, np.int64)
+    embeds = []
+    for k in range(num_trees):
+        o = e0.copy()
+        o[0] = 2 * k
+        embeds.append((np.eye(d, dtype=np.int64), o))
+    return _from_embeddings(d, embeds)
+
+
+def cmesh_single(d: int) -> Cmesh:
+    """One root simplex, all faces domain boundary (the paper's setting)."""
+    return cmesh_disconnected(d, 1)
+
+
+def cmesh_brick(d: int, shape, periodic=None) -> Cmesh:
+    """An array of ``prod(shape)`` Kuhn cubes, each split into d! trees
+    (2 triangles / 6 tetrahedra); interior and (optionally, per-axis)
+    periodic faces are glued, outer faces are domain boundary.
+
+    Tree order: cells in C order (np.ndindex), types 0..d!-1 within a cell.
+    """
+    shape = tuple(int(s) for s in shape)
+    assert len(shape) == d and all(s >= 1 for s in shape)
+    nt = math.factorial(d)
+    perms = [_perm_matrix_for_type(d, b) for b in range(nt)]
+    embeds = []
+    for cell in np.ndindex(shape):
+        for b in range(nt):
+            embeds.append((perms[b], np.asarray(cell, np.int64)))
+    return _from_embeddings(d, embeds, box=shape, periodic=periodic)
+
+
+def cmesh_unit_cube(d: int, periodic=None) -> Cmesh:
+    """The Kuhn decomposition of one cube: 2 trees in 2D, 6 in 3D."""
+    return cmesh_brick(d, (1,) * d, periodic=periodic)
+
+
+def cmesh_rotated_pair() -> Cmesh:
+    """2D: S_0 plus its point-reflected copy glued along face 0 into a
+    parallelogram — the minimal domain whose gluing has sigma = -1, which
+    exercises the reflected-axis branch of the element transform."""
+    embeds = [
+        (np.eye(2, dtype=np.int64), np.zeros(2, np.int64)),
+        (-np.eye(2, dtype=np.int64), np.array([2, 1], np.int64)),
+    ]
+    return _from_embeddings(2, embeds)

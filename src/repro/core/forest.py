@@ -16,9 +16,14 @@ friendly), while variable-size bookkeeping stays in numpy on the host,
 matching how meshing layers sit next to accelerator compute in production
 frameworks.
 
-Inter-tree face connectivity is intentionally out of scope, exactly as in the
-paper (Balance/Ghost "require additional theoretical work"); we implement
-Balance and Ghost *within* each tree and treat tree faces as boundaries.
+Inter-tree face connectivity — the paper's stated open extension (Balance and
+Ghost "require additional theoretical work" across root simplices) — is
+provided by the coarse-mesh layer `repro.core.cmesh`: a forest built with a
+`Cmesh` follows face neighbors across tree faces (transforming elements into
+the neighbor tree's frame with the per-connection gluing tables) and treats
+only the Cmesh's unconnected faces as domain boundary.  A forest without a
+Cmesh (`cmesh=None`) keeps the paper's single-tree semantics: every tree
+face is a boundary.
 """
 
 from __future__ import annotations
@@ -31,7 +36,9 @@ import jax.numpy as jnp
 
 from . import u64 as u64m
 from .batch import BatchedOps, get_batch_ops
+from .cmesh import Cmesh
 from .ops import SimplexOps, get_ops
+from .tables import face_plane
 from .types import Simplex
 
 __all__ = [
@@ -45,6 +52,10 @@ __all__ = [
     "iterate",
     "validate",
     "count_global",
+    "face_kind",
+    "FACE_INTERIOR",
+    "FACE_INTER_TREE",
+    "FACE_DOMAIN_BOUNDARY",
 ]
 
 
@@ -86,6 +97,9 @@ class Forest:
     stype: np.ndarray         # (n,)  int32
     tree: np.ndarray          # (n,)  int32
     keys: np.ndarray          # (n,)  uint64 morton keys (level-padded ids)
+    # coarse-mesh connectivity; None = isolated trees (paper's single-tree
+    # semantics: every tree face is a domain boundary)
+    cmesh: Cmesh | None = None
 
     @property
     def ops(self) -> SimplexOps:
@@ -122,26 +136,29 @@ class Forest:
         return (int(self.tree[0]), self.keys[0])
 
 
-def _empty(d, num_trees, rank, num_ranks) -> Forest:
+def _empty(d, num_trees, rank, num_ranks, cmesh=None) -> Forest:
     return Forest(
         d, num_trees, rank, num_ranks,
         np.zeros((0, d), np.int32), np.zeros(0, np.int32), np.zeros(0, np.int32),
-        np.zeros(0, np.int32), np.zeros(0, np.uint64),
+        np.zeros(0, np.int32), np.zeros(0, np.uint64), cmesh,
     )
 
 
 # ---------------------------------------------------------------------- new
 def new_uniform(d: int, num_trees: int, level: int, comm: SimComm,
-                method: str = "decode") -> list[Forest]:
-    """Paper Algorithm 5.1 (New): partitioned uniform level-`level` forest."""
+                method: str = "decode", cmesh: Cmesh | None = None) -> list[Forest]:
+    """Paper Algorithm 5.1 (New): partitioned uniform level-`level` forest.
+
+    With `cmesh`, the trees are glued per its face tables and the forest's
+    Balance/Ghost/Iterate follow neighbors across tree faces."""
     return [
-        new_uniform_rank(d, num_trees, level, p, comm.P, method=method)
+        new_uniform_rank(d, num_trees, level, p, comm.P, method=method, cmesh=cmesh)
         for p in range(comm.P)
     ]
 
 
 def new_uniform_rank(d: int, num_trees: int, level: int, rank: int, num_ranks: int,
-                     method: str = "decode") -> Forest:
+                     method: str = "decode", cmesh: Cmesh | None = None) -> Forest:
     """One rank's portion of a uniform refinement — communication free.
 
     method="decode":    vectorized Algorithm 4.8 over the index range (O(n L)
@@ -151,12 +168,17 @@ def new_uniform_rank(d: int, num_trees: int, level: int, rank: int, num_ranks: i
                         Successor to achieve O(n); our batch analogue expands
                         whole subtrees level by level, also O(n) total work).
     """
+    if cmesh is not None:
+        assert cmesh.d == d and cmesh.num_trees == num_trees, (
+            f"cmesh ({cmesh.d}D, {cmesh.num_trees} trees) does not match "
+            f"forest ({d}D, {num_trees} trees)"
+        )
     o = get_ops(d)
     n_per_tree = o.num_elements(level)
     N = n_per_tree * num_trees
     g_first = (N * rank) // num_ranks
     g_last = (N * (rank + 1)) // num_ranks  # exclusive
-    f = _empty(d, num_trees, rank, num_ranks)
+    f = _empty(d, num_trees, rank, num_ranks, cmesh)
     if g_last <= g_first:
         return f
 
@@ -400,18 +422,92 @@ def partition(forests: list[Forest], comm: SimComm,
     return out
 
 
+# ------------------------------------------------------- cross-tree lookups
+FACE_INTERIOR = 0          # neighbor in the same tree
+FACE_INTER_TREE = 1        # neighbor across a glued tree face (via Cmesh)
+FACE_DOMAIN_BOUNDARY = 2   # no neighbor: true domain boundary
+
+
+def _face_lookup(f: Forest, s: Simplex, face: int):
+    """Where to look for the face-`face` neighbor of every local element.
+
+    Returns (tgt_tree, nkey, valid, nb, dual, kind):
+      tgt_tree  (n,) tree whose leaf table holds the neighbor region
+      nkey      (n,) uint64 neighbor morton key *in that tree's frame*
+                (garbage where ~valid — never read it there)
+      valid     (n,) False at the domain boundary
+      nb        neighbor Simplex, re-expressed in the target tree's frame
+                where the face crosses into another tree
+      dual      (n,) neighbor's face index back to us, renumbered through
+                the connection's face map for cross-tree faces
+      kind      (n,) FACE_INTERIOR / FACE_INTER_TREE / FACE_DOMAIN_BOUNDARY
+
+    This is the single seam where the old is_root_boundary notion splits
+    into "interior", "inter-tree face" (followed through `f.cmesh`), and
+    "domain boundary" (no Cmesh connection)."""
+    bops = f.bops
+    nb, dual = bops.face_neighbor(s, face)
+    inside = np.asarray(bops.is_inside_root(nb))
+    tgt = f.tree.copy()
+    valid = inside.copy()
+    kind = np.where(inside, FACE_INTERIOR, FACE_DOMAIN_BOUNDARY).astype(np.int32)
+    dual_np = np.asarray(dual).copy()
+    anchor = np.asarray(nb.anchor)
+    stype = np.asarray(nb.stype)
+    cm = f.cmesh
+    if cm is not None and not inside.all():
+        anchor = anchor.copy()
+        stype = stype.copy()
+        out_idx = np.nonzero(~inside)[0]
+        src = Simplex(
+            jnp.asarray(f.anchor[out_idx]), jnp.asarray(f.level[out_idx]),
+            jnp.asarray(f.stype[out_idx]),
+        )
+        rf = cm.root_face_of(src, face)
+        # group boundary crossings by connection (source tree, root face)
+        groups: dict[tuple[int, int], list[int]] = {}
+        for pos, (t1, rfv) in enumerate(zip(f.tree[out_idx], rf)):
+            if rfv >= 0 and cm.face_tree[t1, rfv] >= 0:
+                groups.setdefault((int(t1), int(rfv)), []).append(pos)
+        for (t1, rfv), poss in groups.items():
+            idx = out_idx[np.asarray(poss)]
+            sub = Simplex(
+                jnp.asarray(anchor[idx]), jnp.asarray(f.level[idx]),
+                jnp.asarray(stype[idx]),
+            )
+            s2, t2 = cm.transform_across_face(sub, t1, rfv, bops=bops)
+            old_stype = stype[idx]
+            anchor[idx] = np.asarray(s2.anchor)
+            stype[idx] = np.asarray(s2.stype)
+            dual_np[idx] = cm.face_facemap[t1, rfv][old_stype, dual_np[idx]]
+            tgt[idx] = t2
+            valid[idx] = True
+            kind[idx] = FACE_INTER_TREE
+    nb = Simplex(jnp.asarray(anchor), nb.level, jnp.asarray(stype))
+    nkey = bops.morton_key_np(nb)
+    return tgt, nkey, valid, nb, dual_np, kind
+
+
+def face_kind(f: Forest, s: Simplex, face: int) -> np.ndarray:
+    """Classify face `face` of every element: FACE_INTERIOR (0),
+    FACE_INTER_TREE (1), or FACE_DOMAIN_BOUNDARY (2) — the split of the old
+    single is-root-boundary test under the coarse mesh."""
+    return _face_lookup(f, s, face)[5]
+
+
 # ------------------------------------------------------------------ balance
 def balance(forests: list[Forest], comm: SimComm, max_rounds: int = 64) -> list[Forest]:
-    """2:1 balance across faces (ripple algorithm), intra-tree.
+    """2:1 balance across faces (ripple algorithm), across tree faces when
+    the forest carries a Cmesh (intra-tree otherwise).
 
     A leaf is refined when some face-neighbor region contains a leaf more
-    than one level finer.  Iterates to fixpoint; each round exchanges the
-    global leaf key sets (simulator; a production version exchanges only
-    boundary layers, cf. [Isaac-Burstedde-Ghattas]).
+    than one level finer; neighbor regions behind a glued tree face are
+    queried in the neighbor tree's frame.  Iterates to fixpoint; each round
+    exchanges the global leaf key sets (simulator; a production version
+    exchanges only boundary layers, cf. [Isaac-Burstedde-Ghattas]).
     """
     d = forests[0].d
     o = get_ops(d)
-    bops = get_batch_ops(d)
     for _ in range(max_rounds):
         # Global sorted (tree, key, level) table — simulator-level shortcut.
         all_tree = np.concatenate([f.tree for f in forests])
@@ -427,25 +523,20 @@ def balance(forests: list[Forest], comm: SimComm, max_rounds: int = 64) -> list[
                 continue
             s = f.simplices()
             need = np.zeros(f.num_local, bool)
+            span = np.uint64(1) << (np.uint64(d) * (np.uint64(o.L) - f.level.astype(np.uint64)))
             for face in range(d + 1):
-                nb, _ = bops.face_neighbor(s, face)
-                inside = np.asarray(bops.is_inside_root(nb))
-                nkey = bops.morton_key_np(nb)
-                span = np.uint64(1) << (np.uint64(d) * (np.uint64(o.L) - f.level.astype(np.uint64)))
-                # per-tree slices of the global sorted leaf table
-                need_f = np.zeros(f.num_local, bool)
-                for t in np.unique(f.tree):
-                    sel = np.nonzero(f.tree == t)[0]
+                tgt, nkey, valid, _, _, _ = _face_lookup(f, s, face)
+                # per-target-tree slices of the global sorted leaf table
+                for t in np.unique(tgt[valid]):
+                    sel = np.nonzero(valid & (tgt == t))[0]
                     gsel = slice(*np.searchsorted(g_tree, [t, t + 1]))
                     keys_t, level_t = g_keys[gsel], g_level[gsel]
                     lo_t = np.searchsorted(keys_t, nkey[sel], side="left")
                     hi_t = np.searchsorted(keys_t, nkey[sel] + span[sel], side="left")
                     # any leaf in the neighbor interval finer than level+1?
-                    mx = np.zeros(len(sel), np.int32)
                     for i, (a, b) in enumerate(zip(lo_t, hi_t)):
-                        mx[i] = level_t[a:b].max(initial=-1)
-                    need_f[sel] = inside[sel] & (mx > f.level[sel] + 1)
-                need |= need_f
+                        if level_t[a:b].max(initial=-1) > f.level[sel[i]] + 1:
+                            need[sel[i]] = True
             if need.any():
                 changed = True
                 flags = need.astype(np.int32)
@@ -463,8 +554,9 @@ def balance(forests: list[Forest], comm: SimComm, max_rounds: int = 64) -> list[
 # -------------------------------------------------------------------- ghost
 def ghost(forests: list[Forest], comm: SimComm) -> list[dict]:
     """Face-ghost layer: for each rank, the remote leaves touching its
-    elements across faces (intra-tree).  Returns per-rank dicts with ghost
-    element arrays and their owner ranks."""
+    elements across faces — following glued tree faces through the Cmesh
+    when the forest carries one.  Returns per-rank dicts with ghost element
+    arrays (in the *owning tree's* frame) and their owner ranks."""
     d = forests[0].d
     o = get_ops(d)
     bops = get_batch_ops(d)
@@ -494,22 +586,43 @@ def ghost(forests: list[Forest], comm: SimComm) -> list[dict]:
         s = f.simplices()
         cand = []
         for face in range(d + 1):
-            nb, _ = bops.face_neighbor(s, face)
-            inside = np.asarray(bops.is_inside_root(nb))
-            nkey = bops.morton_key_np(nb)
-            for t in np.unique(f.tree):
-                sel = np.nonzero((f.tree == t) & inside)[0]
-                if not len(sel):
-                    continue
+            tgt, nkey, valid, nb, dual, _ = _face_lookup(f, s, face)
+            nbc = None  # (n, d+1, d), computed only when candidates exist
+            for t in np.unique(tgt[valid]):
+                sel = np.nonzero(valid & (tgt == t))[0]
                 gsel = slice(*np.searchsorted(g_tree, [t, t + 1]))
                 keys_t, level_t, owner_t = g_keys[gsel], g_level[gsel], g_owner[gsel]
                 span = np.uint64(1) << (np.uint64(d) * (np.uint64(o.L) - f.level[sel].astype(np.uint64)))
                 lo = np.searchsorted(keys_t, nkey[sel], side="left")
                 hi = np.searchsorted(keys_t, nkey[sel] + span, side="left")
-                # same-or-finer leaves inside the neighbor region
+                # same-or-finer leaves inside the neighbor region that TOUCH
+                # the shared face: a descendant of the neighbor shares our
+                # face iff d of its vertices lie on the shared face's plane
+                # (inside the region, plane membership implies face overlap).
+                # Collect candidates first, then decode their coordinates in
+                # one batch — only boundary-interval leaves pay for geometry.
+                pend = []
                 for i, (a, b) in enumerate(zip(lo, hi)):
                     for j in range(a, b):
                         if owner_t[j] != p:
+                            pend.append((i, j))
+                if pend:
+                    if nbc is None:
+                        nbc = np.asarray(o.coordinates(nb), np.int64)
+                    js = sorted({j for _, j in pend})
+                    jmap = {j: k for k, j in enumerate(js)}
+                    cs = bops.decode(
+                        u64m.from_int(keys_t[js]), jnp.asarray(level_t[js])
+                    )
+                    ccoords = np.asarray(o.coordinates(cs), np.int64)
+                    planes = {}
+                    for i, j in pend:
+                        if i not in planes:
+                            planes[i] = face_plane(
+                                np.delete(nbc[sel[i]], int(dual[sel[i]]), axis=0)
+                            )
+                        nrm, rhs = planes[i]
+                        if (ccoords[jmap[j]] @ nrm == rhs).sum() == d:
                             cand.append((t, keys_t[j], level_t[j], owner_t[j]))
                 # coarser leaf containing the neighbor: predecessor check
                 pred = np.maximum(lo - 1, 0)
@@ -541,49 +654,90 @@ def ghost(forests: list[Forest], comm: SimComm) -> list[dict]:
 # ------------------------------------------------------------------ iterate
 def iterate(f: Forest, elem_fn=None, face_fn=None):
     """Paper's Iterate: run callbacks over local elements and interior local
-    same-tree face pairs (hanging faces delivered as (coarse, fine) pairs)."""
-    bops = f.bops
+    face pairs, including pairs straddling glued tree faces when the forest
+    carries a Cmesh.
+
+    Each pair row is (i, j, face_i, face_j).  Same-level pairs are delivered
+    once (i < j in storage order); hanging faces are delivered once per fine
+    sub-face as a (fine i, coarse j) pair, discovered from the fine side —
+    the coarser leaf is found by walking the neighbor's ancestor keys (pure
+    prefix masking), and face_j is the coarse facet containing the shared
+    face."""
     results = []
     if elem_fn is not None:
         results.append(elem_fn(f.tree, f.simplices()))
     if face_fn is not None:
+        o = f.ops
+        d, L = f.d, o.L
         s = f.simplices()
         key_index = {}
         for i in range(f.num_local):
             key_index[(int(f.tree[i]), int(f.keys[i]), int(f.level[i]))] = i
+        own_coords = None  # lazy: only adapted meshes have hanging faces
         pairs = []
-        for face in range(f.d + 1):
-            nb, dual = bops.face_neighbor(s, face)
-            inside = np.asarray(bops.is_inside_root(nb))
-            nkey = bops.morton_key_np(nb)
+        for face in range(d + 1):
+            tgt, nkey, valid, nb, dual, _ = _face_lookup(f, s, face)
             nlvl = np.asarray(nb.level)
-            for i in np.nonzero(inside)[0]:
-                j = key_index.get((int(f.tree[i]), int(nkey[i]), int(nlvl[i])))
-                if j is not None and i < j:
-                    pairs.append((i, j, face, int(np.asarray(dual)[i])))
+            nbc = None
+            for i in np.nonzero(valid)[0]:
+                j = key_index.get((int(tgt[i]), int(nkey[i]), int(nlvl[i])))
+                if j is not None:
+                    # same-level pairs are discovered from both sides: keep
+                    # one (self-pairs across periodic gluings keep face<dual)
+                    if i < j or (i == j and face < int(dual[i])):
+                        pairs.append((i, j, face, int(dual[i])))
+                    continue
+                # hanging face: the neighbor region may be covered by one
+                # COARSER leaf — its key is an ancestor prefix of nkey
+                for lc in range(int(nlvl[i]) - 1, -1, -1):
+                    mkey = int(nkey[i]) & ~((1 << (d * (L - lc))) - 1)
+                    j = key_index.get((int(tgt[i]), mkey, lc))
+                    if j is None:
+                        continue
+                    if nbc is None:
+                        nbc = np.asarray(o.coordinates(nb), np.int64)
+                    if own_coords is None:
+                        own_coords = np.asarray(o.coordinates(s), np.int64)
+                    shared = np.delete(nbc[i], int(dual[i]), axis=0)
+                    # the coarse facet whose plane contains the shared face
+                    for fc in range(d + 1):
+                        nrm, rhs = face_plane(np.delete(own_coords[j], fc, axis=0))
+                        if (shared @ nrm == rhs).all():
+                            pairs.append((i, j, face, fc))
+                            break
+                    else:
+                        raise AssertionError("hanging face without coarse facet")
+                    break
         results.append(face_fn(f, np.array(pairs, np.int64).reshape(-1, 4)))
     return results
 
 
 # ----------------------------------------------------------------- validate
-def validate(forests: list[Forest]) -> bool:
-    """Forest invariants: per-tree ascending TM order, leaves pairwise
-    non-overlapping (no ancestor relations), all inside root, and complete
-    volume coverage per tree."""
+def validate(forests: list[Forest], ghosts: list[dict] | None = None) -> bool:
+    """Forest invariants: *globally* ascending (tree, TM-index) leaf order in
+    stored rank-major order (not merely sortable), leaves pairwise
+    non-overlapping (no ancestor relations), all inside their root, complete
+    volume coverage per tree — and, when `ghosts` is given, ghost-layer
+    consistency: every ghost entry is an actual remote leaf on its claimed
+    owner rank (including entries reached across glued tree faces)."""
     d = forests[0].d
     o = get_ops(d)
     all_tree = np.concatenate([f.tree for f in forests])
     all_keys = np.concatenate([f.keys for f in forests])
     all_level = np.concatenate([f.level for f in forests])
-    order = np.lexsort((all_keys, all_tree))
-    t, k, l = all_tree[order], all_keys[order], all_level[order]
-    same = t[1:] == t[:-1]
-    if not np.all(k[1:][same] > k[:-1][same]):
-        return False
-    # non-overlap: successor key must be >= current key + span
-    span = np.uint64(1) << (np.uint64(d) * (np.uint64(o.L) - l.astype(np.uint64)))
-    if not np.all(k[1:][same] >= (k[:-1] + span[:-1])[same]):
-        return False
+    # global (tree, key) order must hold as stored across ranks — the SFC
+    # partition invariant the markers rely on
+    t, k, l = all_tree, all_keys, all_level
+    if len(t) > 1:
+        same = t[1:] == t[:-1]
+        if not np.all((t[1:] > t[:-1]) | same):
+            return False
+        if not np.all(k[1:][same] > k[:-1][same]):
+            return False
+        # non-overlap: successor key must be >= current key + span
+        span = np.uint64(1) << (np.uint64(d) * (np.uint64(o.L) - l.astype(np.uint64)))
+        if not np.all(k[1:][same] >= (k[:-1] + span[:-1])[same]):
+            return False
     # inside root
     for f in forests:
         if f.num_local and not np.asarray(f.bops.is_inside_root(f.simplices())).all():
@@ -591,7 +745,29 @@ def validate(forests: list[Forest]) -> bool:
     # coverage: sum of 2^{-d*level} == num_trees
     vol = (1.0 / (1 << d) ** all_level.astype(np.float64)).sum()
     K = forests[0].num_trees
-    return bool(abs(vol - K) < 1e-9 * max(K, 1))
+    if not abs(vol - K) < 1e-9 * max(K, 1):
+        return False
+    # ghost consistency across ranks (and tree faces)
+    if ghosts is not None:
+        owner_of = {}
+        for p, f in enumerate(forests):
+            for i in range(f.num_local):
+                owner_of[(int(f.tree[i]), int(f.keys[i]), int(f.level[i]))] = p
+        bops = get_batch_ops(d)
+        for p, g in enumerate(ghosts):
+            if len(g["level"]) == 0:
+                continue
+            gs = Simplex(
+                jnp.asarray(g["anchor"]), jnp.asarray(g["level"]), jnp.asarray(g["stype"])
+            )
+            gkeys = bops.morton_key_np(gs)
+            for j in range(len(gkeys)):
+                q = int(g["owner"][j])
+                if q == p:
+                    return False
+                if owner_of.get((int(g["tree"][j]), int(gkeys[j]), int(g["level"][j]))) != q:
+                    return False
+    return True
 
 
 def count_global(forests: list[Forest]) -> int:

@@ -199,6 +199,23 @@ class SimplexOps:
         stype = jnp.zeros_like(s.stype)
         return self.is_ancestor(Simplex(anchor, level, stype), s) & (s.level >= 0)
 
+    def tree_transform(self, s: Simplex, M, c, typemap) -> Simplex:
+        """Affine automorphism of the Freudenthal complex (the cmesh gluing
+        map): anchor' = M @ anchor + c, shifted by -h on reflected axes so
+        the anchor stays the min corner of the image cube; the type moves
+        through the d!-entry `typemap` derived for M (see repro.core.cmesh).
+        `M` is a global-sign signed permutation, `c` a multiple of the
+        element's cube side — both per-connection constants."""
+        M = jnp.asarray(M, jnp.int32)
+        c = jnp.asarray(c, jnp.int32)
+        tm = jnp.asarray(typemap, jnp.int32)
+        h = self.h(s.level)
+        neg = jnp.minimum(jnp.sum(M, axis=-1), 0)  # -1 on reflected rows
+        anchor = (
+            jnp.sum(s.anchor[..., None, :] * M, axis=-1) + c + h[..., None] * neg
+        )
+        return Simplex(anchor.astype(jnp.int32), s.level, tm[s.stype])
+
     # ------------------------------------------------------------ linear ids
     def _type_chain(self, s: Simplex):
         """cube-ids and types of all ancestors T^i, i = 1..MAXLEVEL (T_0-chain

@@ -40,6 +40,8 @@ __all__ = [
     "SFCTables",
     "get_tables",
     "MAXLEVEL",
+    "face_plane",
+    "root_face_planes",
 ]
 
 # Maximum refinement level per dimension.  Chosen so (a) the consecutive index
@@ -407,6 +409,37 @@ def _derive_outside_type_sets(d: int, perm, child_type, child_cube_id, parent_ty
         on_ik = np.zeros_like(on_kj)
         on_diag = np.zeros_like(on_kj)
     return on_ik.astype(np.int8), on_kj.astype(np.int8), on_diag.astype(np.int8)
+
+
+def face_plane(V) -> tuple[np.ndarray, int]:
+    """Primitive integer plane equation through the d points `V` ((d, d)
+    int array): returns (normal, offset) with the plane {x : n @ x == r}."""
+    V = np.asarray(V, np.int64)
+    if V.shape[1] == 2:
+        e = V[1] - V[0]
+        n = np.array([-e[1], e[0]], np.int64)
+    else:
+        n = np.cross(V[1] - V[0], V[2] - V[0])
+    g = int(np.gcd.reduce(np.abs(n)))
+    n = n // max(g, 1)
+    return n, int(n @ V[0])
+
+
+@lru_cache(maxsize=None)
+def root_face_planes(d: int) -> tuple:
+    """Integer plane equations of the d+1 facets of the root simplex S_0 at
+    unit scale: entry f is (normal, offset) with face f in {x : n @ x == r}.
+
+    Derived from the reference vertices; the coarse-mesh layer classifies
+    which root facet a boundary element's face lies on by testing these
+    planes at scale 2^MAXLEVEL.
+    """
+    rv = _ref_simplex_vertices(d, 0)
+    planes = []
+    for f in range(d + 1):
+        n, r = face_plane(np.delete(rv, f, axis=0))
+        planes.append((tuple(int(v) for v in n), r))
+    return tuple(planes)
 
 
 @lru_cache(maxsize=None)

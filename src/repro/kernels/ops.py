@@ -106,6 +106,19 @@ def children(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK) -> Simplex:
     return Simplex(anchor, level, outs[d][:n])
 
 
+@functools.partial(jax.jit, static_argnums=(0, 2, 3, 4, 5))
+def tree_transform(d: int, s: Simplex, M, c, tmap, block: int = sfc.DEFAULT_BLOCK) -> Simplex:
+    """Cross-tree coordinate change; M/c/tmap are static per-connection
+    tuples (few distinct values per coarse mesh, so jit caching is cheap)."""
+    n = s.level.shape[0]
+    np_ = _pad(n, block)
+    arrays = _padded(_fields(s) + [s.level, s.stype], np_)
+    outs = sfc.tree_transform_kernel(d, M, c, tmap, *arrays, block=block,
+                                     interpret=_interpret())
+    anchor = jnp.stack([o[:n] for o in outs[:d]], axis=-1)
+    return Simplex(anchor, s.level, outs[d][:n])
+
+
 @functools.partial(jax.jit, static_argnums=(0, 2))
 def is_inside_root(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK):
     n = s.level.shape[0]

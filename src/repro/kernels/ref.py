@@ -65,6 +65,13 @@ def face_neighbor_ref(d, *arrays):
     return (*outs, nb.stype, dual)
 
 
+def tree_transform_ref(d, M, c, tmap, *arrays):
+    o = get_ops(d)
+    s2 = o.tree_transform(_simplex(d, *arrays), M, c, tmap)
+    outs = [s2.anchor[..., k] for k in range(d)]
+    return (*outs, s2.stype)
+
+
 def successor_ref(d, *arrays):
     o = get_ops(d)
     s = _simplex(d, *arrays)

@@ -272,6 +272,33 @@ def _children_body(d: int, refs):
     ob_ref[...] = jnp.stack(type_cols, axis=-1)
 
 
+def _tree_transform_body(d: int, M, c, tmap, refs):
+    """Cross-tree coordinate change (cmesh gluing): anchor' = M @ anchor + c
+    minus h on reflected axes, type through the d!-entry typemap.  M / c /
+    tmap are per-connection compile-time constants (a handful per coarse
+    mesh, each tiny), so the body is straight-line vector code; the signed
+    permutation turns the matmul into one lane copy (+ negate) per axis."""
+    L = MAXLEVEL[d]
+    if d == 3:
+        x_ref, y_ref, z_ref, lvl_ref, b_ref, ox_ref, oy_ref, oz_ref, ob_ref = refs
+        coords = (x_ref[...], y_ref[...], z_ref[...])
+        outs = (ox_ref, oy_ref, oz_ref)
+    else:
+        x_ref, y_ref, lvl_ref, b_ref, ox_ref, oy_ref, ob_ref = refs
+        coords = (x_ref[...], y_ref[...])
+        outs = (ox_ref, oy_ref)
+    lvl = lvl_ref[...]
+    b = b_ref[...]
+    h = (jnp.int32(1) << (L - lvl)).astype(jnp.int32)
+    for k in range(d):
+        (ax,) = [j for j in range(d) if M[k][j] != 0]
+        if M[k][ax] > 0:
+            outs[k][...] = coords[ax] + jnp.int32(c[k])
+        else:
+            outs[k][...] = jnp.int32(c[k]) - coords[ax] - h
+    ob_ref[...] = _lut(tmap, b)
+
+
 def _inside_body(d: int, refs):
     """Constant-time inside-root test (Proposition 23 with T = root, type 0):
     the axis permutation and boundary type sets collapse to per-type
@@ -409,6 +436,24 @@ def inside_root_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: b
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32)],
+        interpret=interpret,
+    )(*arrays)
+
+
+def tree_transform_kernel(d: int, M, c, tmap, *arrays,
+                          block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """arrays: x, y, (z,), level, type — int32 (N,).  M/c/tmap are the
+    per-connection gluing constants as nested int tuples (c pre-wrapped to
+    int32, see repro.core.cmesh.wrap_i32).
+    Returns x, y, (z,), type of the elements in the neighbor tree's frame."""
+    n = arrays[0].shape[0]
+    in_specs, out_specs = _specs(len(arrays), d + 1, block)
+    return pl.pallas_call(
+        lambda *refs: _tree_transform_body(d, M, c, tmap, refs),
+        grid=(n // block,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32)] * (d + 1),
         interpret=interpret,
     )(*arrays)
 

@@ -88,6 +88,38 @@ def test_morton_key_decode_roundtrip_parity(d, backend):
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
+def test_tree_transform_parity(d, backend):
+    """The batched cross-tree transform (cmesh gluing map) is bit-identical
+    across backends for every connection of the cube domain AND for a
+    reflected (sigma = -1) synthetic map."""
+    from repro.core import cmesh as C
+
+    cm = C.cmesh_unit_cube(d)
+    s = rand_simplices(d, N, seed=60 + d, min_level=1)
+    ref = batch.get_batch_ops(d, "reference")
+    got = batch.get_batch_ops(d, backend)
+    tested = 0
+    for t in range(cm.num_trees):
+        for f in range(d + 1):
+            if not cm.is_connected(t, f):
+                continue
+            M, c, tm = cm.face_M[t, f], cm.face_c[t, f], cm.face_typemap[t, f]
+            assert_simplex_equal(
+                got.tree_transform(s, M, c, tm), ref.tree_transform(s, M, c, tm)
+            )
+            tested += 1
+    assert tested > 0
+    # the reflected branch: full point reflection is a complex automorphism
+    o = get_ops(d)
+    M = -np.eye(d, dtype=np.int64)
+    tm, _ = C.signed_perm_maps(d, M)
+    c = np.full(d, 2, np.int64) << o.L
+    assert_simplex_equal(
+        got.tree_transform(s, M, c, tm), ref.tree_transform(s, M, c, tm)
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
 def test_empty_batch_all_ops(d, backend):
     o = get_ops(d)
     s = o.from_linear_id(u64m.from_int(np.zeros(0, np.uint64)), jnp.zeros(0, jnp.int32))
@@ -99,6 +131,9 @@ def test_empty_batch_all_ops(d, backend):
     assert np.asarray(b.is_inside_root(s)).shape == (0,)
     nb, dual = b.face_neighbor(s, 0)
     assert nb.level.shape == (0,)
+    assert b.tree_transform(
+        s, np.eye(d, dtype=np.int64), np.zeros(d, np.int64), np.arange(o.nt)
+    ).level.shape == (0,)
 
 
 def test_backend_knob_env_and_context(monkeypatch):

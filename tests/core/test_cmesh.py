@@ -1,0 +1,212 @@
+"""Property tests for the coarse-mesh layer (`repro.core.cmesh`).
+
+The central invariants of inter-tree connectivity, checked on random
+elements at random levels and types in d = 2 and 3 over every canonical
+domain (unit cube, periodic cube, 2x1 brick, rotated pair):
+
+  * an outside face-neighbor of a boundary element always lies on exactly
+    one root facet, and its transform lands INSIDE the neighbor tree's root
+    at the same level;
+  * neighbor-of-neighbor across a tree face is the identity: transforming
+    back through the partner connection reproduces the source bits exactly;
+  * the gluing maps compose with their reverses to the identity;
+  * arbitrary global-sign signed permutations round-trip through
+    `tree_transform` and commute with taking vertex coordinates, while
+    mixed-sign matrices are rejected (they do not preserve the Kuhn
+    triangulation).
+
+Runs with `hypothesis` when installed, else the offline shim `tests/_pbt.py`.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline box: bounded random sampling shim (tests/_pbt.py)
+    from _pbt import given, settings, strategies as st
+
+from functools import lru_cache
+
+from repro.core import cmesh as C
+from repro.core import get_ops
+from repro.core import u64 as u64m
+from repro.core.types import Simplex
+
+
+@lru_cache(maxsize=None)
+def _domains(d: int):
+    doms = [
+        C.cmesh_unit_cube(d),
+        C.cmesh_unit_cube(d, periodic=(True,) * d),
+        C.cmesh_brick(d, (2,) + (1,) * (d - 1)),
+    ]
+    if d == 2:
+        doms.append(C.cmesh_rotated_pair())
+    return doms
+
+
+def _take(s: Simplex, idx) -> Simplex:
+    return Simplex(s.anchor[idx], s.level[idx], s.stype[idx])
+
+
+def _assert_simplex_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.anchor), np.asarray(b.anchor))
+    np.testing.assert_array_equal(np.asarray(a.level), np.asarray(b.level))
+    np.testing.assert_array_equal(np.asarray(a.stype), np.asarray(b.stype))
+
+
+@given(st.integers(2, 3), st.integers(0, 7), st.integers(1, 5),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_cross_tree_transform_properties(d, dom_idx, level, seed):
+    """Inside-neighbor-root + same-level + exact round trip, batched over
+    every boundary crossing found in a random element batch."""
+    cm = _domains(d)[dom_idx % len(_domains(d))]
+    o = get_ops(d)
+    rng = np.random.default_rng(seed)
+    tree = int(rng.integers(cm.num_trees))
+    n = 64
+    ids = rng.integers(0, o.num_elements(level), size=n).astype(np.uint64)
+    s = o.from_linear_id(u64m.from_int(ids), jnp.full(n, level, jnp.int32))
+    crossings = 0
+    for face in range(d + 1):
+        nb, dual = o.face_neighbor(s, face)
+        inside = np.asarray(o.is_inside_root(nb))
+        out_idx = np.nonzero(~inside)[0]
+        if not len(out_idx):
+            continue
+        rf = cm.root_face_of(_take(s, out_idx), face)
+        # an outside neighbor's shared face lies on exactly one root facet
+        assert (rf >= 0).all()
+        for rfv in np.unique(rf):
+            if cm.face_tree[tree, rfv] < 0:
+                continue  # domain boundary
+            idx = out_idx[rf == rfv]
+            sub = _take(nb, idx)
+            s2, t2 = cm.transform_across_face(sub, tree, int(rfv))
+            crossings += len(idx)
+            # same level, inside the neighbor tree's root
+            np.testing.assert_array_equal(np.asarray(s2.level), np.asarray(sub.level))
+            assert np.asarray(o.is_inside_root(s2)).all()
+            # neighbor-of-neighbor across the tree face is the identity:
+            # cross back over the renumbered dual face and transform through
+            # the partner connection -> the source element, bit for bit
+            dual2 = cm.face_facemap[tree, rfv][
+                np.asarray(sub.stype), np.asarray(dual)[idx]
+            ]
+            back, _ = o.face_neighbor(s2, jnp.asarray(dual2))
+            assert not np.asarray(o.is_inside_root(back)).any()
+            rf_back = cm.root_face_of(s2, dual2)
+            assert (rf_back == int(cm.face_face[tree, rfv])).all()
+            src_again, t_back = cm.transform_across_face(
+                back, t2, int(cm.face_face[tree, rfv])
+            )
+            assert t_back == tree
+            _assert_simplex_equal(src_again, _take(s, idx))
+    # at low levels a random batch always touches the boundary somewhere
+    if level <= 2 and (cm.face_tree[tree] >= 0).any():
+        assert crossings > 0
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_gluings_compose_to_identity(d):
+    """Matrix-level involution for every connection of every domain."""
+    for cm in _domains(d):
+        n_conn = 0
+        for t1 in range(cm.num_trees):
+            for f1 in range(d + 1):
+                t2 = int(cm.face_tree[t1, f1])
+                if t2 < 0:
+                    continue
+                n_conn += 1
+                f2 = int(cm.face_face[t1, f1])
+                assert int(cm.face_tree[t2, f2]) == t1
+                M12 = cm.face_M[t1, f1].astype(np.int64)
+                M21 = cm.face_M[t2, f2].astype(np.int64)
+                np.testing.assert_array_equal(M21 @ M12, np.eye(d, dtype=np.int64))
+                np.testing.assert_array_equal(
+                    M21 @ cm.face_c[t1, f1] + cm.face_c[t2, f2], np.zeros(d, np.int64)
+                )
+                # typemap/facemap invert each other too
+                tm12 = cm.face_typemap[t1, f1]
+                tm21 = cm.face_typemap[t2, f2]
+                np.testing.assert_array_equal(tm21[tm12], np.arange(len(tm12)))
+                for b in range(len(tm12)):
+                    vm12 = cm.face_facemap[t1, f1, b]
+                    vm21 = cm.face_facemap[t2, f2, tm12[b]]
+                    np.testing.assert_array_equal(vm21[vm12], np.arange(d + 1))
+        assert n_conn > 0
+
+
+@given(st.integers(2, 3), st.integers(0, 2**31 - 1), st.integers(1, 6),
+       st.booleans())
+@settings(max_examples=20, deadline=None)
+def test_signed_perm_transform_roundtrip(d, seed, level, reflect):
+    """tree_transform under a random global-sign signed permutation + lattice
+    translation: inverts exactly and commutes with vertex coordinates."""
+    o = get_ops(d)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(d)
+    sigma = -1 if reflect else 1
+    M = np.zeros((d, d), np.int64)
+    M[np.arange(d), perm] = sigma
+    tm, vm = C.signed_perm_maps(d, M)
+    # keep true image coordinates within int32 so the wrap is the identity
+    kmax = 1 if d == 2 else 2
+    c = rng.integers(-kmax, kmax + 1, size=d).astype(np.int64) << o.L
+
+    n = 32
+    ids = rng.integers(0, o.num_elements(level), size=n).astype(np.uint64)
+    s = o.from_linear_id(u64m.from_int(ids), jnp.full(n, level, jnp.int32))
+    s2 = o.tree_transform(s, M, C.wrap_i32(c), tm)
+
+    Mi = M.T
+    ci = -(M.T @ c)
+    tmi, _ = C.signed_perm_maps(d, Mi)
+    s3 = o.tree_transform(s2, Mi, C.wrap_i32(ci), tmi)
+    _assert_simplex_equal(s3, s)
+
+    # vertex commutation: coordinates transform by the same affine map,
+    # with the vertex order given by the derived vertmap
+    V = np.asarray(o.coordinates(s), np.int64)
+    W = np.asarray(o.coordinates(s2), np.int64)
+    img = V @ M.T + c
+    b_arr = np.asarray(s.stype)
+    for i in range(n):
+        np.testing.assert_array_equal(img[i], W[i][vm[b_arr[i]]])
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_mixed_sign_matrices_rejected(d):
+    """Signed permutations with mixed signs flip the cube diagonal and do
+    not preserve the Kuhn triangulation — the derivation must reject them."""
+    M = np.eye(d, dtype=np.int64)
+    M[0, 0] = -1
+    with pytest.raises(ValueError, match="not an automorphism"):
+        C.signed_perm_maps(d, M)
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_root_face_classification(d):
+    """Interior element faces match no facet plane; every facet of the root
+    is hit by some boundary element face; disconnected cmesh says boundary."""
+    cm = C.cmesh_unit_cube(d)
+    o = get_ops(d)
+    level = 2
+    ids = np.arange(o.num_elements(level), dtype=np.uint64)
+    s = o.from_linear_id(
+        u64m.from_int(ids), jnp.full(len(ids), level, jnp.int32)
+    )
+    seen = set()
+    for face in range(d + 1):
+        nb, _ = o.face_neighbor(s, face)
+        inside = np.asarray(o.is_inside_root(nb))
+        rf = cm.root_face_of(s, face)
+        # neighbor outside <=> the element's face lies on a root facet
+        np.testing.assert_array_equal(rf >= 0, ~inside)
+        seen.update(rf[rf >= 0].tolist())
+    assert seen == set(range(d + 1))
+    dc = C.cmesh_disconnected(d, 2)
+    assert not any(dc.is_connected(t, f) for t in range(2) for f in range(d + 1))

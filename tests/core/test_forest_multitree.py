@@ -1,0 +1,383 @@
+"""Multi-tree forest oracles: cross-tree Ghost/Balance vs brute force.
+
+The independent check: every tree is embedded into one WORLD lattice via its
+cmesh embedding, and face adjacency is recomputed there by brute-force
+vertex-coordinate matching (uniform meshes: two leaves are face-adjacent iff
+they share exactly d world vertices; adapted meshes: a face of the finer
+leaf is contained in the coarser leaf, tested with exact integer barycentric
+coordinates).  None of this touches the connectivity tables under test.
+
+Covers the acceptance domains — the 2-tree cube in d=2 and the 6-tree cube
+in d=3 — plus periodic gluings and the reflected (rotated-pair) domain, with
+bit-identical results across the element-ops backends (pallas rows carry the
+`slow` marker like the rest of the suite; the full tier runs them).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import batch
+from repro.core import cmesh as C
+from repro.core import forest as F
+from repro.core import get_batch_ops, get_ops
+from repro.core.types import Simplex
+
+BACKENDS = ["reference", "jnp", pytest.param("pallas", marks=pytest.mark.slow)]
+
+
+# ----------------------------------------------------------- world geometry
+def _world_leaves(cm, forests):
+    """Per global leaf: (rank, tree, key, level, verts) with world vertex
+    coordinates divided by the finest cube side present (small exact ints)."""
+    d = forests[0].d
+    o = get_ops(d)
+    leaves = []
+    max_level = max((int(f.level.max()) for f in forests if f.num_local), default=0)
+    g = 1 << (o.L - max_level)  # finest cube side: every coordinate divides
+    for p, f in enumerate(forests):
+        if f.num_local == 0:
+            continue
+        for t in np.unique(f.tree):
+            sel = np.nonzero(f.tree == t)[0]
+            s = Simplex(f.anchor[sel], f.level[sel], f.stype[sel])
+            W = cm.world_vertices(int(t), s)
+            assert (W % g == 0).all()
+            W //= g
+            for i, li in enumerate(sel):
+                leaves.append((p, int(t), int(f.keys[li]), int(f.level[li]), W[i]))
+    return leaves
+
+
+def _det(A):
+    if A.shape == (2, 2):
+        return int(A[0, 0]) * int(A[1, 1]) - int(A[0, 1]) * int(A[1, 0])
+    return (
+        int(A[0, 0]) * (int(A[1, 1]) * int(A[2, 2]) - int(A[1, 2]) * int(A[2, 1]))
+        - int(A[0, 1]) * (int(A[1, 0]) * int(A[2, 2]) - int(A[1, 2]) * int(A[2, 0]))
+        + int(A[0, 2]) * (int(A[1, 0]) * int(A[2, 1]) - int(A[1, 1]) * int(A[2, 0]))
+    )
+
+
+def _in_simplex(V, p):
+    """Exact closed containment of integer point p in integer simplex V."""
+    d = len(p)
+    A = (V[1:] - V[0]).T
+    b = p - V[0]
+    D = _det(A)
+    sgn = 1 if D > 0 else -1
+    lams = []
+    for m in range(d):
+        Am = A.copy()
+        Am[:, m] = b
+        lams.append(_det(Am) * sgn)
+    return all(l >= 0 for l in lams) and sum(lams) <= D * sgn
+
+
+def _face_adjacent(Va, la, Vb, lb):
+    """Leaves with |level difference| <= 1 share a (d-1)-face iff some face
+    of the finer lies (closed) inside the coarser simplex."""
+    if la < lb:
+        Va, la, Vb, lb = Vb, lb, Va, la
+    d = Va.shape[1]
+    for f in range(d + 1):
+        Fv = np.delete(Va, f, axis=0)
+        if all(_in_simplex(Vb, v) for v in Fv):
+            return True
+    return False
+
+
+def _bbox_touch(leaves):
+    """(n, n) bool: candidate pairs whose axis-aligned boxes touch."""
+    lo = np.stack([v.min(axis=0) for *_, v in leaves])
+    hi = np.stack([v.max(axis=0) for *_, v in leaves])
+    return ((lo[:, None, :] <= hi[None, :, :]) & (lo[None, :, :] <= hi[:, None, :])).all(-1)
+
+
+def _oracle_ghost_uniform(cm, forests):
+    """Brute-force vertex-coordinate matching: on a uniform mesh two leaves
+    are face-adjacent iff they share exactly d world vertices."""
+    d = forests[0].d
+    leaves = _world_leaves(cm, forests)
+    vsets = [frozenset(map(tuple, v.tolist())) for *_, v in leaves]
+    touch = _bbox_touch(leaves)
+    want = [set() for _ in forests]
+    for i in range(len(leaves)):
+        for j in range(len(leaves)):
+            if leaves[i][0] == leaves[j][0] or not touch[i, j]:
+                continue
+            if len(vsets[i] & vsets[j]) == d:
+                p = leaves[i][0]
+                q, t, k, l, _ = leaves[j]
+                want[p].add((t, k, l, q))
+    return want
+
+
+def _oracle_ghost_adapted(cm, forests):
+    """Brute-force face-containment adjacency for balanced (2:1) meshes."""
+    leaves = _world_leaves(cm, forests)
+    touch = _bbox_touch(leaves)
+    want = [set() for _ in forests]
+    for i in range(len(leaves)):
+        for j in range(len(leaves)):
+            if leaves[i][0] == leaves[j][0] or not touch[i, j]:
+                continue
+            if _face_adjacent(leaves[i][4], leaves[i][3], leaves[j][4], leaves[j][3]):
+                q, t, k, l, _ = leaves[j]
+                want[leaves[i][0]].add((t, k, l, q))
+    return want
+
+
+def _ghost_sets(d, gh):
+    bops = get_batch_ops(d)
+    out = []
+    for g in gh:
+        if len(g["level"]) == 0:
+            out.append(set())
+            continue
+        s = Simplex(g["anchor"], g["level"], g["stype"])
+        keys = bops.morton_key_np(s)
+        out.append({
+            (int(g["tree"][j]), int(keys[j]), int(g["level"][j]), int(g["owner"][j]))
+            for j in range(len(keys))
+        })
+    return out
+
+
+def _assert_cross_tree_present(gh, forests):
+    """The point of the PR: some ghost entries live in a tree the receiving
+    rank holds no elements of."""
+    cross = 0
+    for p, g in enumerate(gh):
+        local_trees = set(forests[p].tree.tolist())
+        cross += sum(1 for t in g["tree"].tolist() if t not in local_trees)
+    assert cross > 0
+
+
+# ------------------------------------------------------------------- tests
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("d,level,P", [(2, 3, 2), (3, 2, 3)])
+def test_uniform_ghost_matches_vertex_oracle(d, level, P, backend):
+    """Acceptance: 2-tree (d=2) / 6-tree (d=3) cube, cross-tree ghosts equal
+    the brute-force vertex-matching oracle, per backend."""
+    cm = C.cmesh_unit_cube(d)
+    comm = F.SimComm(P)
+    with batch.use_backend(backend):
+        fs = F.new_uniform(d, cm.num_trees, level, comm, cmesh=cm)
+        fs = F.balance(fs, comm)  # fixpoint on a uniform mesh
+        assert F.count_global(fs) == cm.num_trees * get_ops(d).num_elements(level)
+        gh = F.ghost(fs, comm)
+        assert F.validate(fs, gh)
+        got = _ghost_sets(d, gh)
+    want = _oracle_ghost_uniform(cm, fs)
+    assert got == want
+    _assert_cross_tree_present(gh, fs)
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_uniform_ghost_bit_identical_across_backends(d):
+    """reference and jnp produce byte-equal ghost arrays (pallas covered by
+    the slow rows of test_uniform_ghost_matches_vertex_oracle)."""
+    cm = C.cmesh_unit_cube(d)
+    comm = F.SimComm(2)
+    outs = {}
+    for be in ("reference", "jnp"):
+        with batch.use_backend(be):
+            fs = F.new_uniform(d, cm.num_trees, 2, comm, cmesh=cm)
+            fs = F.balance(fs, comm)
+            gh = F.ghost(fs, comm)
+        outs[be] = (fs, gh)
+    fa, ga = outs["reference"]
+    fb, gb = outs["jnp"]
+    for a, b in zip(fa, fb):
+        np.testing.assert_array_equal(a.keys, b.keys)
+        np.testing.assert_array_equal(a.anchor, b.anchor)
+        np.testing.assert_array_equal(a.stype, b.stype)
+        np.testing.assert_array_equal(a.tree, b.tree)
+    for a, b in zip(ga, gb):
+        for k in ("anchor", "level", "stype", "tree", "owner"):
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+@pytest.mark.parametrize("d,base,deep", [(2, 2, 4), (3, 1, 3)])
+def test_cross_tree_balance_and_adapted_ghost_oracle(d, base, deep):
+    """Corner refinement in tree 0 must ripple ACROSS the tree face: balance
+    terminates, every face-adjacent pair (found by the world-coordinate
+    oracle) is within one level, and the adapted ghost layer equals the
+    face-containment oracle."""
+    cm = C.cmesh_unit_cube(d)
+    comm = F.SimComm(2)
+    fs = F.new_uniform(d, cm.num_trees, base, comm, cmesh=cm)
+
+    def corner(tree, elems, cap=deep):
+        a = np.asarray(elems.anchor)
+        l = np.asarray(elems.level)
+        return ((np.asarray(tree) == 0) & (a.sum(1) == 0) & (l < cap)).astype(np.int32)
+
+    fs = [F.adapt(f, corner, recursive=True) for f in fs]
+    before = F.count_global(fs)
+    fs = F.balance(fs, comm)  # raises if it does not converge
+    assert F.count_global(fs) > before, "cross-tree ripple must insert elements"
+    assert F.validate(fs)
+
+    # 2:1 across every face-adjacent pair, tree faces included
+    leaves = _world_leaves(cm, fs)
+    touch = _bbox_touch(leaves)
+    deepest_other = 0
+    for i in range(len(leaves)):
+        for j in range(i + 1, len(leaves)):
+            if not touch[i, j]:
+                continue
+            li, lj = leaves[i][3], leaves[j][3]
+            if abs(li - lj) <= 1:
+                if leaves[i][1] != leaves[j][1]:
+                    deepest_other = max(deepest_other, min(li, lj))
+                continue
+            assert not _face_adjacent(leaves[i][4], li, leaves[j][4], lj), (
+                f"2:1 violated between leaves {i} and {j} "
+                f"(levels {li} vs {lj}, trees {leaves[i][1]}/{leaves[j][1]})"
+            )
+    assert deepest_other > base, "refinement never crossed a tree face"
+
+    gh = F.ghost(fs, comm)
+    assert F.validate(fs, gh)
+    assert _ghost_sets(d, gh) == _oracle_ghost_adapted(cm, fs)
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_periodic_cube_has_no_boundary(d):
+    """On the fully periodic unit cube every element face has a neighbor:
+    iterate sees exactly (d+1)*n/2 face pairs and ghost wraps around."""
+    cm = C.cmesh_unit_cube(d, periodic=(True,) * d)
+    comm = F.SimComm(1)
+    level = 2 if d == 2 else 1
+    fs = F.new_uniform(d, cm.num_trees, level, comm, cmesh=cm)
+    n = fs[0].num_local
+    seen = {}
+    F.iterate(fs[0], face_fn=lambda f, pairs: seen.setdefault("pairs", pairs))
+    assert len(seen["pairs"]) == (d + 1) * n // 2
+    s = fs[0].simplices()
+    for face in range(d + 1):
+        kind = F.face_kind(fs[0], s, face)
+        assert (kind != F.FACE_DOMAIN_BOUNDARY).all()
+
+
+def test_rotated_pair_pipeline():
+    """The sigma = -1 domain (parallelogram of two triangles) goes through
+    the full adapt/balance/ghost pipeline with a correct oracle ghost."""
+    cm = C.cmesh_rotated_pair()
+    comm = F.SimComm(2)
+    fs = F.new_uniform(2, 2, 2, comm, cmesh=cm)
+
+    def corner(tree, elems, cap=4):
+        a = np.asarray(elems.anchor)
+        l = np.asarray(elems.level)
+        return ((np.asarray(tree) == 0) & (a.sum(1) == 0) & (l < cap)).astype(np.int32)
+
+    fs = [F.adapt(f, corner, recursive=True) for f in fs]
+    fs = F.balance(fs, comm)
+    assert F.validate(fs)
+    gh = F.ghost(fs, comm)
+    assert F.validate(fs, gh)
+    assert _ghost_sets(2, gh) == _oracle_ghost_adapted(cm, fs)
+
+
+def test_iterate_delivers_hanging_and_cross_tree_pairs():
+    """On one rank, iterate's face pairs must be EXACTLY the set of
+    face-adjacent leaf pairs of the world-coordinate oracle — same-level and
+    hanging (coarse, fine), intra-tree and across the glued diagonal."""
+    cm = C.cmesh_unit_cube(2)
+    comm = F.SimComm(1)
+    o = get_ops(2)
+    fs = F.new_uniform(2, 2, 2, comm, cmesh=cm)
+
+    def corner(tree, elems, cap=4):
+        a = np.asarray(elems.anchor)
+        l = np.asarray(elems.level)
+        return ((np.asarray(tree) == 0) & (a.sum(1) == 0) & (l < cap)).astype(np.int32)
+
+    fs = [F.adapt(f, corner, recursive=True) for f in fs]
+    fs = F.balance(fs, comm)
+    f = fs[0]
+    seen = {}
+    F.iterate(f, face_fn=lambda ff, pp: seen.setdefault("pairs", pp))
+    pairs = seen["pairs"]
+
+    # world verts per local element, in storage order, at the finest scale
+    g = 1 << (o.L - int(f.level.max()))
+    V = []
+    for i in range(f.num_local):
+        s1 = Simplex(f.anchor[i:i + 1], f.level[i:i + 1], f.stype[i:i + 1])
+        V.append(cm.world_vertices(int(f.tree[i]), s1)[0] // g)
+    want = set()
+    for i in range(f.num_local):
+        for j in range(i + 1, f.num_local):
+            if _face_adjacent(V[i], int(f.level[i]), V[j], int(f.level[j])):
+                want.add((i, j))
+    got = {(min(int(a), int(b)), max(int(a), int(b))) for a, b, _, _ in pairs}
+    assert got == want
+    # hanging rows carry (fine i, coarse j) and levels differ by exactly 1
+    mixed = 0
+    for a, b, fa, fb in pairs.tolist():
+        la, lb = int(f.level[a]), int(f.level[b])
+        if la != lb:
+            mixed += 1
+            assert la == lb + 1, "fine side must come first, one level apart"
+    assert mixed > 0, "adapted mesh must produce hanging pairs"
+
+
+def test_iterate_cross_tree_pair_count():
+    """2-tree square at uniform level 2: interior face pairs = (3n - B)/2
+    with B boundary edges on the square's perimeter only."""
+    cm = C.cmesh_unit_cube(2)
+    comm = F.SimComm(1)
+    level = 2
+    fs = F.new_uniform(2, 2, level, comm, cmesh=cm)
+    n = fs[0].num_local
+    seen = {}
+    F.iterate(fs[0], face_fn=lambda f, pairs: seen.setdefault("pairs", pairs))
+    boundary_edges = 4 * (1 << level)
+    assert len(seen["pairs"]) == (3 * n - boundary_edges) // 2
+    # without the cmesh the diagonal's 2^level pairs are lost
+    fs0 = F.new_uniform(2, 2, level, comm)
+    seen0 = {}
+    F.iterate(fs0[0], face_fn=lambda f, pairs: seen0.setdefault("pairs", pairs))
+    assert len(seen["pairs"]) - len(seen0["pairs"]) == (1 << level)
+
+
+def test_disconnected_cmesh_matches_legacy():
+    """A cmesh with no connections reproduces the legacy (cmesh=None)
+    forest bit for bit through balance and ghost."""
+    comm = F.SimComm(2)
+    dc = C.cmesh_disconnected(3, 2)
+
+    def corner(tree, elems, cap=3):
+        a = np.asarray(elems.anchor)
+        l = np.asarray(elems.level)
+        return ((a.sum(1) == 0) & (l < cap)).astype(np.int32)
+
+    outs = []
+    for cmesh in (None, dc):
+        fs = F.new_uniform(3, 2, 1, comm, cmesh=cmesh)
+        fs = [F.adapt(f, corner, recursive=True) for f in fs]
+        fs = F.balance(fs, comm)
+        gh = F.ghost(fs, comm)
+        outs.append((fs, gh))
+    for a, b in zip(outs[0][0], outs[1][0]):
+        np.testing.assert_array_equal(a.keys, b.keys)
+        np.testing.assert_array_equal(a.tree, b.tree)
+    for a, b in zip(outs[0][1], outs[1][1]):
+        for k in ("anchor", "level", "stype", "tree", "owner"):
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_multitree_smoke():
+    """CI fast-tier smoke: 2-tree cube, adapt+balance+ghost on 2 ranks."""
+    cm = C.cmesh_unit_cube(2)
+    comm = F.SimComm(2)
+    fs = F.new_uniform(2, 2, 2, comm, cmesh=cm)
+    fs = [F.adapt(f, lambda t, e: (np.asarray(e.anchor).sum(1) == 0).astype(np.int32))
+          for f in fs]
+    fs = F.balance(fs, comm)
+    gh = F.ghost(fs, comm)
+    assert F.validate(fs, gh)
+    assert sum(len(g["level"]) for g in gh) > 0
