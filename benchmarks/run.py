@@ -212,7 +212,34 @@ def forest_backends(tiny: bool = False):
             l = np.asarray(elems.level)
             return ((a.sum(1) == 0) & (l < cap)).astype(np.int32)
 
-        entry = {"level": level, "elements": n0, "backends": {}}
+        # wire volume: boundary-only message path vs the retained
+        # allgathered-global-table oracle — backend invariant, measured once
+        # per mesh size on fresh comms, with element-for-element parity
+        fs0 = [F.adapt(f, corner_cb, recursive=True) for f in base]
+        cm_msg, cm_orc = F.SimComm(4), F.SimComm(4)
+        out_msg = F.balance([f for f in fs0], cm_msg)
+        out_orc = F.balance_oracle([f for f in fs0], cm_orc)
+        assert all(
+            np.array_equal(a.keys, b.keys) and np.array_equal(a.level, b.level)
+            and np.array_equal(a.tree, b.tree)
+            for a, b in zip(out_msg, out_orc)
+        ), f"message balance diverged from oracle at level {level}"
+        F.ghost(out_msg, cm_msg)
+        F.ghost_oracle(out_orc, cm_orc)
+        comm_bytes = {
+            "balance_message": cm_msg.bytes_for("balance"),
+            "balance_allgather": cm_orc.bytes_for("balance_oracle"),
+            "ghost_message": cm_msg.bytes_for("ghost"),
+            "ghost_allgather": cm_orc.bytes_for("ghost_oracle"),
+        }
+        row(
+            f"forest_comm_bytes_lvl{level}", 0.0,
+            f"message={comm_bytes['balance_message'] + comm_bytes['ghost_message']}"
+            f":allgather={comm_bytes['balance_allgather'] + comm_bytes['ghost_allgather']}",
+        )
+
+        entry = {"level": level, "elements": n0, "backends": {},
+                 "comm_bytes": comm_bytes}
         ref_sig = None
         for be in backends:
             if be == "pallas" and level not in pallas_levels:
@@ -258,6 +285,16 @@ def forest_backends(tiny: bool = False):
     )
     row("forest_backends_largest_speedup", 0.0, f"{best:.2f}x_batched_vs_reference")
     report["largest_mesh_batched_speedup"] = best
+    # wire-volume acceptance at the largest mesh (8k elements in the full
+    # run): boundary-only exchanges must beat the allgathered leaf table
+    cb = largest["comm_bytes"]
+    msg = cb["balance_message"] + cb["ghost_message"]
+    agg = cb["balance_allgather"] + cb["ghost_allgather"]
+    assert msg < agg, f"boundary-only path moved MORE bytes ({msg} >= {agg})"
+    report["largest_mesh_comm_bytes_message"] = msg
+    report["largest_mesh_comm_bytes_allgather"] = agg
+    row("forest_comm_bytes_win", 0.0,
+        f"{agg / max(msg, 1):.1f}x_less_wire_than_allgather")
     # tiny (CI smoke) runs must not clobber the full benchmark artifact
     name = "BENCH_forest_tiny.json" if tiny else "BENCH_forest.json"
     out_path = Path(__file__).resolve().parents[1] / name

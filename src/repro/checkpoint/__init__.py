@@ -1,5 +1,6 @@
 from .store import (latest_step, restore_checkpoint, save_checkpoint,
                     AsyncCheckpointer)
+from .forest_io import load_forest, save_forest
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "AsyncCheckpointer"]
+           "AsyncCheckpointer", "save_forest", "load_forest"]

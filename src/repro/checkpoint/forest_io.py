@@ -1,0 +1,129 @@
+"""Forest checkpointing: packed at-rest blobs + partition markers, elastic.
+
+A forest checkpoint persists the paper's Remark 20 low-memory element
+encoding (`repro.core.types.pack`: int32 coords + int8 level + int8 type =
+10/14 bytes per element) for the *global* leaf sequence in (tree, TM-index)
+order, alongside the partition markers of the rank layout that wrote it.
+Restore is elastic: loading onto the same rank count reproduces the saved
+partition exactly (marker split); loading onto any other rank count
+re-splits the global SFC sequence into equal contiguous runs — the same
+invariant `new_uniform` establishes — so a 4-rank run restores onto 2
+ranks (or 2 onto 4) and passes `validate()` unchanged.
+
+Storage goes through `repro.checkpoint.store` (atomic rename, manifest,
+optional async) so forest checkpoints live next to model checkpoints.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import forest as forest_mod
+from repro.core.cmesh import Cmesh
+from repro.core.comm import Comm
+from repro.core.forest import Forest, partition_markers
+from repro.core.types import Simplex, pack
+
+from .store import restore_checkpoint, save_checkpoint
+
+__all__ = ["save_forest", "load_forest"]
+
+
+def _gather_global(forests: list[Forest], comm: Comm):
+    """Concatenate the per-rank SoA arrays into the global (tree, TM-index)
+    sequence — rank-major order IS global SFC order (the partition
+    invariant), so a plain allgather+concat is exact."""
+    per_local = [
+        (f.anchor.astype(np.int32), f.level.astype(np.int8),
+         f.stype.astype(np.int8), f.tree.astype(np.int32))
+        for f in forests
+    ]
+    parts = comm.allgather(per_local)  # one (anchor, level, stype, tree) per rank
+    A = np.concatenate([p[0] for p in parts])
+    L = np.concatenate([p[1] for p in parts])
+    B = np.concatenate([p[2] for p in parts])
+    T = np.concatenate([p[3] for p in parts])
+    return A, L, B, T
+
+
+def save_forest(path, forests: list[Forest], comm: Comm, *, step: int = 0):
+    """Persist the forest as packed blobs + partition markers.
+
+    Collective: every rank participates in the gather; the process hosting
+    global rank 0 writes (under `SimComm` that is the only process)."""
+    f0 = forests[0]
+    with comm.phase("checkpoint"):
+        anchor, level, stype, tree = _gather_global(forests, comm)
+        mt, mk = partition_markers(forests, comm)
+    blob = pack(Simplex(anchor, level.astype(np.int32), stype.astype(np.int32)))
+    tree_payload = {
+        "anchor": blob["anchor"],
+        "level": blob["level"],
+        "stype": blob["stype"],
+        "tree": tree,
+        "marker_tree": mt,
+        # uint64 keys at rest as two uint32 words: the checkpoint store
+        # round-trips leaves through jnp, which is 32-bit by default
+        "marker_key_hi": (mk >> np.uint64(32)).astype(np.uint32),
+        "marker_key_lo": (mk & np.uint64(0xFFFFFFFF)).astype(np.uint32),
+    }
+    meta = {
+        "kind": "forest",
+        "d": int(f0.d),
+        "num_trees": int(f0.num_trees),
+        "num_ranks": int(comm.size),
+        "count": int(len(level)),
+    }
+    if 0 in comm.local_ranks:
+        out = save_checkpoint(path, tree_payload, step=step, extra_meta=meta)
+    else:  # pragma: no cover - distributed hosting writes on rank 0 only
+        out = None
+    comm.barrier()
+    return out
+
+
+def load_forest(path, comm: Comm, *, step: int | None = None,
+                cmesh: Cmesh | None = None) -> list[Forest]:
+    """Restore a forest checkpoint onto `comm` — elastically.
+
+    Same rank count as the writer: the saved markers reproduce the original
+    partition bit for bit.  Different rank count: the global SFC sequence is
+    re-split into `comm.size` equal contiguous runs.  Returns one `Forest`
+    per local rank (all of them under `SimComm`)."""
+    like = {k: np.zeros(0, np.uint8) for k in
+            ("anchor", "level", "stype", "tree", "marker_tree",
+             "marker_key_hi", "marker_key_lo")}
+    tree_payload, manifest = restore_checkpoint(path, like, step=step)
+    meta = manifest["meta"]
+    assert meta.get("kind") == "forest", "not a forest checkpoint"
+    d, num_trees = int(meta["d"]), int(meta["num_trees"])
+    anchor = np.asarray(tree_payload["anchor"], np.int32).reshape(-1, d)
+    level = np.asarray(tree_payload["level"], np.int32).reshape(-1)
+    stype = np.asarray(tree_payload["stype"], np.int32).reshape(-1)
+    tree = np.asarray(tree_payload["tree"], np.int32).reshape(-1)
+    N = len(level)
+    P = comm.size
+    if P == int(meta["num_ranks"]):
+        # exact restore: split at the saved markers
+        mt = np.asarray(tree_payload["marker_tree"], np.int64).reshape(-1)
+        mk = (np.asarray(tree_payload["marker_key_hi"], np.uint64).reshape(-1)
+              << np.uint64(32)) | np.asarray(
+                  tree_payload["marker_key_lo"], np.uint64).reshape(-1)
+        s = Simplex(anchor, level, stype)
+        keys = forest_mod.get_batch_ops(d).morton_key_np(s)
+        # first global index whose (tree, key) lex->= marker_r
+        bounds = []
+        for r in range(P):
+            t_r, k_r = int(mt[r]), np.uint64(mk[r])
+            lo = int(np.searchsorted(tree, t_r))
+            hi = int(np.searchsorted(tree, t_r + 1))
+            bounds.append(lo + int(np.searchsorted(keys[lo:hi], k_r)))
+        bounds.append(N)
+    else:
+        bounds = [(N * r) // P for r in range(P + 1)]
+    out = []
+    for i, g in enumerate(comm.local_ranks):
+        a, b = bounds[g], bounds[g + 1]
+        f = forest_mod._empty(d, num_trees, g, P, cmesh)
+        out.append(f.replace_elements(anchor[a:b], level[a:b], stype[a:b], tree[a:b]))
+    return out

@@ -7,6 +7,7 @@ Layers:
   ops        — vectorized constant-time element algorithms (paper Section 4)
   batch      — batched element-ops dispatch (reference / jnp / pallas backends)
   cmesh      — coarse-mesh inter-tree connectivity (gluing tables, transforms)
+  comm       — the Comm surface: SimComm / LocalComm / DistComm + byte meters
   reference  — pure-Python oracles (tests only)
   forest     — forest-of-trees AMR: New / Adapt / Partition / Balance / Ghost
   placement  — SFC-based load balancing applied to LM training workloads
@@ -16,6 +17,7 @@ from .tables import MAXLEVEL, SFCTables, get_tables
 from .types import Simplex, root, simplex
 from .ops import SimplexOps, get_ops, ops2d, ops3d
 from .batch import BatchedOps, get_batch_ops, get_backend, set_backend, use_backend
+from .comm import Comm, DistComm, LocalComm, SimComm
 from .cmesh import (
     Cmesh,
     cmesh_brick,
@@ -44,6 +46,10 @@ __all__ = [
     "ops2d",
     "ops3d",
     "BatchedOps",
+    "Comm",
+    "DistComm",
+    "LocalComm",
+    "SimComm",
     "get_batch_ops",
     "get_backend",
     "set_backend",

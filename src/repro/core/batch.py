@@ -23,7 +23,9 @@ fails its self-test (e.g. no Pallas lowering on this host) falls back to
 
 Future scaling PRs (sharding, multi-device partition) plug in here: a new
 backend only has to implement the `BatchedOps` method surface (the eight
-per-element algorithms plus the cross-tree `tree_transform`).
+per-element algorithms, the cross-tree `tree_transform`, and the
+marker-table `owner_rank` searchsorted that routes the message-based
+Balance/Ghost).
 """
 
 from __future__ import annotations
@@ -121,6 +123,35 @@ def _jnp_fns(d: int):
         "local_index": jax.jit(o.local_index),
         "tree_transform": jax.jit(o.tree_transform),
     }
+
+
+def _pad_markers(marker_tree: np.ndarray, marker_key: np.ndarray):
+    """Pad the per-rank marker table to a power of two (>= 8) with lex-+inf
+    sentinels (tree = int32 max) so compiled shapes stay O(log P) and padding
+    never counts in the searchsorted."""
+    P = len(marker_tree)
+    m = max(8, 1 << max(0, P - 1).bit_length())
+    mt = np.full(m, np.iinfo(np.int32).max, np.int32)
+    mk = np.zeros(m, np.uint64)
+    mt[:P] = marker_tree
+    mk[:P] = marker_key
+    return mt, mk
+
+
+def owner_rank_lex(t, hi, lo, mt, mhi, mlo):
+    """The one shared lex searchsorted: index of the last marker (mt, mhi,
+    mlo) lex-<= (t, hi, lo), clamped to 0.  The jnp backend jits exactly
+    this; `repro.kernels.ref.owner_rank_ref` delegates here so the Pallas
+    kernel's oracle can never drift from the backend implementations."""
+    le = (mt[None, :] < t[:, None]) | (
+        (mt[None, :] == t[:, None])
+        & ((mhi[None, :] < hi[:, None])
+           | ((mhi[None, :] == hi[:, None]) & (mlo[None, :] <= lo[:, None])))
+    )
+    return jnp.maximum(le.astype(jnp.int32).sum(axis=1) - 1, 0)
+
+
+_owner_rank_jnp = jax.jit(owner_rank_lex)
 
 
 # ------------------------------------------------------------- pallas backend
@@ -307,6 +338,42 @@ class BatchedOps:
         from repro.kernels import ops as kops
 
         return self._pallas(kops.local_index, s)
+
+    def owner_rank(self, tree, key, marker_tree, marker_key) -> np.ndarray:
+        """Owner-rank resolution for the message-based Balance/Ghost: the
+        rank whose partition range [marker_r, marker_{r+1}) contains the lex
+        (tree, key) — a vectorized searchsorted against the allgathered
+        marker table (`forest.partition_markers`), clamped to rank 0 for
+        keys before the global first element.  Host-side numpy in/out (the
+        forest's routing tables live on the host); the jnp and pallas paths
+        run the identical unrolled compare chain over (hi, lo) uint32 words.
+        """
+        tree = np.asarray(tree, np.int32)
+        key = np.asarray(key, np.uint64)
+        mt = np.asarray(marker_tree, np.int32)
+        mk = np.asarray(marker_key, np.uint64)
+        n = len(tree)
+        which = self._which(n)
+        if which == "reference":
+            le = (mt[None, :] < tree[:, None]) | (
+                (mt[None, :] == tree[:, None]) & (mk[None, :] <= key[:, None])
+            )
+            return np.maximum(le.sum(axis=1).astype(np.int32) - 1, 0)
+        mt_p, mk_p = _pad_markers(mt, mk)
+        mkey = u64m.from_int(mk_p)
+        m = _bucket(n)
+        t_p = _pad1(jnp.asarray(tree), m)
+        k = u64m.from_int(key)
+        hi, lo = _pad1(k.hi, m), _pad1(k.lo, m)
+        if which == "jnp":
+            out = _owner_rank_jnp(
+                t_p, hi, lo, jnp.asarray(mt_p), mkey.hi, mkey.lo)
+            return np.asarray(out[:n], np.int32)
+        from repro.kernels import ops as kops
+
+        out = kops.owner_rank(
+            u64m.U64(hi, lo), t_p, (jnp.asarray(mt_p), mkey), min(1024, m))
+        return np.asarray(out[:n], np.int32)
 
     def tree_transform(self, s: Simplex, M, c, typemap) -> Simplex:
         """Cross-tree coordinate change (the `repro.core.cmesh` gluing map):

@@ -1,0 +1,412 @@
+"""Communication layer for the forest algorithms: one `Comm` surface,
+three bindings.
+
+The forest code (`repro.core.forest`) is written SPMD style: every rank
+computes its own view, and all cross-rank data moves through the two
+collectives below.  A process may host one rank (production) or all P ranks
+(the in-process simulator used by tests and benchmarks); the `Comm` object
+says which global ranks are resident via `local_ranks`, and every collective
+takes/returns *per-local-rank* payload lists so the same forest code runs
+unchanged under either hosting:
+
+  SimComm(P)   all P ranks in this process; collectives are list shuffles.
+               This is the seed's simulator, conformed to the shared surface.
+  LocalComm()  the degenerate single-rank world (P = 1, no wire anywhere).
+  DistComm()   one rank per process, bound to mpi4py when available and
+               initialized, otherwise to the jax.distributed coordination
+               service (each payload travels through the key-value store of
+               the coordinator that `jax.distributed.initialize` brings up).
+
+Payloads are nested tuples/lists/dicts of numpy arrays and scalars.  The
+base class meters every collective: bytes that would cross a rank boundary
+are accumulated into per-phase counters (`comm.phase("balance")`), which is
+how the benchmarks attribute wire volume to Balance / Ghost / Partition and
+how the boundary-layer exchange is shown to beat the allgathered-leaf-table
+baseline.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import struct
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "Comm",
+    "SimComm",
+    "LocalComm",
+    "DistComm",
+    "payload_nbytes",
+    "encode_payload",
+    "decode_payload",
+]
+
+
+# ------------------------------------------------------------- byte metering
+def payload_nbytes(obj) -> int:
+    """Wire size of a nested payload (arrays dominate; scalars count 8)."""
+    if obj is None:
+        return 1
+    if isinstance(obj, np.ndarray):
+        return obj.nbytes
+    if isinstance(obj, (bytes, bytearray)):
+        return len(obj)
+    if isinstance(obj, str):
+        return len(obj.encode())
+    if isinstance(obj, (bool, int, float, np.integer, np.floating, np.bool_)):
+        return 8
+    if isinstance(obj, dict):
+        return sum(payload_nbytes(k) + payload_nbytes(v) for k, v in obj.items())
+    if isinstance(obj, (list, tuple)):
+        return sum(payload_nbytes(v) for v in obj)
+    raise TypeError(f"unsupported payload type {type(obj)!r}")
+
+
+# ------------------------------------------------------- wire serialization
+# Self-describing tagged format for the payload types above — the DistComm
+# KV-store transport.  No pickle: only data, no code.  (The optional mpi4py
+# binding uses mpi4py's own object collectives instead, which pickle; that
+# path assumes the usual MPI trust model of mutually trusted ranks.)
+def _enc(obj, out: list) -> None:
+    if obj is None:
+        out.append(b"N")
+    elif isinstance(obj, (bool, np.bool_)):
+        out.append(b"T" if obj else b"F")
+    elif isinstance(obj, (int, np.integer)):
+        v = int(obj)
+        if 0 <= v < 1 << 64:
+            out.append(b"u" + struct.pack("<Q", v))
+        elif -(1 << 63) <= v < 1 << 63:
+            out.append(b"i" + struct.pack("<q", v))
+        else:  # arbitrary precision fallback
+            s = str(v).encode()
+            out.append(b"I" + struct.pack("<I", len(s)) + s)
+    elif isinstance(obj, (float, np.floating)):
+        out.append(b"f" + struct.pack("<d", float(obj)))
+    elif isinstance(obj, str):
+        s = obj.encode()
+        out.append(b"s" + struct.pack("<I", len(s)) + s)
+    elif isinstance(obj, (bytes, bytearray)):
+        out.append(b"y" + struct.pack("<I", len(obj)) + bytes(obj))
+    elif isinstance(obj, np.ndarray):
+        assert obj.dtype.names is None, "structured dtypes are not wire types"
+        dt = obj.dtype.str.encode()
+        a = np.ascontiguousarray(obj)
+        out.append(b"a" + struct.pack("<B", len(dt)) + dt
+                   + struct.pack("<B", a.ndim)
+                   + struct.pack(f"<{a.ndim}I", *a.shape)
+                   + a.tobytes())
+    elif isinstance(obj, (list, tuple)):
+        out.append((b"l" if isinstance(obj, list) else b"t")
+                   + struct.pack("<I", len(obj)))
+        for v in obj:
+            _enc(v, out)
+    elif isinstance(obj, dict):
+        out.append(b"d" + struct.pack("<I", len(obj)))
+        for k, v in obj.items():
+            _enc(k, out)
+            _enc(v, out)
+    else:
+        raise TypeError(f"unsupported payload type {type(obj)!r}")
+
+
+def encode_payload(obj) -> bytes:
+    out: list = []
+    _enc(obj, out)
+    return b"".join(out)
+
+
+def _dec(buf: bytes, off: int):
+    tag = buf[off:off + 1]
+    off += 1
+    if tag == b"N":
+        return None, off
+    if tag == b"T":
+        return True, off
+    if tag == b"F":
+        return False, off
+    if tag == b"u":
+        return struct.unpack_from("<Q", buf, off)[0], off + 8
+    if tag == b"i":
+        return struct.unpack_from("<q", buf, off)[0], off + 8
+    if tag == b"I":
+        n = struct.unpack_from("<I", buf, off)[0]
+        return int(buf[off + 4:off + 4 + n].decode()), off + 4 + n
+    if tag == b"f":
+        return struct.unpack_from("<d", buf, off)[0], off + 8
+    if tag == b"s":
+        n = struct.unpack_from("<I", buf, off)[0]
+        return buf[off + 4:off + 4 + n].decode(), off + 4 + n
+    if tag == b"y":
+        n = struct.unpack_from("<I", buf, off)[0]
+        return buf[off + 4:off + 4 + n], off + 4 + n
+    if tag == b"a":
+        dl = struct.unpack_from("<B", buf, off)[0]
+        off += 1
+        dt = np.dtype(buf[off:off + dl].decode())
+        off += dl
+        ndim = struct.unpack_from("<B", buf, off)[0]
+        off += 1
+        shape = struct.unpack_from(f"<{ndim}I", buf, off)
+        off += 4 * ndim
+        n = int(np.prod(shape)) if ndim else 1
+        nb = n * dt.itemsize
+        arr = np.frombuffer(buf[off:off + nb], dt).reshape(shape).copy()
+        return arr, off + nb
+    if tag in (b"l", b"t"):
+        n = struct.unpack_from("<I", buf, off)[0]
+        off += 4
+        items = []
+        for _ in range(n):
+            v, off = _dec(buf, off)
+            items.append(v)
+        return (items if tag == b"l" else tuple(items)), off
+    if tag == b"d":
+        n = struct.unpack_from("<I", buf, off)[0]
+        off += 4
+        d = {}
+        for _ in range(n):
+            k, off = _dec(buf, off)
+            v, off = _dec(buf, off)
+            d[k] = v
+        return d, off
+    raise ValueError(f"bad wire tag {tag!r} at offset {off - 1}")
+
+
+def decode_payload(buf: bytes):
+    obj, off = _dec(bytes(buf), 0)
+    assert off == len(buf), "trailing bytes in wire payload"
+    return obj
+
+
+# ----------------------------------------------------------------- the seam
+class Comm:
+    """Abstract communicator: rank/size plus the two forest collectives.
+
+    `local_ranks` lists the global ranks resident in this process; every
+    collective consumes a list with one payload per local rank and returns,
+    per local rank, the global view (`allgather`: length-P list; `alltoallv`:
+    length-P list of what each global rank sent here).  Subclasses implement
+    `_allgather` / `_alltoallv`; the base class meters byte volume into
+    per-phase counters.
+    """
+
+    size: int
+    rank: int            # first (usually only) local rank
+    local_ranks: range
+
+    def __init__(self):
+        self.counters: dict = {}
+        self._phases: list[str] = []
+
+    # -- metering ----------------------------------------------------------
+    @contextlib.contextmanager
+    def phase(self, name: str):
+        """Attribute subsequent traffic to `name` (nested phases stack; the
+        innermost label wins — forest algorithms label their own traffic)."""
+        self._phases.append(name)
+        try:
+            yield self
+        finally:
+            self._phases.pop()
+
+    def _bucket(self) -> dict:
+        name = self._phases[-1] if self._phases else "default"
+        return self.counters.setdefault(
+            name, {"allgather_bytes": 0, "alltoallv_bytes": 0,
+                   "allgather_calls": 0, "alltoallv_calls": 0})
+
+    def bytes_for(self, phase: str | None = None) -> int:
+        """Total bytes crossing rank boundaries (one phase, or all)."""
+        buckets = ([self.counters.get(phase, {})] if phase is not None
+                   else list(self.counters.values()))
+        return sum(b.get("allgather_bytes", 0) + b.get("alltoallv_bytes", 0)
+                   for b in buckets)
+
+    def stats(self) -> dict:
+        out = {k: dict(v) for k, v in self.counters.items()}
+        out["total_bytes"] = self.bytes_for()
+        return out
+
+    def reset_counters(self) -> None:
+        self.counters.clear()
+
+    # -- collectives -------------------------------------------------------
+    def allgather(self, per_local: Sequence) -> list:
+        """per_local[i] from local rank i -> full per-global-rank list."""
+        assert len(per_local) == len(self.local_ranks)
+        b = self._bucket()
+        b["allgather_calls"] += 1
+        b["allgather_bytes"] += sum(
+            payload_nbytes(x) * (self.size - 1) for x in per_local)
+        return self._allgather(list(per_local))
+
+    def alltoallv(self, send: Sequence[Sequence]) -> list:
+        """send[i][q]: payload from local rank i to global rank q.
+        Returns recv[i][p]: what global rank p sent to local rank i."""
+        assert len(send) == len(self.local_ranks)
+        b = self._bucket()
+        b["alltoallv_calls"] += 1
+        for i, g in enumerate(self.local_ranks):
+            assert len(send[i]) == self.size
+            b["alltoallv_bytes"] += sum(
+                payload_nbytes(x) for q, x in enumerate(send[i]) if q != g)
+        return self._alltoallv([list(row) for row in send])
+
+    def barrier(self) -> None:  # pragma: no cover - trivial default
+        pass
+
+    def _allgather(self, per_local: list) -> list:
+        raise NotImplementedError
+
+    def _alltoallv(self, send: list) -> list:
+        raise NotImplementedError
+
+
+class SimComm(Comm):
+    """All P ranks in this process — the tests/benchmarks simulator.
+
+    Collectives are pure list shuffles; the byte counters still meter what
+    WOULD cross rank boundaries, which is what the benchmarks record.
+    """
+
+    def __init__(self, num_ranks: int):
+        super().__init__()
+        self.size = num_ranks
+        self.rank = 0
+        self.local_ranks = range(num_ranks)
+
+    # legacy alias (the seed called it .P everywhere)
+    @property
+    def P(self) -> int:
+        return self.size
+
+    def _allgather(self, per_local: list) -> list:
+        return list(per_local)
+
+    def _alltoallv(self, send: list) -> list:
+        P = self.size
+        return [[send[p][q] for p in range(P)] for q in range(P)]
+
+
+class LocalComm(SimComm):
+    """Degenerate single-rank world: every collective is the identity."""
+
+    def __init__(self):
+        super().__init__(1)
+
+
+class DistComm(Comm):
+    """One rank per process, over mpi4py or the jax.distributed coordinator.
+
+    Binding order: an initialized mpi4py world with more than one process
+    wins; otherwise `jax.distributed.initialize()` must have been called and
+    payloads travel through the coordination service's key-value store
+    (set/get/delete per generation, with a barrier before cleanup).  Either
+    way the surface is identical to `SimComm` with `local_ranks == [rank]`,
+    so the forest algorithms run unmodified.
+    """
+
+    def __init__(self, timeout_s: float = 120.0):
+        super().__init__()
+        self._timeout_ms = int(timeout_s * 1000)
+        self._gen = 0
+        self._mpi = None
+        self._client = None
+        mpi = self._try_mpi()
+        if mpi is not None:
+            self._mpi = mpi
+            self.rank = mpi.Get_rank()
+            self.size = mpi.Get_size()
+        else:
+            import jax
+            from jax._src import distributed
+
+            client = getattr(distributed.global_state, "client", None)
+            if client is None:
+                raise RuntimeError(
+                    "DistComm needs an initialized jax.distributed runtime "
+                    "(call jax.distributed.initialize) or an mpi4py world")
+            self._client = client
+            self.rank = jax.process_index()
+            self.size = jax.process_count()
+        self.local_ranks = range(self.rank, self.rank + 1)
+
+    @staticmethod
+    def _try_mpi():
+        try:
+            from mpi4py import MPI  # noqa: PLC0415
+        except ImportError:
+            return None
+        if not MPI.Is_initialized() or MPI.COMM_WORLD.Get_size() < 2:
+            return None
+        return MPI.COMM_WORLD
+
+    # legacy alias
+    @property
+    def P(self) -> int:
+        return self.size
+
+    # -- KV-store transport ------------------------------------------------
+    def _kv_exchange(self, outbox: dict[int, bytes], tag: str) -> dict[int, bytes]:
+        """Deliver outbox[q] to each rank q; return {p: payload_from_p}.
+        Peers that sent nothing are absent from the result."""
+        c = self._client
+        gen = self._gen
+        self._gen += 1
+        me = self.rank
+        for q, blob in outbox.items():
+            c.key_value_set_bytes(f"repro_comm/{gen}/{tag}/{me}>{q}", blob)
+        # publish which peers each rank targeted so receivers know what to get
+        targets = ",".join(str(q) for q in sorted(outbox))
+        c.key_value_set(f"repro_comm/{gen}/{tag}/targets/{me}", targets or "-")
+        inbox: dict[int, bytes] = {}
+        for p in range(self.size):
+            if p == me:
+                continue
+            t = c.blocking_key_value_get(
+                f"repro_comm/{gen}/{tag}/targets/{p}", self._timeout_ms)
+            if t != "-" and str(me) in t.split(","):
+                inbox[p] = c.blocking_key_value_get_bytes(
+                    f"repro_comm/{gen}/{tag}/{p}>{me}", self._timeout_ms)
+        c.wait_at_barrier(f"repro_comm_{gen}_{tag}", self._timeout_ms)
+        for q in outbox:
+            c.key_value_delete(f"repro_comm/{gen}/{tag}/{me}>{q}")
+        c.key_value_delete(f"repro_comm/{gen}/{tag}/targets/{me}")
+        return inbox
+
+    def barrier(self) -> None:
+        if self._mpi is not None:
+            self._mpi.Barrier()
+        else:
+            gen = self._gen
+            self._gen += 1
+            self._client.wait_at_barrier(f"repro_comm_{gen}_b", self._timeout_ms)
+
+    def _allgather(self, per_local: list) -> list:
+        x = per_local[0]
+        if self._mpi is not None:
+            return list(self._mpi.allgather(x))
+        blob = encode_payload(x)
+        inbox = self._kv_exchange(
+            {q: blob for q in range(self.size) if q != self.rank}, "ag")
+        out = [None] * self.size
+        out[self.rank] = x
+        for p, b in inbox.items():
+            out[p] = decode_payload(b)
+        return out
+
+    def _alltoallv(self, send: list) -> list:
+        row = send[0]
+        if self._mpi is not None:
+            return [list(self._mpi.alltoall(row))]
+        outbox = {q: encode_payload(row[q])
+                  for q in range(self.size) if q != self.rank}
+        inbox = self._kv_exchange(outbox, "a2a")
+        recv = [None] * self.size
+        recv[self.rank] = row[self.rank]
+        for p, b in inbox.items():
+            recv[p] = decode_payload(b)
+        return [recv]

@@ -6,15 +6,25 @@ adaptively refined, with leaves totally ordered by (tree, TM-index) and
 partitioned across P ranks by contiguous SFC ranges.
 
 This module is the distributed-algorithm layer.  It is written in SPMD style:
-every function computes one rank's view, and cross-rank exchanges go through
-an explicit `Comm` object.  `SimComm` executes P ranks in one process (used
-by tests/benchmarks on this box); the identical call structure maps onto
-jax.distributed / MPI on a real machine.  The heavy per-element math goes
-through the batched dispatch layer `repro.core.batch` (reference / jnp /
-pallas backends over `Simplex` batches — gathers + integer ALU, TPU/SIMD
-friendly), while variable-size bookkeeping stays in numpy on the host,
-matching how meshing layers sit next to accelerator compute in production
-frameworks.
+every function computes the view of the ranks resident in this process
+(`comm.local_ranks` — all P under the in-process `SimComm`, exactly one
+under `DistComm`/MPI), and every cross-rank exchange goes through the
+`repro.core.comm.Comm` surface (allgather / alltoallv with per-phase byte
+metering).  Balance and Ghost are *message based*: ranks allgather only the
+P partition markers, route packed (tree, key, level) key-range queries to
+owner ranks via `alltoallv`, answer them from their local sorted leaf
+arrays, and iterate Balance exchanging only the boundary layer that changed
+each round (the ripple scheme of Isaac-Burstedde-Ghattas).  The former
+global-leaf-table implementations are retained as `balance_oracle` /
+`ghost_oracle` — the simulator-era baseline the message path must match
+element for element (and the wire-volume baseline in the benchmarks).
+
+The heavy per-element math goes through the batched dispatch layer
+`repro.core.batch` (reference / jnp / pallas backends over `Simplex`
+batches — gathers + integer ALU, TPU/SIMD friendly), including the
+marker-table `owner_rank` searchsorted that routes every query; the
+variable-size bookkeeping stays in numpy on the host, matching how meshing
+layers sit next to accelerator compute in production frameworks.
 
 Inter-tree face connectivity — the paper's stated open extension (Balance and
 Ghost "require additional theoretical work" across root simplices) — is
@@ -29,7 +39,7 @@ face is a boundary.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import Callable
 
 import numpy as np
 import jax.numpy as jnp
@@ -37,18 +47,26 @@ import jax.numpy as jnp
 from . import u64 as u64m
 from .batch import BatchedOps, get_batch_ops
 from .cmesh import Cmesh
+from .comm import Comm, DistComm, LocalComm, SimComm
 from .ops import SimplexOps, get_ops
 from .tables import face_plane
-from .types import Simplex
+from .types import Simplex, pack_wire, unpack_wire
 
 __all__ = [
     "Forest",
+    "Comm",
     "SimComm",
+    "LocalComm",
+    "DistComm",
     "new_uniform",
     "adapt",
     "partition",
+    "partition_markers",
     "balance",
+    "balance_oracle",
+    "BalanceNonConvergence",
     "ghost",
+    "ghost_oracle",
     "iterate",
     "validate",
     "count_global",
@@ -57,26 +75,6 @@ __all__ = [
     "FACE_INTER_TREE",
     "FACE_DOMAIN_BOUNDARY",
 ]
-
-
-# --------------------------------------------------------------------- comm
-class SimComm:
-    """Single-process stand-in for an MPI-like communicator.
-
-    Collectives operate over a list of per-rank payloads.  The production
-    deployment swaps this for jax.distributed / mpi4py with the same calls.
-    """
-
-    def __init__(self, num_ranks: int):
-        self.P = num_ranks
-
-    def allgather(self, per_rank: Sequence):
-        return list(per_rank)
-
-    def alltoallv(self, send: Sequence[Sequence]):
-        """send[p][q] = payload from rank p to rank q -> recv[q][p]."""
-        P = self.P
-        return [[send[p][q] for p in range(P)] for q in range(P)]
 
 
 # ------------------------------------------------------------------- forest
@@ -145,15 +143,17 @@ def _empty(d, num_trees, rank, num_ranks, cmesh=None) -> Forest:
 
 
 # ---------------------------------------------------------------------- new
-def new_uniform(d: int, num_trees: int, level: int, comm: SimComm,
+def new_uniform(d: int, num_trees: int, level: int, comm: Comm,
                 method: str = "decode", cmesh: Cmesh | None = None) -> list[Forest]:
     """Paper Algorithm 5.1 (New): partitioned uniform level-`level` forest.
 
-    With `cmesh`, the trees are glued per its face tables and the forest's
-    Balance/Ghost/Iterate follow neighbors across tree faces."""
+    Returns one `Forest` per rank resident in this process (all P under
+    `SimComm`, one under `DistComm`).  With `cmesh`, the trees are glued per
+    its face tables and the forest's Balance/Ghost/Iterate follow neighbors
+    across tree faces."""
     return [
-        new_uniform_rank(d, num_trees, level, p, comm.P, method=method, cmesh=cmesh)
-        for p in range(comm.P)
+        new_uniform_rank(d, num_trees, level, p, comm.size, method=method, cmesh=cmesh)
+        for p in comm.local_ranks
     ]
 
 
@@ -384,7 +384,7 @@ def adapt(f: Forest, callback: AdaptCallback, recursive: bool = False,
 
 
 # ---------------------------------------------------------------- partition
-def partition(forests: list[Forest], comm: SimComm,
+def partition(forests: list[Forest], comm: Comm,
               weights: list[np.ndarray] | None = None) -> list[Forest]:
     """Paper Section 5 (Partition): weighted SFC repartitioning, linear time.
 
@@ -392,34 +392,61 @@ def partition(forests: list[Forest], comm: SimComm,
     target ranks by slicing the total weight into P equal chunks, and ships
     contiguous element runs — the classic SFC partition [Pilkington-Baden].
     """
-    P = comm.P
+    P = comm.size
     if weights is None:
         weights = [np.ones(f.num_local, np.float64) for f in forests]
-    local_tot = [float(w.sum()) for w in weights]
-    tots = comm.allgather(local_tot)  # same list on each rank
-    prefix = np.concatenate([[0.0], np.cumsum(tots)])
-    W = prefix[-1]
-    sends = []
-    for p, f in enumerate(forests):
-        w = weights[p]
-        cum = prefix[p] + np.cumsum(w) - w / 2.0  # midpoint rule, robust to w=0
-        target = np.minimum((cum * P / max(W, 1e-300)).astype(np.int64), P - 1)
-        target = np.maximum.accumulate(target)  # keep contiguous, monotone
-        chunks = []
-        for q in range(P):
-            m = target == q
-            chunks.append((f.anchor[m], f.level[m], f.stype[m], f.tree[m]))
-        sends.append(chunks)
-    recv = comm.alltoallv(sends)
+    with comm.phase("partition"):
+        local_tot = [float(w.sum()) for w in weights]
+        tots = comm.allgather(local_tot)  # same list on each rank
+        prefix = np.concatenate([[0.0], np.cumsum(tots)])
+        W = prefix[-1]
+        sends = []
+        for i, f in enumerate(forests):
+            g = comm.local_ranks[i]
+            w = weights[i]
+            cum = prefix[g] + np.cumsum(w) - w / 2.0  # midpoint rule, robust to w=0
+            target = np.minimum((cum * P / max(W, 1e-300)).astype(np.int64), P - 1)
+            target = np.maximum.accumulate(target)  # keep contiguous, monotone
+            chunks = []
+            for q in range(P):
+                m = target == q
+                chunks.append((f.anchor[m], f.level[m], f.stype[m], f.tree[m]))
+            sends.append(chunks)
+        recv = comm.alltoallv(sends)
     out = []
-    for q in range(P):
-        parts = recv[q]
+    for i, f in enumerate(forests):
+        parts = recv[i]
         A = np.concatenate([c[0] for c in parts])
         L = np.concatenate([c[1] for c in parts])
         B = np.concatenate([c[2] for c in parts])
         T = np.concatenate([c[3] for c in parts])
-        out.append(forests[q].replace_elements(A, L, B, T))
+        out.append(f.replace_elements(A, L, B, T))
     return out
+
+
+def partition_markers(forests: list[Forest], comm: Comm):
+    """Allgather the partition-marker table: per rank the (tree, key) of its
+    first local element (`global_first_desc_key`).  Empty ranks inherit the
+    next non-empty rank's marker (trailing empties keep the (num_trees, 0)
+    sentinel), so the table is lex-sorted and `owner_rank` — a vectorized
+    searchsorted on the batch backends — resolves any (tree, key) to the
+    rank whose contiguous SFC range holds it.  This P-entry exchange is the
+    ONLY global metadata Balance/Ghost need: everything else travels as
+    boundary-local key-range messages."""
+    K = forests[0].num_trees
+    per_local = [tuple(map(int, f.global_first_desc_key())) for f in forests]
+    pairs = comm.allgather(per_local)
+    P = comm.size
+    mt = np.empty(P, np.int32)
+    mk = np.empty(P, np.uint64)
+    nxt = (K, 0)
+    for r in range(P - 1, -1, -1):
+        t, k = pairs[r]
+        if t >= K:  # empty rank: route to the next non-empty range
+            t, k = nxt
+        mt[r], mk[r] = t, np.uint64(k)
+        nxt = (t, k)
+    return mt, mk
 
 
 # ------------------------------------------------------- cross-tree lookups
@@ -428,8 +455,10 @@ FACE_INTER_TREE = 1        # neighbor across a glued tree face (via Cmesh)
 FACE_DOMAIN_BOUNDARY = 2   # no neighbor: true domain boundary
 
 
-def _face_lookup(f: Forest, s: Simplex, face: int):
-    """Where to look for the face-`face` neighbor of every local element.
+def _face_lookup(f: Forest, tree_ids: np.ndarray, s: Simplex, face: int):
+    """Where to look for the face-`face` neighbor of the elements in `s`
+    (any subset of local elements; `tree_ids` is their owning-tree column —
+    the boundary-only Balance rounds pass just the changed layer here).
 
     Returns (tgt_tree, nkey, valid, nb, dual, kind):
       tgt_tree  (n,) tree whose leaf table holds the neighbor region
@@ -446,9 +475,13 @@ def _face_lookup(f: Forest, s: Simplex, face: int):
     into "interior", "inter-tree face" (followed through `f.cmesh`), and
     "domain boundary" (no Cmesh connection)."""
     bops = f.bops
+    tree_ids = np.asarray(tree_ids)
+    s_anchor = np.asarray(s.anchor)
+    s_level = np.asarray(s.level)
+    s_stype = np.asarray(s.stype)
     nb, dual = bops.face_neighbor(s, face)
     inside = np.asarray(bops.is_inside_root(nb))
-    tgt = f.tree.copy()
+    tgt = tree_ids.copy()
     valid = inside.copy()
     kind = np.where(inside, FACE_INTERIOR, FACE_DOMAIN_BOUNDARY).astype(np.int32)
     dual_np = np.asarray(dual).copy()
@@ -460,19 +493,19 @@ def _face_lookup(f: Forest, s: Simplex, face: int):
         stype = stype.copy()
         out_idx = np.nonzero(~inside)[0]
         src = Simplex(
-            jnp.asarray(f.anchor[out_idx]), jnp.asarray(f.level[out_idx]),
-            jnp.asarray(f.stype[out_idx]),
+            jnp.asarray(s_anchor[out_idx]), jnp.asarray(s_level[out_idx]),
+            jnp.asarray(s_stype[out_idx]),
         )
         rf = cm.root_face_of(src, face)
         # group boundary crossings by connection (source tree, root face)
         groups: dict[tuple[int, int], list[int]] = {}
-        for pos, (t1, rfv) in enumerate(zip(f.tree[out_idx], rf)):
+        for pos, (t1, rfv) in enumerate(zip(tree_ids[out_idx], rf)):
             if rfv >= 0 and cm.face_tree[t1, rfv] >= 0:
                 groups.setdefault((int(t1), int(rfv)), []).append(pos)
         for (t1, rfv), poss in groups.items():
             idx = out_idx[np.asarray(poss)]
             sub = Simplex(
-                jnp.asarray(anchor[idx]), jnp.asarray(f.level[idx]),
+                jnp.asarray(anchor[idx]), jnp.asarray(s_level[idx]),
                 jnp.asarray(stype[idx]),
             )
             s2, t2 = cm.transform_across_face(sub, t1, rfv, bops=bops)
@@ -492,107 +525,548 @@ def face_kind(f: Forest, s: Simplex, face: int) -> np.ndarray:
     """Classify face `face` of every element: FACE_INTERIOR (0),
     FACE_INTER_TREE (1), or FACE_DOMAIN_BOUNDARY (2) — the split of the old
     single is-root-boundary test under the coarse mesh."""
-    return _face_lookup(f, s, face)[5]
+    return _face_lookup(f, f.tree, s, face)[5]
 
 
 # ------------------------------------------------------------------ balance
-def balance(forests: list[Forest], comm: SimComm, max_rounds: int = 64) -> list[Forest]:
-    """2:1 balance across faces (ripple algorithm), across tree faces when
-    the forest carries a Cmesh (intra-tree otherwise).
+class BalanceNonConvergence(RuntimeError):
+    """Balance hit `max_rounds` before reaching the 2:1 fixpoint.
 
-    A leaf is refined when some face-neighbor region contains a leaf more
-    than one level finer; neighbor regions behind a glued tree face are
-    queried in the neighbor tree's frame.  Iterates to fixpoint; each round
-    exchanges the global leaf key sets (simulator; a production version
-    exchanges only boundary layers, cf. [Isaac-Burstedde-Ghattas]).
+    Carries the diagnostic context: `rounds` (how many refine/exchange
+    rounds ran) and `dirty_per_rank` (per rank, how many local elements
+    still violated the 2:1 condition when the budget ran out)."""
+
+    def __init__(self, rounds: int, dirty_per_rank):
+        self.rounds = rounds
+        self.dirty_per_rank = [int(c) for c in dirty_per_rank]
+        super().__init__(
+            f"balance did not converge after {rounds} rounds; per-rank "
+            f"still-dirty element counts: {self.dirty_per_rank}"
+        )
+
+
+def _elem_spans(d: int, L: int, level: np.ndarray) -> np.ndarray:
+    """Key-interval width 2^(d*(L-level)) of each element, as uint64."""
+    return np.uint64(1) << (np.uint64(d) * (np.uint64(L) - level.astype(np.uint64)))
+
+
+def _range_max(values: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    """Per-slice max(values[lo:hi]) (or -1 for empty slices), vectorized via
+    maximum.reduceat over independent [lo, hi) segment pairs."""
+    out = np.full(len(lo), -1, np.int32)
+    m = hi > lo
+    if not m.any():
+        return out
+    ext = np.append(np.asarray(values, np.int32), np.int32(-1))  # allow hi == len
+    idx = np.nonzero(m)[0]
+    pairs = np.stack([lo[idx], hi[idx]], axis=1).reshape(-1)
+    out[idx] = np.maximum.reduceat(ext, pairs)[::2]
+    return out
+
+
+def _pack_triples(triples) -> np.ndarray:
+    """(tree, key, level) triples -> deterministic 13-byte/entry wire buffer."""
+    tl = sorted(triples)
+    if not tl:
+        return np.zeros(0, np.uint8)
+    return pack_wire(
+        np.array([x[0] for x in tl], np.int32),
+        np.array([x[1] for x in tl], np.uint64),
+        np.array([x[2] for x in tl], np.int32),
+    )
+
+
+def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64) -> list[Forest]:
+    """2:1 balance across faces (ripple algorithm), across tree faces when
+    the forest carries a Cmesh (intra-tree otherwise) — message based.
+
+    A leaf is refined when some face-neighbor key interval contains a leaf
+    more than one level finer; neighbor regions behind a glued tree face are
+    queried in the neighbor tree's frame.  No rank ever materializes the
+    global leaf table: routing uses only the allgathered P partition markers
+    (`partition_markers` + the batched `owner_rank` searchsorted), and the
+    wire carries
+
+      * key-range queries — packed (tree, key, level) triples an element
+        sends to every remote owner rank of its neighbor interval (issued
+        once per element, when it is created);
+      * replies — for each query whose local slice holds a leaf finer than
+        the querier tolerates, one (tree, key, level) witness triple; and
+      * boundary-layer notifications — after a refinement round, the NEW
+        leaves are pushed only to the ranks whose registered query
+        intervals they fall into (the Isaac-Burstedde-Ghattas ripple:
+        each round exchanges only the boundary layer that changed).
+
+    Received witnesses/notifications accumulate in a per-rank cache of
+    remote leaves, so each round's refine decision is a purely local sweep
+    (local sorted arrays + cache).  Reaches the same least fixpoint as
+    `balance_oracle` — element for element — and raises
+    `BalanceNonConvergence` with per-rank diagnostics on round exhaustion.
     """
+    if max_rounds < 1:
+        raise ValueError("max_rounds must be >= 1")
     d = forests[0].d
     o = get_ops(d)
-    for _ in range(max_rounds):
-        # Global sorted (tree, key, level) table — simulator-level shortcut.
-        all_tree = np.concatenate([f.tree for f in forests])
-        all_keys = np.concatenate([f.keys for f in forests])
-        all_level = np.concatenate([f.level for f in forests])
-        order = np.lexsort((all_keys, all_tree))
-        g_tree, g_keys, g_level = all_tree[order], all_keys[order], all_level[order]
-        changed = False
-        new_forests = []
-        for f in forests:
-            if f.num_local == 0:
-                new_forests.append(f)
-                continue
-            s = f.simplices()
-            need = np.zeros(f.num_local, bool)
-            span = np.uint64(1) << (np.uint64(d) * (np.uint64(o.L) - f.level.astype(np.uint64)))
+    L, nc = o.L, o.nc
+    bops = get_batch_ops(d)
+    P = comm.size
+    nloc = len(forests)
+    forests = list(forests)
+    with comm.phase("balance"):
+        mt, mk = partition_markers(forests, comm)
+        # answering side: (tree, span_exp) -> {k0: (min queried level, ranks)}
+        registries: list[dict] = [{} for _ in range(nloc)]
+        # requesting side: remote leaves learned from replies/notifications
+        cache_entries: list[set] = [set() for _ in range(nloc)]
+        cache_sorted: list[dict] = [{} for _ in range(nloc)]
+
+        def recompile_cache(i: int) -> None:
+            per_tree: dict[int, list] = {}
+            for (t, k, l) in cache_entries[i]:
+                per_tree.setdefault(t, []).append((k, l))
+            cs = {}
+            for t, kl in per_tree.items():
+                kl.sort()
+                cs[t] = (np.array([k for k, _ in kl], np.uint64),
+                         np.array([l for _, l in kl], np.int32))
+            cache_sorted[i] = cs
+
+        def build_queries(i: int, sel: np.ndarray) -> dict:
+            """Key-range queries for elements `sel` of local rank i whose
+            neighbor intervals reach beyond this rank: dest -> {(t, k0, l)}."""
+            f = forests[i]
+            g = comm.local_ranks[i]
+            dest: dict[int, set] = {}
+            if len(sel) == 0:
+                return dest
+            sub = Simplex(jnp.asarray(f.anchor[sel]), jnp.asarray(f.level[sel]),
+                          jnp.asarray(f.stype[sel]))
+            lev = f.level[sel]
+            span = _elem_spans(d, L, lev)
             for face in range(d + 1):
-                tgt, nkey, valid, _, _, _ = _face_lookup(f, s, face)
-                # per-target-tree slices of the global sorted leaf table
+                tgt, nkey, valid, _, _, _ = _face_lookup(f, f.tree[sel], sub, face)
+                idx = np.nonzero(valid)[0]
+                if len(idx) == 0:
+                    continue
+                first = bops.owner_rank(tgt[idx], nkey[idx], mt, mk)
+                last = bops.owner_rank(
+                    tgt[idx], nkey[idx] + span[idx] - np.uint64(1), mt, mk)
+                for j in np.nonzero((first != g) | (last != g))[0]:
+                    q = (int(tgt[idx[j]]), int(nkey[idx[j]]), int(lev[idx[j]]))
+                    for r in range(int(first[j]), int(last[j]) + 1):
+                        if r != g:
+                            dest.setdefault(r, set()).add(q)
+            return dest
+
+        def answer(i: int, src: int, buf: np.ndarray) -> set:
+            """Register one rank's queries and answer them from the local
+            sorted arrays: witness triples for every query whose local slice
+            holds a leaf finer than the querier tolerates."""
+            f = forests[i]
+            qt, qk, ql = unpack_wire(buf)
+            reply: set = set()
+            reg = registries[i]
+            for t, k0, l in zip(qt.tolist(), qk.tolist(), ql.tolist()):
+                se = d * (L - l)
+                ent = reg.setdefault((t, se), {})
+                prev = ent.get(k0)
+                ent[k0] = ((l, {src}) if prev is None
+                           else (min(prev[0], l), prev[1] | {src}))
+                gsel = np.searchsorted(f.tree, [t, t + 1])
+                keys_t = f.keys[gsel[0]:gsel[1]]
+                level_t = f.level[gsel[0]:gsel[1]]
+                a = int(np.searchsorted(keys_t, np.uint64(k0)))
+                b = int(np.searchsorted(
+                    keys_t, np.uint64(k0) + (np.uint64(1) << np.uint64(se))))
+                if b > a:
+                    mx = int(level_t[a:b].max())
+                    if mx > l + 1:
+                        j = a + int(np.argmax(level_t[a:b]))
+                        reply.add((t, int(keys_t[j]), mx))
+            return reply
+
+        def eval_need(i: int) -> np.ndarray:
+            """Local 2:1 sweep: per element, max leaf level in every face
+            interval over (local sorted arrays) ∪ (remote-leaf cache)."""
+            f = forests[i]
+            n = f.num_local
+            need = np.zeros(n, bool)
+            if n == 0:
+                return need
+            s = f.simplices()
+            span = _elem_spans(d, L, f.level)
+            cs = cache_sorted[i]
+            for face in range(d + 1):
+                tgt, nkey, valid, _, _, _ = _face_lookup(f, f.tree, s, face)
                 for t in np.unique(tgt[valid]):
-                    sel = np.nonzero(valid & (tgt == t))[0]
-                    gsel = slice(*np.searchsorted(g_tree, [t, t + 1]))
-                    keys_t, level_t = g_keys[gsel], g_level[gsel]
-                    lo_t = np.searchsorted(keys_t, nkey[sel], side="left")
-                    hi_t = np.searchsorted(keys_t, nkey[sel] + span[sel], side="left")
-                    # any leaf in the neighbor interval finer than level+1?
-                    for i, (a, b) in enumerate(zip(lo_t, hi_t)):
-                        if level_t[a:b].max(initial=-1) > f.level[sel[i]] + 1:
-                            need[sel[i]] = True
-            if need.any():
-                changed = True
-                flags = need.astype(np.int32)
-                new_forests.append(
-                    adapt(f, lambda tree, elems, fl=flags: fl, recursive=False)
-                )
-            else:
-                new_forests.append(f)
-        forests = new_forests
-        if not changed:
+                    idx = np.nonzero(valid & (tgt == t))[0]
+                    gsel = np.searchsorted(f.tree, [t, t + 1])
+                    keys_t = f.keys[gsel[0]:gsel[1]]
+                    level_t = f.level[gsel[0]:gsel[1]]
+                    lo = np.searchsorted(keys_t, nkey[idx])
+                    hi = np.searchsorted(keys_t, nkey[idx] + span[idx])
+                    upd = _range_max(level_t, lo, hi) > f.level[idx] + 1
+                    if t in cs:
+                        ck, cl = cs[t]
+                        clo = np.searchsorted(ck, nkey[idx])
+                        chi = np.searchsorted(ck, nkey[idx] + span[idx])
+                        upd |= _range_max(cl, clo, chi) > f.level[idx] + 1
+                    need[idx[upd]] = True
+            return need
+
+        def exchange(dests: list[dict], notifs: list[dict] | None) -> None:
+            """One boundary exchange: ship (notifications, queries) per
+            destination, answer received queries, ship replies back, fold
+            replies and notifications into the remote-leaf caches."""
+            send = []
+            for i in range(nloc):
+                row = []
+                for q in range(P):
+                    nt = notifs[i].get(q, ()) if notifs is not None else ()
+                    row.append((_pack_triples(nt),
+                                _pack_triples(dests[i].get(q, ()))))
+                send.append(row)
+            recv = comm.alltoallv(send)
+            reply_rows = []
+            for i in range(nloc):
+                g = comm.local_ranks[i]
+                row = [np.zeros(0, np.uint8)] * P
+                for p in range(P):
+                    if p == g or recv[i][p] is None:
+                        continue
+                    nbuf, qbuf = recv[i][p]
+                    if len(nbuf):
+                        t_, k_, l_ = unpack_wire(nbuf)
+                        cache_entries[i].update(
+                            zip(t_.tolist(), k_.tolist(), l_.tolist()))
+                    if len(qbuf):
+                        row[p] = _pack_triples(answer(i, p, qbuf))
+                reply_rows.append(row)
+            rrecv = comm.alltoallv(reply_rows)
+            for i in range(nloc):
+                g = comm.local_ranks[i]
+                for p in range(P):
+                    buf = rrecv[i][p]
+                    if p == g or buf is None or not len(buf):
+                        continue
+                    t_, k_, l_ = unpack_wire(buf)
+                    cache_entries[i].update(zip(t_.tolist(), k_.tolist(), l_.tolist()))
+                recompile_cache(i)
+
+        # initial halo: every element registers + queries its remote intervals
+        exchange([build_queries(i, np.arange(forests[i].num_local))
+                  for i in range(nloc)], None)
+        for _ in range(max_rounds):
+            needs = [eval_need(i) for i in range(nloc)]
+            if not any(comm.allgather([int(nd.any()) for nd in needs])):
+                return forests
+            new_dests: list[dict] = [{} for _ in range(nloc)]
+            new_notifs: list[dict] = [{} for _ in range(nloc)]
+            for i in range(nloc):
+                nd = needs[i]
+                if not nd.any():
+                    continue
+                f = forests[i]
+                # the changed boundary layer: all children created this round
+                child_triples = []
+                for e in np.nonzero(nd)[0].tolist():
+                    t, k, l = int(f.tree[e]), int(f.keys[e]), int(f.level[e])
+                    cspan = 1 << (d * (L - l - 1))
+                    child_triples.extend(
+                        (t, k + j * cspan, l + 1) for j in range(nc))
+                flags = nd.astype(np.int32)
+                f2 = adapt(f, lambda tree, elems, fl=flags: fl, recursive=False)
+                forests[i] = f2
+                # new children re-enter the protocol: locate them ...
+                sel = []
+                for (t, k, l) in child_triples:
+                    gsel = np.searchsorted(f2.tree, [t, t + 1])
+                    sel.append(gsel[0] + int(np.searchsorted(
+                        f2.keys[gsel[0]:gsel[1]], np.uint64(k))))
+                new_dests[i] = build_queries(i, np.asarray(sorted(sel), np.int64))
+                # ... and are pushed to every rank whose registered query
+                # interval they fall into (and whom they could make refine)
+                reg = registries[i]
+                if reg:
+                    exps_by_tree: dict[int, list] = {}
+                    for (t, se) in reg:
+                        exps_by_tree.setdefault(t, []).append(se)
+                    for (t, k, l) in child_triples:
+                        for se in exps_by_tree.get(t, ()):
+                            ent = reg[(t, se)].get((k >> se) << se)
+                            if ent is not None and l > ent[0] + 1:
+                                for r in ent[1]:
+                                    new_notifs[i].setdefault(r, set()).add((t, k, l))
+            exchange(new_dests, new_notifs)
+        # budget exhausted: converged iff the last round left nothing dirty
+        counts = comm.allgather([int(eval_need(i).sum()) for i in range(nloc)])
+        if not any(counts):
             return forests
-    raise RuntimeError("balance did not converge")
+    raise BalanceNonConvergence(max_rounds, counts)
+
+
+def balance_oracle(forests: list[Forest], comm: Comm,
+                   max_rounds: int = 64) -> list[Forest]:
+    """The seed's global-leaf-table Balance, retained as the test oracle and
+    wire-volume baseline: every round allgathers the full (tree, key, level)
+    leaf table of every rank.  The message-based `balance` must match its
+    result element for element; the benchmarks record how far its per-round
+    O(N) exchange exceeds the boundary-only path's."""
+    if max_rounds < 1:
+        raise ValueError("max_rounds must be >= 1")
+    d = forests[0].d
+    o = get_ops(d)
+    forests = list(forests)
+    nloc = len(forests)
+    with comm.phase("balance_oracle"):
+        for rnd in range(max_rounds):
+            # Global sorted (tree, key, level) table — the simulator shortcut.
+            tables = comm.allgather(
+                [(f.tree, f.keys, f.level) for f in forests])
+            all_tree = np.concatenate([t[0] for t in tables])
+            all_keys = np.concatenate([t[1] for t in tables])
+            all_level = np.concatenate([t[2] for t in tables])
+            order = np.lexsort((all_keys, all_tree))
+            g_tree, g_keys, g_level = all_tree[order], all_keys[order], all_level[order]
+            changed = False
+            last_dirty = [0] * nloc
+            for fi in range(nloc):
+                f = forests[fi]
+                if f.num_local == 0:
+                    continue
+                s = f.simplices()
+                need = np.zeros(f.num_local, bool)
+                span = _elem_spans(d, o.L, f.level)
+                for face in range(d + 1):
+                    tgt, nkey, valid, _, _, _ = _face_lookup(f, f.tree, s, face)
+                    # per-target-tree slices of the global sorted leaf table
+                    for t in np.unique(tgt[valid]):
+                        sel = np.nonzero(valid & (tgt == t))[0]
+                        gsel = slice(*np.searchsorted(g_tree, [t, t + 1]))
+                        keys_t, level_t = g_keys[gsel], g_level[gsel]
+                        lo_t = np.searchsorted(keys_t, nkey[sel], side="left")
+                        hi_t = np.searchsorted(keys_t, nkey[sel] + span[sel], side="left")
+                        # any leaf in the neighbor interval finer than level+1?
+                        for i, (a, b) in enumerate(zip(lo_t, hi_t)):
+                            if level_t[a:b].max(initial=-1) > f.level[sel[i]] + 1:
+                                need[sel[i]] = True
+                if need.any():
+                    changed = True
+                    last_dirty[fi] = int(need.sum())
+                    flags = need.astype(np.int32)
+                    forests[fi] = adapt(
+                        f, lambda tree, elems, fl=flags: fl, recursive=False)
+            if not any(comm.allgather([int(changed)] * nloc)):
+                return forests
+        # per-rank counts of the last round's violators — the ripple front
+        # that was still moving when the budget ran out
+        counts = comm.allgather(last_dirty)
+    raise BalanceNonConvergence(max_rounds, counts)
 
 
 # -------------------------------------------------------------------- ghost
-def ghost(forests: list[Forest], comm: SimComm) -> list[dict]:
+def _empty_ghost(d: int) -> dict:
+    return {"anchor": np.zeros((0, d), np.int32), "level": np.zeros(0, np.int32),
+            "stype": np.zeros(0, np.int32), "tree": np.zeros(0, np.int32),
+            "owner": np.zeros(0, np.int32)}
+
+
+def _ghost_from_candidates(d: int, bops: BatchedOps, cand: set) -> dict:
+    """Sorted-deduped (tree, key, level, owner) candidates -> ghost arrays
+    (anchors/types recovered by batch decode, Remark 20)."""
+    if not cand:
+        return _empty_ghost(d)
+    uniq = sorted(cand)
+    trees = np.array([c[0] for c in uniq], np.int32)
+    keys = np.array([c[1] for c in uniq], np.uint64)
+    levels = np.array([c[2] for c in uniq], np.int32)
+    owners = np.array([c[3] for c in uniq], np.int32)
+    gs = bops.decode(u64m.from_int(keys), jnp.asarray(levels))
+    return {"anchor": np.asarray(gs.anchor), "level": levels,
+            "stype": np.asarray(gs.stype), "tree": trees, "owner": owners}
+
+
+def ghost(forests: list[Forest], comm: Comm) -> list[dict]:
     """Face-ghost layer: for each rank, the remote leaves touching its
     elements across faces — following glued tree faces through the Cmesh
-    when the forest carries one.  Returns per-rank dicts with ghost element
-    arrays (in the *owning tree's* frame) and their owner ranks."""
+    when the forest carries one.  Returns per-local-rank dicts with ghost
+    element arrays (in the *owning tree's* frame) and their owner ranks.
+
+    Message based: each element's neighbor key interval is routed by the
+    allgathered partition markers to its remote owner ranks as a packed
+    (tree, key, level, dual-face) query; owners answer from their local
+    sorted arrays — the plane filter runs on the *answering* side, which
+    reconstructs the neighbor simplex by decoding the queried key (the wire
+    stays 14 bytes per query, Remark 20) — and reply with the matching leaf
+    triples.  No global leaf table is ever built (`ghost_oracle` keeps the
+    old one for the tests)."""
+    d = forests[0].d
+    o = get_ops(d)
+    L = o.L
+    bops = get_batch_ops(d)
+    P = comm.size
+    nloc = len(forests)
+    with comm.phase("ghost"):
+        mt, mk = partition_markers(forests, comm)
+        # ---- route queries: per element x face, the remote interval owners
+        send = []
+        for i, f in enumerate(forests):
+            g = comm.local_ranks[i]
+            dest: dict[int, set] = {}
+            if f.num_local:
+                s = f.simplices()
+                span = _elem_spans(d, L, f.level)
+                for face in range(d + 1):
+                    tgt, nkey, valid, _, dual, _ = _face_lookup(f, f.tree, s, face)
+                    idx = np.nonzero(valid)[0]
+                    if len(idx) == 0:
+                        continue
+                    first = bops.owner_rank(tgt[idx], nkey[idx], mt, mk)
+                    last = bops.owner_rank(
+                        tgt[idx], nkey[idx] + span[idx] - np.uint64(1), mt, mk)
+                    for j in np.nonzero((first != g) | (last != g))[0]:
+                        e = idx[j]
+                        q = (int(tgt[e]), int(nkey[e]), int(f.level[e]), int(dual[e]))
+                        for r in range(int(first[j]), int(last[j]) + 1):
+                            if r != g:
+                                dest.setdefault(r, set()).add(q)
+            row = []
+            for q in range(P):
+                qs = sorted(dest.get(q, ()))
+                row.append(pack_wire(
+                    np.array([x[0] for x in qs], np.int32),
+                    np.array([x[1] for x in qs], np.uint64),
+                    np.array([x[2] for x in qs], np.int32),
+                    extra=np.array([x[3] for x in qs], np.int32),
+                ) if qs else np.zeros(0, np.uint8))
+            send.append(row)
+        recv = comm.alltoallv(send)
+
+        # ---- answer from the local sorted arrays
+        reply_rows = []
+        for i, f in enumerate(forests):
+            g = comm.local_ranks[i]
+            row = [np.zeros(0, np.uint8)] * P
+            entries = []  # (src, tree, k0, level, dual)
+            for p in range(P):
+                buf = recv[i][p]
+                if p == g or buf is None or not len(buf):
+                    continue
+                qt, qk, ql, qd = unpack_wire(buf, with_extra=True)
+                entries.extend(
+                    (p, t, k, l, du) for t, k, l, du in
+                    zip(qt.tolist(), qk.tolist(), ql.tolist(), qd.tolist()))
+            replies: dict[int, set] = {}
+            if entries and f.num_local:
+                pend = []       # (entry idx, local leaf idx) same-or-finer
+                pred_hits = []  # (entry idx, local leaf idx) coarser containing
+                for ei, (p, t, k0, l, du) in enumerate(entries):
+                    gsel = np.searchsorted(f.tree, [t, t + 1])
+                    keys_t = f.keys[gsel[0]:gsel[1]]
+                    span_q = np.uint64(1) << np.uint64(d * (L - l))
+                    a = int(np.searchsorted(keys_t, np.uint64(k0)))
+                    b = int(np.searchsorted(keys_t, np.uint64(k0) + span_q))
+                    if b > a:
+                        pend.extend((ei, gsel[0] + j) for j in range(a, b))
+                    elif a > 0:
+                        # coarser containing leaf: dyadic nesting makes the
+                        # interval globally empty, and the leaf lives on the
+                        # owner rank of k0 — answer only there
+                        own = int(bops.owner_rank(
+                            np.array([t], np.int32), np.array([k0], np.uint64),
+                            mt, mk)[0])
+                        jj = gsel[0] + a - 1
+                        span_p = np.uint64(1) << np.uint64(d * (L - int(f.level[jj])))
+                        if own == g and np.uint64(f.keys[jj]) + span_p > np.uint64(k0):
+                            pred_hits.append((ei, jj))
+                if pend:
+                    # same-or-finer leaves must TOUCH the shared face: d of
+                    # their vertices on the plane of the neighbor simplex's
+                    # dual facet (the neighbor is decoded from the query key)
+                    eis = sorted({ei for ei, _ in pend})
+                    emap = {ei: k for k, ei in enumerate(eis)}
+                    ent_k = np.array([entries[ei][2] for ei in eis], np.uint64)
+                    ent_l = np.array([entries[ei][3] for ei in eis], np.int32)
+                    nbs = bops.decode(u64m.from_int(ent_k), jnp.asarray(ent_l))
+                    nbc = np.asarray(o.coordinates(nbs), np.int64)
+                    js = sorted({j for _, j in pend})
+                    jmap = {j: k for k, j in enumerate(js)}
+                    jarr = np.asarray(js, np.int64)
+                    cs = Simplex(jnp.asarray(f.anchor[jarr]),
+                                 jnp.asarray(f.level[jarr]),
+                                 jnp.asarray(f.stype[jarr]))
+                    ccoords = np.asarray(o.coordinates(cs), np.int64)
+                    planes: dict[int, tuple] = {}
+                    for ei, j in pend:
+                        if ei not in planes:
+                            planes[ei] = face_plane(np.delete(
+                                nbc[emap[ei]], int(entries[ei][4]), axis=0))
+                        nrm, rhs = planes[ei]
+                        if (ccoords[jmap[j]] @ nrm == rhs).sum() == d:
+                            replies.setdefault(entries[ei][0], set()).add(
+                                (int(f.tree[j]), int(f.keys[j]), int(f.level[j])))
+                for ei, j in pred_hits:
+                    replies.setdefault(entries[ei][0], set()).add(
+                        (int(f.tree[j]), int(f.keys[j]), int(f.level[j])))
+            for p, rs in replies.items():
+                row[p] = _pack_triples(rs)
+            reply_rows.append(row)
+        rrecv = comm.alltoallv(reply_rows)
+
+        # ---- assemble: replies from rank p are leaves owned by p
+        out = []
+        for i, f in enumerate(forests):
+            g = comm.local_ranks[i]
+            cand: set = set()
+            for p in range(P):
+                buf = rrecv[i][p]
+                if p == g or buf is None or not len(buf):
+                    continue
+                t_, k_, l_ = unpack_wire(buf)
+                cand.update((t, k, l, p) for t, k, l in
+                            zip(t_.tolist(), k_.tolist(), l_.tolist()))
+            out.append(_ghost_from_candidates(d, bops, cand))
+        return out
+
+
+def ghost_oracle(forests: list[Forest], comm: Comm) -> list[dict]:
+    """The seed's global-leaf-table Ghost, retained as the test oracle and
+    wire-volume baseline: allgathers every rank's full (tree, key, level)
+    arrays and searches them directly.  The message-based `ghost` must
+    produce identical ghost layers."""
     d = forests[0].d
     o = get_ops(d)
     bops = get_batch_ops(d)
-    P = comm.P
-    # partition markers: first (tree,key) per rank
-    markers = comm.allgather([f.global_first_desc_key() for f in forests])
-    marker_tree = np.array([m[0] for m in markers], np.int64)
-    marker_key = np.array([m[1] for m in markers], np.uint64)
-
-    # global leaf table for existence queries (simulator-level)
-    all_tree = np.concatenate([f.tree for f in forests])
-    all_keys = np.concatenate([f.keys for f in forests])
-    all_level = np.concatenate([f.level for f in forests])
-    all_owner = np.concatenate([np.full(f.num_local, p) for p, f in enumerate(forests)])
+    nloc = len(forests)
+    with comm.phase("ghost_oracle"):
+        tables = comm.allgather([(f.tree, f.keys, f.level) for f in forests])
+    all_tree = np.concatenate([t[0] for t in tables])
+    all_keys = np.concatenate([t[1] for t in tables])
+    all_level = np.concatenate([t[2] for t in tables])
+    all_owner = np.concatenate(
+        [np.full(len(t[0]), p) for p, t in enumerate(tables)])
     order = np.lexsort((all_keys, all_tree))
     g_tree, g_keys, g_level, g_owner = (
         all_tree[order], all_keys[order], all_level[order], all_owner[order],
     )
 
     out = []
-    for p, f in enumerate(forests):
+    for i in range(nloc):
+        f = forests[i]
+        p_me = comm.local_ranks[i]
         if f.num_local == 0:
-            out.append({"anchor": np.zeros((0, d), np.int32), "level": np.zeros(0, np.int32),
-                        "stype": np.zeros(0, np.int32), "tree": np.zeros(0, np.int32),
-                        "owner": np.zeros(0, np.int32)})
+            out.append(_empty_ghost(d))
             continue
         s = f.simplices()
         cand = []
         for face in range(d + 1):
-            tgt, nkey, valid, nb, dual, _ = _face_lookup(f, s, face)
+            tgt, nkey, valid, nb, dual, _ = _face_lookup(f, f.tree, s, face)
             nbc = None  # (n, d+1, d), computed only when candidates exist
             for t in np.unique(tgt[valid]):
                 sel = np.nonzero(valid & (tgt == t))[0]
                 gsel = slice(*np.searchsorted(g_tree, [t, t + 1]))
                 keys_t, level_t, owner_t = g_keys[gsel], g_level[gsel], g_owner[gsel]
-                span = np.uint64(1) << (np.uint64(d) * (np.uint64(o.L) - f.level[sel].astype(np.uint64)))
+                span = _elem_spans(d, o.L, f.level[sel])
                 lo = np.searchsorted(keys_t, nkey[sel], side="left")
                 hi = np.searchsorted(keys_t, nkey[sel] + span, side="left")
                 # same-or-finer leaves inside the neighbor region that TOUCH
@@ -602,10 +1076,10 @@ def ghost(forests: list[Forest], comm: SimComm) -> list[dict]:
                 # Collect candidates first, then decode their coordinates in
                 # one batch — only boundary-interval leaves pay for geometry.
                 pend = []
-                for i, (a, b) in enumerate(zip(lo, hi)):
+                for i2, (a, b) in enumerate(zip(lo, hi)):
                     for j in range(a, b):
-                        if owner_t[j] != p:
-                            pend.append((i, j))
+                        if owner_t[j] != p_me:
+                            pend.append((i2, j))
                 if pend:
                     if nbc is None:
                         nbc = np.asarray(o.coordinates(nb), np.int64)
@@ -616,38 +1090,27 @@ def ghost(forests: list[Forest], comm: SimComm) -> list[dict]:
                     )
                     ccoords = np.asarray(o.coordinates(cs), np.int64)
                     planes = {}
-                    for i, j in pend:
-                        if i not in planes:
-                            planes[i] = face_plane(
-                                np.delete(nbc[sel[i]], int(dual[sel[i]]), axis=0)
+                    for i2, j in pend:
+                        if i2 not in planes:
+                            planes[i2] = face_plane(
+                                np.delete(nbc[sel[i2]], int(dual[sel[i2]]), axis=0)
                             )
-                        nrm, rhs = planes[i]
+                        nrm, rhs = planes[i2]
                         if (ccoords[jmap[j]] @ nrm == rhs).sum() == d:
                             cand.append((t, keys_t[j], level_t[j], owner_t[j]))
                 # coarser leaf containing the neighbor: predecessor check
                 pred = np.maximum(lo - 1, 0)
-                for i, pj in enumerate(pred):
+                for i2, pj in enumerate(pred):
                     if len(keys_t) == 0:
                         continue
                     span_pred = np.uint64(1) << (
                         np.uint64(d) * (np.uint64(o.L) - np.uint64(level_t[pj]))
                     )
-                    if (keys_t[pj] <= nkey[sel][i] < keys_t[pj] + span_pred
-                            and owner_t[pj] != p and lo[i] == hi[i]):
+                    if (keys_t[pj] <= nkey[sel][i2] < keys_t[pj] + span_pred
+                            and owner_t[pj] != p_me and lo[i2] == hi[i2]):
                         cand.append((t, keys_t[pj], level_t[pj], owner_t[pj]))
-        if not cand:
-            out.append({"anchor": np.zeros((0, d), np.int32), "level": np.zeros(0, np.int32),
-                        "stype": np.zeros(0, np.int32), "tree": np.zeros(0, np.int32),
-                        "owner": np.zeros(0, np.int32)})
-            continue
-        uniq = sorted(set(cand))
-        trees = np.array([c[0] for c in uniq], np.int32)
-        keys = np.array([c[1] for c in uniq], np.uint64)
-        levels = np.array([c[2] for c in uniq], np.int32)
-        owners = np.array([c[3] for c in uniq], np.int32)
-        gs = bops.decode(u64m.from_int(keys), jnp.asarray(levels))
-        out.append({"anchor": np.asarray(gs.anchor), "level": levels, "stype": np.asarray(gs.stype),
-                    "tree": trees, "owner": owners})
+        out.append(_ghost_from_candidates(
+            d, bops, {(int(t), int(k), int(l), int(w)) for t, k, l, w in cand}))
     return out
 
 
@@ -676,7 +1139,7 @@ def iterate(f: Forest, elem_fn=None, face_fn=None):
         own_coords = None  # lazy: only adapted meshes have hanging faces
         pairs = []
         for face in range(d + 1):
-            tgt, nkey, valid, nb, dual, _ = _face_lookup(f, s, face)
+            tgt, nkey, valid, nb, dual, _ = _face_lookup(f, f.tree, s, face)
             nlvl = np.asarray(nb.level)
             nbc = None
             for i in np.nonzero(valid)[0]:
@@ -770,5 +1233,11 @@ def validate(forests: list[Forest], ghosts: list[dict] | None = None) -> bool:
     return True
 
 
-def count_global(forests: list[Forest]) -> int:
-    return int(sum(f.num_local for f in forests))
+def count_global(forests: list[Forest], comm: Comm | None = None) -> int:
+    """Total element count.  Without `comm` this sums the given (local)
+    forests — the full global count under `SimComm` hosting, where every
+    rank is local.  With `comm`, the local sums are allgathered, so the call
+    is correct under distributed hosting too."""
+    if comm is None:
+        return int(sum(f.num_local for f in forests))
+    return int(sum(comm.allgather([int(f.num_local) for f in forests])))

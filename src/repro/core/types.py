@@ -85,3 +85,47 @@ def nbytes_at_rest(s: Simplex) -> int:
     d = s.anchor.shape[-1]
     n = int(np.prod(s.level.shape)) if s.level.shape else 1
     return n * (4 * d + 2)
+
+
+# ----------------------------------------------------------- wire encoding
+# The on-wire form of an element reference is the paper's Remark 20
+# low-memory encoding: the level-padded key plus the level fully determine
+# the element (anchor and type are recovered by Algorithm 4.8 / `decode`),
+# so a (tree, key, level) triple is 13 bytes — what Balance/Ghost queries
+# and boundary-layer notifications ship between ranks.  An optional extra
+# byte rides along (Ghost uses it for the dual face index).
+WIRE_TRIPLE_BYTES = 13  # uint64 key + int32 tree + uint8 level
+WIRE_QUAD_BYTES = 14    # ... + uint8 extra
+
+
+def _wire_dtype(with_extra: bool) -> np.dtype:
+    fields = [("key", "<u8"), ("tree", "<i4"), ("level", "u1")]
+    if with_extra:
+        fields.append(("extra", "u1"))
+    return np.dtype(fields)
+
+
+def pack_wire(tree, key, level, extra=None) -> np.ndarray:
+    """Pack (tree, key, level[, extra]) columns into a flat uint8 wire buffer
+    (13 or 14 bytes per entry, little-endian)."""
+    tree = np.asarray(tree, np.int32)
+    key = np.asarray(key, np.uint64)
+    level = np.asarray(level, np.uint8)
+    rec = np.empty(len(key), _wire_dtype(extra is not None))
+    rec["key"], rec["tree"], rec["level"] = key, tree, level
+    if extra is not None:
+        rec["extra"] = np.asarray(extra, np.uint8)
+    return rec.view(np.uint8).reshape(-1)
+
+
+def unpack_wire(buf: np.ndarray, with_extra: bool = False):
+    """Inverse of `pack_wire`: returns (tree, key, level[, extra]) columns."""
+    dt = _wire_dtype(with_extra)
+    buf = np.asarray(buf, np.uint8).reshape(-1)
+    assert buf.size % dt.itemsize == 0, "wire buffer is not a whole number of entries"
+    rec = buf.view(dt)
+    out = (rec["tree"].astype(np.int32), rec["key"].astype(np.uint64),
+           rec["level"].astype(np.int32))
+    if with_extra:
+        out = out + (rec["extra"].astype(np.int32),)
+    return out

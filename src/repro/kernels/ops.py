@@ -119,6 +119,23 @@ def tree_transform(d: int, s: Simplex, M, c, tmap, block: int = sfc.DEFAULT_BLOC
     return Simplex(anchor, s.level, outs[d][:n])
 
 
+@functools.partial(jax.jit, static_argnums=(3,))
+def owner_rank(key_u64: u64m.U64, tree, markers, block: int = sfc.DEFAULT_BLOCK):
+    """Owner rank per (tree, key) against the padded partition-marker table
+    `markers = (marker_tree, marker_key_u64)` via the Pallas searchsorted
+    kernel.  Marker arrays must already carry the power-of-two sentinel
+    padding (tree = int32 max) — see `repro.core.batch`."""
+    mt, mkey = markers
+    n = tree.shape[0]
+    np_ = _pad(n, block)
+    t, hi, lo = _padded(
+        [jnp.asarray(tree, jnp.int32), key_u64.hi, key_u64.lo], np_)
+    out = sfc.owner_rank_kernel(
+        t, hi, lo, jnp.asarray(mt, jnp.int32), mkey.hi, mkey.lo,
+        block=block, interpret=_interpret())
+    return out[:n]
+
+
 @functools.partial(jax.jit, static_argnums=(0, 2))
 def is_inside_root(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK):
     n = s.level.shape[0]

@@ -72,6 +72,16 @@ def tree_transform_ref(d, M, c, tmap, *arrays):
     return (*outs, s2.stype)
 
 
+def owner_rank_ref(t, hi, lo, mt, mhi, mlo):
+    """Vectorized searchsorted against the partition-marker table: index of
+    the last marker lex-<= (tree, key), clamped to 0 — delegates to the one
+    shared compare chain in `repro.core.batch` (the kernel unrolls the same
+    chain over the marker entries)."""
+    from repro.core.batch import owner_rank_lex
+
+    return owner_rank_lex(t, hi, lo, mt, mhi, mlo)
+
+
 def successor_ref(d, *arrays):
     o = get_ops(d)
     s = _simplex(d, *arrays)

@@ -299,6 +299,25 @@ def _tree_transform_body(d: int, M, c, tmap, refs):
     ob_ref[...] = _lut(tmap, b)
 
 
+def _owner_rank_body(num_markers: int, refs):
+    """Owner-rank resolution against the partition-marker table: the rank of
+    key (t, k) is the index of the last marker lex-<= (t, k), clamped to 0 —
+    a vectorized searchsorted.  The marker table (one entry per rank, padded
+    to a power of two with +inf sentinels) is tiny and identical for every
+    lane, so the P-entry scan is unrolled into straight-line compare/add
+    vector code; the uint64 keys are carried as (hi, lo) uint32 pairs."""
+    t_ref, hi_ref, lo_ref, mt_ref, mhi_ref, mlo_ref, o_ref = refs
+    t, hi, lo = t_ref[...], hi_ref[...], lo_ref[...]
+    mt, mhi, mlo = mt_ref[...], mhi_ref[...], mlo_ref[...]
+    count = jnp.zeros(t.shape, jnp.int32)
+    for k in range(num_markers):
+        le = (mt[k] < t) | (
+            (mt[k] == t) & ((mhi[k] < hi) | ((mhi[k] == hi) & (mlo[k] <= lo)))
+        )
+        count = count + le.astype(jnp.int32)
+    o_ref[...] = jnp.maximum(count - 1, 0)
+
+
 def _inside_body(d: int, refs):
     """Constant-time inside-root test (Proposition 23 with T = root, type 0):
     the axis permutation and boundary type sets collapse to per-type
@@ -456,6 +475,25 @@ def tree_transform_kernel(d: int, M, c, tmap, *arrays,
         out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32)] * (d + 1),
         interpret=interpret,
     )(*arrays)
+
+
+def owner_rank_kernel(t, hi, lo, mt, mhi, mlo,
+                      block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """t/hi/lo: element tree + key words, int32/uint32 (N,) with N % block == 0.
+    mt/mhi/mlo: partition-marker tree + key words (P,), sorted, padded with
+    tree = int32 max sentinels.  Returns the int32 owner rank per element."""
+    n = t.shape[0]
+    num_markers = mt.shape[0]
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    mspec = pl.BlockSpec((num_markers,), lambda i: (0,))
+    return pl.pallas_call(
+        lambda *refs: _owner_rank_body(num_markers, refs),
+        grid=(n // block,),
+        in_specs=[spec] * 3 + [mspec] * 3,
+        out_specs=[spec],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32)],
+        interpret=interpret,
+    )(t, hi, lo, mt, mhi, mlo)[0]
 
 
 def successor_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True):

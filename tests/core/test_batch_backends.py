@@ -120,6 +120,28 @@ def test_tree_transform_parity(d, backend):
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
+def test_owner_rank_parity(d, backend):
+    """The marker-table searchsorted that routes Balance/Ghost queries is
+    bit-identical across backends, including markers with duplicate entries
+    (empty ranks) and keys outside every marker (clamped to rank 0)."""
+    o = get_ops(d)
+    rng = np.random.default_rng(40 + d)
+    P = 7
+    mt = np.sort(rng.integers(0, 4, P)).astype(np.int32)
+    mk = rng.integers(0, 1 << (d * o.L), P).astype(np.uint64)
+    order = np.lexsort((mk, mt))
+    mt, mk = mt[order], mk[order]
+    mt[3], mk[3] = mt[4], mk[4]  # duplicate marker: an empty rank
+    t = rng.integers(0, 4, N).astype(np.int32)
+    k = rng.integers(0, 1 << (d * o.L), N).astype(np.uint64)
+    t[0], k[0] = 0, 0  # before every marker: clamps to 0
+    ref = batch.get_batch_ops(d, "reference")
+    got = batch.get_batch_ops(d, backend)
+    np.testing.assert_array_equal(
+        got.owner_rank(t, k, mt, mk), ref.owner_rank(t, k, mt, mk))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
 def test_empty_batch_all_ops(d, backend):
     o = get_ops(d)
     s = o.from_linear_id(u64m.from_int(np.zeros(0, np.uint64)), jnp.zeros(0, jnp.int32))
@@ -134,6 +156,10 @@ def test_empty_batch_all_ops(d, backend):
     assert b.tree_transform(
         s, np.eye(d, dtype=np.int64), np.zeros(d, np.int64), np.arange(o.nt)
     ).level.shape == (0,)
+    assert b.owner_rank(
+        np.zeros(0, np.int32), np.zeros(0, np.uint64),
+        np.zeros(1, np.int32), np.zeros(1, np.uint64),
+    ).shape == (0,)
 
 
 def test_backend_knob_env_and_context(monkeypatch):

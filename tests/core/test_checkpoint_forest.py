@@ -1,0 +1,93 @@
+"""Forest checkpointing: packed blobs + markers, elastic rank-count restore."""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_forest, save_forest
+from repro.checkpoint.store import latest_step
+from repro.core import cmesh as C
+from repro.core import forest as F
+
+
+def _adapted_forest(comm, d=3, trees=2, level=2, cmesh=None):
+    fs = F.new_uniform(d, trees, level, comm, cmesh=cmesh)
+
+    def cb(tree, elems):
+        a = np.asarray(elems.anchor)
+        return (a.sum(1) == 0).astype(np.int32)
+
+    return [F.adapt(f, cb) for f in fs]
+
+
+def test_save_restore_same_rank_count_is_exact(tmp_path):
+    comm = F.SimComm(4)
+    fs = _adapted_forest(comm)
+    save_forest(tmp_path, fs, comm, step=7)
+    assert latest_step(tmp_path) == 7
+    out = load_forest(tmp_path, F.SimComm(4))
+    assert len(out) == 4
+    for a, b in zip(fs, out):
+        np.testing.assert_array_equal(a.anchor, b.anchor)
+        np.testing.assert_array_equal(a.level, b.level)
+        np.testing.assert_array_equal(a.stype, b.stype)
+        np.testing.assert_array_equal(a.tree, b.tree)
+        np.testing.assert_array_equal(a.keys, b.keys)
+        assert (a.rank, a.num_ranks) == (b.rank, b.num_ranks)
+    assert F.validate(out)
+
+
+@pytest.mark.parametrize("p_save,p_load", [(4, 2), (2, 4)])
+def test_elastic_restore_across_rank_counts(tmp_path, p_save, p_load):
+    """ROADMAP item: restore onto a different rank count — same global leaf
+    sequence, valid partition, and the restored forest keeps working."""
+    comm = F.SimComm(p_save)
+    fs = _adapted_forest(comm)
+    save_forest(tmp_path, fs, comm, step=0)
+    comm2 = F.SimComm(p_load)
+    out = load_forest(tmp_path, comm2)
+    assert len(out) == p_load
+    assert F.count_global(out) == F.count_global(fs)
+    assert F.validate(out)
+    # the global (tree, key) sequence is preserved exactly
+    np.testing.assert_array_equal(
+        np.concatenate([f.keys for f in out]),
+        np.concatenate([f.keys for f in fs]))
+    np.testing.assert_array_equal(
+        np.concatenate([f.tree for f in out]),
+        np.concatenate([f.tree for f in fs]))
+    # and the restored forest is a working forest: balance + ghost run clean
+    out = F.balance(out, comm2)
+    gh = F.ghost(out, comm2)
+    assert F.validate(out, gh)
+
+
+def test_restore_with_empty_ranks_reproduces_markers(tmp_path):
+    """A partition with empty ranks round-trips exactly at equal P."""
+    comm = F.SimComm(4)
+    fs = F.new_uniform(2, 1, 2, comm)
+    ws = [np.zeros(f.num_local) for f in fs]
+    ws[0][:] = 0.0
+    ws[0][0] = 1.0
+    fs = F.partition(fs, comm, weights=ws)  # some ranks end up empty
+    assert any(f.num_local == 0 for f in fs)
+    save_forest(tmp_path, fs, comm, step=1)
+    out = load_forest(tmp_path, F.SimComm(4))
+    for a, b in zip(fs, out):
+        assert a.num_local == b.num_local
+        np.testing.assert_array_equal(a.keys, b.keys)
+
+
+def test_restore_carries_cmesh(tmp_path):
+    """The coarse mesh is a derived structure: the loader re-attaches it and
+    cross-tree ghost works on the restored forest."""
+    cm = C.cmesh_unit_cube(2)
+    comm = F.SimComm(2)
+    fs = _adapted_forest(comm, d=2, trees=cm.num_trees, cmesh=cm)
+    fs = F.balance(fs, comm)
+    save_forest(tmp_path, fs, comm, step=0)
+    out = load_forest(tmp_path, F.SimComm(2), cmesh=cm)
+    gh_a = F.ghost(fs, F.SimComm(2))
+    gh_b = F.ghost(out, F.SimComm(2))
+    for a, b in zip(gh_a, gh_b):
+        for k in ("anchor", "level", "stype", "tree", "owner"):
+            np.testing.assert_array_equal(a[k], b[k])

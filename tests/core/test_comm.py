@@ -1,0 +1,149 @@
+"""Comm-layer unit tests: surface conformance, byte metering, wire formats,
+marker routing (owner_rank + partition_markers)."""
+
+import numpy as np
+import pytest
+
+from repro.core import batch
+from repro.core import forest as F
+from repro.core.comm import (
+    LocalComm, SimComm, decode_payload, encode_payload, payload_nbytes,
+)
+from repro.core.types import pack_wire, unpack_wire
+
+
+# ------------------------------------------------------------------ surface
+def test_simcomm_collectives_roundtrip():
+    comm = SimComm(3)
+    assert comm.size == 3 and list(comm.local_ranks) == [0, 1, 2]
+    assert comm.allgather([10, 11, 12]) == [10, 11, 12]
+    send = [[f"{p}->{q}" for q in range(3)] for p in range(3)]
+    recv = comm.alltoallv(send)
+    for q in range(3):
+        assert recv[q] == [f"{p}->{q}" for p in range(3)]
+
+
+def test_localcomm_is_single_rank_identity():
+    comm = LocalComm()
+    assert comm.size == 1 and list(comm.local_ranks) == [0]
+    x = np.arange(5)
+    out = comm.allgather([x])
+    assert len(out) == 1 and (out[0] == x).all()
+    assert comm.alltoallv([[x]])[0][0] is x
+    # nothing crosses a rank boundary in a single-rank world
+    assert comm.bytes_for() == 0
+
+
+def test_byte_counters_and_phases():
+    comm = SimComm(4)
+    x = np.zeros(10, np.uint8)  # 10 bytes
+    with comm.phase("alpha"):
+        comm.allgather([x, x, x, x])
+    # each rank ships its payload to the 3 others
+    assert comm.counters["alpha"]["allgather_bytes"] == 10 * 3 * 4
+    with comm.phase("beta"):
+        send = [[np.zeros(q, np.uint8) for q in range(4)] for _ in range(4)]
+        comm.alltoallv(send)
+    # rank p sends q bytes to q for q != p: sum over p of (0+1+2+3 - p)
+    want = sum(sum(q for q in range(4) if q != p) for p in range(4))
+    assert comm.counters["beta"]["alltoallv_bytes"] == want
+    assert comm.bytes_for("alpha") == 120
+    assert comm.bytes_for() == 120 + want
+    comm.reset_counters()
+    assert comm.bytes_for() == 0
+
+
+def test_payload_nbytes_nested():
+    obj = {"a": np.zeros((2, 3), np.int32), "b": [np.zeros(5, np.uint8), 7]}
+    # 1-byte keys + 24-byte array + 5-byte array + 8-byte scalar
+    assert payload_nbytes(obj) == 1 + 24 + 1 + 5 + 8
+
+
+# --------------------------------------------------------------- wire codec
+def test_encode_decode_payload_roundtrip():
+    obj = {
+        "arrays": (np.arange(7, dtype=np.uint64) * 2**40,
+                   np.zeros((0, 3), np.int32)),
+        "scalars": [None, True, False, -5, 2**70, 1.5, "text", b"\x00\xff"],
+        3: {"nested": np.float32(2.0).item()},
+    }
+    out = decode_payload(encode_payload(obj))
+    assert out["scalars"] == obj["scalars"]
+    assert out[3] == {"nested": 2.0}
+    a0, a1 = out["arrays"]
+    np.testing.assert_array_equal(a0, obj["arrays"][0])
+    assert a1.shape == (0, 3) and a1.dtype == np.int32
+
+
+def test_pack_wire_roundtrip_and_size():
+    t = np.array([0, 5, 3], np.int32)
+    k = np.array([0, 2**62, 12345], np.uint64)
+    l = np.array([0, 21, 7], np.int32)
+    buf = pack_wire(t, k, l)
+    assert buf.dtype == np.uint8 and buf.nbytes == 3 * 13  # Remark 20 triple
+    tt, kk, ll = unpack_wire(buf)
+    np.testing.assert_array_equal(tt, t)
+    np.testing.assert_array_equal(kk, k)
+    np.testing.assert_array_equal(ll, l)
+    quad = pack_wire(t, k, l, extra=[1, 0, 3])
+    assert quad.nbytes == 3 * 14
+    _, _, _, ee = unpack_wire(quad, with_extra=True)
+    np.testing.assert_array_equal(ee, [1, 0, 3])
+
+
+# ------------------------------------------------------------ marker routing
+@pytest.mark.parametrize("backend", ["reference", "jnp",
+                                     pytest.param("pallas", marks=pytest.mark.slow)])
+def test_owner_rank_matches_bruteforce(backend):
+    rng = np.random.default_rng(7)
+    P = 6
+    mt = np.sort(rng.integers(0, 3, P)).astype(np.int32)
+    mk = rng.integers(0, 2**60, P).astype(np.uint64)
+    order = np.lexsort((mk, mt))
+    mt, mk = mt[order], mk[order]
+    t = rng.integers(0, 3, 500).astype(np.int32)
+    k = rng.integers(0, 2**60, 500).astype(np.uint64)
+    want = np.array(
+        [max(sum(1 for j in range(P) if (mt[j], mk[j]) <= (ti, ki)) - 1, 0)
+         for ti, ki in zip(t.tolist(), k.tolist())], np.int32)
+    with batch.use_backend(backend):
+        got = batch.get_batch_ops(3).owner_rank(t, k, mt, mk)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_partition_markers_fill_empty_ranks():
+    """Empty ranks inherit the next non-empty marker so the table stays
+    lex-sorted and routes to the actual owners."""
+    comm = SimComm(4)
+    fs = F.new_uniform(2, 1, 1, comm)  # 4 elements over 4 ranks
+    # concentrate everything on ranks 1..2 by reslicing manually
+    A = np.concatenate([f.anchor for f in fs])
+    L = np.concatenate([f.level for f in fs])
+    B = np.concatenate([f.stype for f in fs])
+    T = np.concatenate([f.tree for f in fs])
+    fs2 = [
+        fs[0].replace_elements(A[:0], L[:0], B[:0], T[:0]),
+        fs[1].replace_elements(A[:3], L[:3], B[:3], T[:3]),
+        fs[2].replace_elements(A[3:], L[3:], B[3:], T[3:]),
+        fs[3].replace_elements(A[:0], L[:0], B[:0], T[:0]),
+    ]
+    mt, mk = F.partition_markers(fs2, comm)
+    # sorted lexicographically
+    lex = list(zip(mt.tolist(), mk.tolist()))
+    assert lex == sorted(lex)
+    # rank 0 (empty) inherits rank 1's marker; trailing empty gets sentinel
+    assert (mt[0], mk[0]) == (mt[1], mk[1])
+    assert mt[3] == fs2[0].num_trees
+    # routing: every element resolves to the rank that stores it
+    bops = batch.get_batch_ops(2)
+    for p, f in enumerate(fs2):
+        if f.num_local == 0:
+            continue
+        own = bops.owner_rank(f.tree, f.keys, mt, mk)
+        assert (own == p).all()
+
+
+def test_count_global_with_comm():
+    comm = SimComm(3)
+    fs = F.new_uniform(2, 2, 2, comm)
+    assert F.count_global(fs) == F.count_global(fs, comm)

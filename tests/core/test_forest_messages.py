@@ -1,0 +1,176 @@
+"""Message-based Balance/Ghost vs the retained global-table oracles.
+
+The acceptance gate of the Comm refactor: on every multitree fixture — the
+2-tree (d=2) and 6-tree (d=3) Kuhn cubes, the periodic brick, and the
+reflected rotated pair — the marker-routed, boundary-only `balance`/`ghost`
+must match `balance_oracle`/`ghost_oracle` element for element, across all
+three batch backends, while moving strictly fewer bytes than the
+allgathered-leaf-table baseline.  Plus the non-convergence diagnostics and
+the partition edge cases that the marker routing depends on.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import batch
+from repro.core import cmesh as C
+from repro.core import forest as F
+
+BACKENDS = ["reference", "jnp", pytest.param("pallas", marks=pytest.mark.slow)]
+
+
+def _corner_cb(deep, tree0_only=True):
+    def cb(tree, elems):
+        a = np.asarray(elems.anchor)
+        l = np.asarray(elems.level)
+        m = (a.sum(1) == 0) & (l < deep)
+        if tree0_only:
+            m &= np.asarray(tree) == 0
+        return m.astype(np.int32)
+    return cb
+
+
+FIXTURES = {
+    # name: (d, cmesh factory, base level, deep level, ranks)
+    # kuhn2_d2 deliberately needs a MULTI-round ripple across the glued
+    # face, exercising the boundary-layer notifications round after round
+    "kuhn2_d2": (2, lambda: C.cmesh_unit_cube(2), 1, 7, 2),
+    "kuhn6_d3": (3, lambda: C.cmesh_unit_cube(3), 1, 3, 3),
+    "periodic_d2": (2, lambda: C.cmesh_unit_cube(2, periodic=(True, True)), 2, 4, 2),
+    "rotated_pair": (2, C.cmesh_rotated_pair, 2, 4, 2),
+    "single_tree_d3": (3, lambda: None, 1, 3, 4),
+}
+
+
+def _run_pair(name, backend):
+    d, mk_cmesh, base, deep, P = FIXTURES[name]
+    cm = mk_cmesh()
+    num_trees = cm.num_trees if cm is not None else 2
+    with batch.use_backend(backend):
+        comm_m, comm_o = F.SimComm(P), F.SimComm(P)
+        fs = F.new_uniform(d, num_trees, base, comm_m, cmesh=cm)
+        fs = [F.adapt(f, _corner_cb(deep), recursive=True) for f in fs]
+        out_m = F.balance([f for f in fs], comm_m)
+        out_o = F.balance_oracle([f for f in fs], comm_o)
+        gh_m = F.ghost(out_m, comm_m)
+        gh_o = F.ghost_oracle(out_o, comm_o)
+    return comm_m, comm_o, out_m, out_o, gh_m, gh_o
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_balance_and_ghost_match_oracle(name, backend):
+    """Element-for-element parity of the message path with the global-table
+    oracle, per fixture and backend."""
+    comm_m, comm_o, out_m, out_o, gh_m, gh_o = _run_pair(name, backend)
+    for a, b in zip(out_m, out_o):
+        np.testing.assert_array_equal(a.keys, b.keys)
+        np.testing.assert_array_equal(a.level, b.level)
+        np.testing.assert_array_equal(a.anchor, b.anchor)
+        np.testing.assert_array_equal(a.stype, b.stype)
+        np.testing.assert_array_equal(a.tree, b.tree)
+    for a, b in zip(gh_m, gh_o):
+        for k in ("anchor", "level", "stype", "tree", "owner"):
+            np.testing.assert_array_equal(a[k], b[k])
+    assert F.validate(out_m, gh_m)
+
+
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_message_path_moves_fewer_bytes(name):
+    """The point of the refactor: boundary-only exchanges beat the
+    allgathered global leaf table on every fixture."""
+    comm_m, comm_o, *_ = _run_pair(name, "reference")
+    msg = comm_m.bytes_for("balance") + comm_m.bytes_for("ghost")
+    orc = comm_o.bytes_for("balance_oracle") + comm_o.bytes_for("ghost_oracle")
+    assert 0 < msg < orc, (msg, orc)
+
+
+def test_balance_never_materializes_global_table():
+    """Per-call wire volume stays far below one global table exchange: on a
+    refined mesh the balance traffic must be o(N * entry bytes * (P-1))."""
+    d, P, level = 3, 4, 3
+    comm = F.SimComm(P)
+    fs = F.new_uniform(d, 2, level, comm)
+    fs = [F.adapt(f, _corner_cb(level + 2, tree0_only=False), recursive=True)
+          for f in fs]
+    out = F.balance(fs, comm)
+    n = F.count_global(out)
+    one_table_round = n * 13 * (P - 1)  # what ONE oracle allgather round ships
+    assert comm.bytes_for("balance") < one_table_round
+
+
+def test_balance_nonconvergence_diagnostics():
+    """A refinement pattern whose ripple needs several rounds (deep corner
+    in tree 0 of the glued 2-tree square, rippling across the tree face)
+    raises with round count and per-rank still-dirty counts when starved."""
+    cm = C.cmesh_unit_cube(2)
+    comm = F.SimComm(2)
+    fs = F.new_uniform(2, 2, 1, comm, cmesh=cm)
+    fs = [F.adapt(f, _corner_cb(7), recursive=True) for f in fs]
+    with pytest.raises(F.BalanceNonConvergence) as ei:
+        F.balance(fs, comm, max_rounds=1)
+    err = ei.value
+    assert err.rounds == 1
+    assert len(err.dirty_per_rank) == comm.size
+    assert sum(err.dirty_per_rank) > 0
+    assert "still-dirty" in str(err) and "1 rounds" in str(err)
+    # with the budget restored the same input converges to the oracle result
+    out = F.balance(fs, comm)
+    out_o = F.balance_oracle(fs, F.SimComm(2))
+    for a, b in zip(out, out_o):
+        np.testing.assert_array_equal(a.keys, b.keys)
+    assert F.validate(out)
+
+
+# -------------------------------------------------- partition edge cases
+def test_partition_zero_weight_elements():
+    comm = F.SimComm(3)
+    fs = F.new_uniform(2, 2, 2, comm)
+    before = F.count_global(fs)
+    rng = np.random.default_rng(0)
+    ws = [np.where(rng.random(f.num_local) < 0.5, 0.0, 1.0) for f in fs]
+    out = F.partition(fs, comm, weights=ws)
+    assert F.count_global(out) == before
+    assert F.validate(out)
+    mt, mk = F.partition_markers(out, comm)
+    lex = list(zip(mt.tolist(), mk.tolist()))
+    assert lex == sorted(lex)
+
+
+def test_partition_empty_ranks_after_repartition():
+    """All weight on one element: some ranks end up empty, markers stay
+    sorted, the count is conserved, and the forest stays valid."""
+    comm = F.SimComm(4)
+    fs = F.new_uniform(2, 1, 2, comm)
+    before = F.count_global(fs)
+    ws = [np.zeros(f.num_local) for f in fs]
+    ws[0][0] = 1.0  # single heavy element
+    out = F.partition(fs, comm, weights=ws)
+    assert F.count_global(out) == before
+    assert F.validate(out)
+    assert any(f.num_local == 0 for f in out), "expected empty ranks"
+    mt, mk = F.partition_markers(out, comm)
+    lex = list(zip(mt.tolist(), mk.tolist()))
+    assert lex == sorted(lex)
+    bops = out[0].bops
+    for p, f in enumerate(out):
+        if f.num_local:
+            assert (bops.owner_rank(f.tree, f.keys, mt, mk) == p).all()
+
+
+def test_partition_single_element_forest():
+    """One leaf, four ranks: three ranks empty, everything still routes."""
+    comm = F.SimComm(4)
+    fs = F.new_uniform(2, 1, 0, comm)  # a single level-0 leaf
+    assert F.count_global(fs) == 1
+    out = F.partition(fs, comm)
+    assert F.count_global(out) == 1
+    assert F.validate(out)
+    mt, mk = F.partition_markers(out, comm)
+    lex = list(zip(mt.tolist(), mk.tolist()))
+    assert lex == sorted(lex)
+    # balance/ghost on the degenerate forest are communication no-ops
+    bal = F.balance(out, comm)
+    assert F.count_global(bal) == 1
+    gh = F.ghost(bal, comm)
+    assert all(len(g["level"]) == 0 for g in gh)

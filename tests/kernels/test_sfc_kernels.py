@@ -108,6 +108,28 @@ def test_inside_root_kernel(d, n):
         np.testing.assert_array_equal(np.asarray(got), np.asarray(o.is_inside_root(nb)))
 
 
+@pytest.mark.parametrize("d", [2, 3])
+@pytest.mark.parametrize("n", SHAPES)
+def test_owner_rank_kernel(d, n):
+    from repro.core.batch import _pad_markers
+
+    o = get_ops(d)
+    rng = np.random.default_rng(n + 9)
+    P = 5
+    mt = np.sort(rng.integers(0, 3, P)).astype(np.int32)
+    mk = rng.integers(0, 1 << (d * o.L), P).astype(np.uint64)
+    order = np.lexsort((mk, mt))
+    mt_p, mk_p = _pad_markers(mt[order], mk[order])
+    mkey = u64m.from_int(mk_p)
+    t = jnp.asarray(rng.integers(0, 3, n), jnp.int32)
+    key = u64m.from_int(rng.integers(0, 1 << (d * o.L), n).astype(np.uint64))
+    got = kops.owner_rank(key, t, (jnp.asarray(mt_p), mkey))
+    want = kref.owner_rank_ref(
+        np.asarray(t), np.asarray(key.hi), np.asarray(key.lo),
+        mt_p, np.asarray(mkey.hi), np.asarray(mkey.lo))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("d", [2, 3])
 def test_kernel_block_sizes(d):
