@@ -20,6 +20,10 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
                          (reference / jnp / pallas) at several mesh sizes;
                          asserts bit-identical forests and writes
                          BENCH_forest.json (derived = speedup vs reference)
+  face_sweep             fused all-faces sweep vs the composed per-face ops
+                         (per-backend timings, dispatch counts, Balance/Ghost
+                         dispatch invariants; merges a "face_sweep" section
+                         into BENCH_forest.json; derived = fused speedup)
   multitree              cross-tree Balance/Ghost on the 2-tree (2D) and
                          6-tree (3D) cube domains per backend; asserts
                          bit-identity and that refinement ripples across
@@ -298,8 +302,102 @@ def forest_backends(tiny: bool = False):
     # tiny (CI smoke) runs must not clobber the full benchmark artifact
     name = "BENCH_forest_tiny.json" if tiny else "BENCH_forest.json"
     out_path = Path(__file__).resolve().parents[1] / name
+    if out_path.exists():  # keep sibling suites' sections (face_sweep)
+        prev = json.loads(out_path.read_text())
+        if "face_sweep" in prev:
+            report["face_sweep"] = prev["face_sweep"]
     out_path.write_text(json.dumps(report, indent=2))
     row("forest_backends_json", 0.0, str(out_path))
+
+
+def face_sweep(tiny: bool = False):
+    """Fused all-faces sweep vs the composed per-face ops it replaced.
+
+    Times one `face_sweep` dispatch against the 3 x (d+1) composed
+    face_neighbor/is_inside_root/morton_key dispatches per backend, asserts
+    bit-identity, measures BatchedOps dispatch counts for both paths and for
+    a full message-based Balance/Ghost (which must issue face_sweep only —
+    never per-face neighbor ops), and merges everything into
+    BENCH_forest.json under the "face_sweep" key."""
+    import jax
+    from repro.core import batch, u64
+    from repro.core import forest as F
+
+    d = 3
+    level = 2 if tiny else 4
+    f = F.new_uniform_rank(d, 2, level, 0, 1)  # 2 trees: 8192 elements at lvl 4
+    n = f.num_local
+    s = f.simplices()
+    report = {"d": d, "elements": n, "backends": {}}
+
+    def composed(bops):
+        outs = []
+        for face in range(d + 1):
+            nb, dual = bops.face_neighbor(s, face)
+            outs.append((nb, dual, bops.is_inside_root(nb), bops.morton_key(nb)))
+        return outs
+
+    backends = ["reference", "jnp"] + (["pallas"] if tiny else [])
+    for be in backends:
+        bops = batch.get_batch_ops(d, be)
+        us_comp = _time(lambda: jax.block_until_ready(composed(bops)), n=3)
+        us_fused = _time(lambda: jax.block_until_ready(bops.face_sweep(s)), n=3)
+        batch.reset_dispatch_counts()
+        comp = composed(bops)
+        n_comp = sum(batch.dispatch_counts().values())
+        batch.reset_dispatch_counts()
+        sw = bops.face_sweep(s)
+        n_fused = sum(batch.dispatch_counts().values())
+        # bit parity of the fused dispatch with the composed per-face ops
+        for face, (nb, dual, inside, key) in enumerate(comp):
+            assert np.array_equal(np.asarray(sw.neighbor.anchor[face]),
+                                  np.asarray(nb.anchor))
+            assert np.array_equal(np.asarray(sw.dual[face]), np.asarray(dual))
+            assert np.array_equal(np.asarray(sw.inside[face]), np.asarray(inside))
+            assert np.array_equal(u64.to_np(sw.key)[face], u64.to_np(key))
+        report["backends"][be] = {
+            "composed_us": us_comp, "fused_us": us_fused,
+            "composed_dispatches": n_comp, "fused_dispatches": n_fused,
+            "speedup": us_comp / us_fused,
+        }
+        row(f"face_sweep_{be}_fused", us_fused,
+            f"{us_comp / us_fused:.2f}x_vs_composed:dispatches={n_fused}vs{n_comp}")
+        assert n_fused == 1 and n_comp == 3 * (d + 1), (n_fused, n_comp)
+
+    # dispatch-count invariant of the rewritten hot loops: one sweep per
+    # eval layer, zero per-face neighbor dispatches, for a whole pipeline
+    comm = F.SimComm(2)
+    fs = F.new_uniform(d, 2, level, comm)
+
+    def corner_cb(tree, elems, cap=level + 2):
+        a = np.asarray(elems.anchor)
+        l = np.asarray(elems.level)
+        return ((a.sum(1) == 0) & (l < cap)).astype(np.int32)
+
+    with batch.use_backend("jnp"):
+        fs = [F.adapt(x, corner_cb, recursive=True) for x in fs]
+        batch.reset_dispatch_counts()
+        out = F.balance(fs, comm)
+        bal_counts = batch.dispatch_counts()
+        batch.reset_dispatch_counts()
+        F.ghost(out, comm)
+        gh_counts = batch.dispatch_counts()
+        batch.reset_dispatch_counts()
+    assert bal_counts.get("face_neighbor", 0) == 0, bal_counts
+    assert gh_counts.get("face_neighbor", 0) == 0, gh_counts
+    assert gh_counts["face_sweep"] == sum(1 for x in out if x.num_local)
+    report["balance_dispatches"] = bal_counts
+    report["ghost_dispatches"] = gh_counts
+    row("face_sweep_balance_dispatches", 0.0,
+        f"face_sweep={bal_counts.get('face_sweep', 0)}"
+        f":per_face_ops={bal_counts.get('face_neighbor', 0)}")
+
+    name = "BENCH_forest_tiny.json" if tiny else "BENCH_forest.json"
+    out_path = Path(__file__).resolve().parents[1] / name
+    data = json.loads(out_path.read_text()) if out_path.exists() else {}
+    data["face_sweep"] = report
+    out_path.write_text(json.dumps(data, indent=2))
+    row("face_sweep_json", 0.0, str(out_path))
 
 
 def multitree(tiny: bool = False):
@@ -377,6 +475,7 @@ SUITES = {
     "pallas_kernels": pallas_kernels,
     "moe_placement": lambda tiny: moe_placement(),
     "forest_backends": forest_backends,
+    "face_sweep": face_sweep,
     "multitree": multitree,
     "roofline_summary": lambda tiny: roofline_summary(),
 }

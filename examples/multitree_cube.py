@@ -58,7 +58,7 @@ def main():
 
         # face classification on rank 0 (the old is_root_boundary, split)
         s = fs[0].simplices()
-        kinds = np.stack([F.face_kind(fs[0], s, f) for f in range(d + 1)])
+        kinds = F.face_kinds(fs[0], s)  # all faces, one sweep
         print(f"   rank-0 faces: {int((kinds == F.FACE_INTERIOR).sum())} interior, "
               f"{int((kinds == F.FACE_INTER_TREE).sum())} inter-tree, "
               f"{int((kinds == F.FACE_DOMAIN_BOUNDARY).sum())} domain boundary")
@@ -68,8 +68,7 @@ def main():
     comm = F.SimComm(1)
     fs = F.new_uniform(2, cm.num_trees, 2, comm, cmesh=cm)
     s = fs[0].simplices()
-    nb = sum(int((F.face_kind(fs[0], s, f) == F.FACE_DOMAIN_BOUNDARY).sum())
-             for f in range(3))
+    nb = int((F.face_kinds(fs[0], s) == F.FACE_DOMAIN_BOUNDARY).sum())
     print(f"== periodic 2D cube: {nb} boundary faces (torus) ==")
 
 

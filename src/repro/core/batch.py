@@ -34,6 +34,8 @@ import contextlib
 import functools
 import os
 import warnings
+from collections import OrderedDict
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -46,10 +48,13 @@ from .types import Simplex
 __all__ = [
     "BACKENDS",
     "BatchedOps",
+    "FaceSweep",
     "get_backend",
     "set_backend",
     "use_backend",
     "get_batch_ops",
+    "dispatch_counts",
+    "reset_dispatch_counts",
 ]
 
 BACKENDS = ("reference", "jnp", "pallas")
@@ -94,6 +99,41 @@ def use_backend(name: str):
         _active = prev
 
 
+# ---------------------------------------------------------- dispatch counters
+# One increment per BatchedOps op invocation (any backend) — the observable
+# the fused face sweep optimizes: Balance/Ghost evaluation must issue ONE
+# `face_sweep` dispatch per eval layer instead of 3 x (d+1) per-face ops.
+# Benchmarks and tests read/reset these around a measured region.
+_dispatch_counts: dict[str, int] = {}
+
+
+def reset_dispatch_counts() -> None:
+    """Zero the per-op dispatch counters."""
+    _dispatch_counts.clear()
+
+
+def dispatch_counts() -> dict[str, int]:
+    """Snapshot of {op name: number of BatchedOps dispatches} since reset."""
+    return dict(_dispatch_counts)
+
+
+class FaceSweep(NamedTuple):
+    """Result of the fused all-faces sweep, leading axis = face (d+1 rows).
+
+    neighbor  same-level neighbor per face: anchor (d+1, n, d), level/stype
+              (d+1, n) — possibly outside the root (check `inside`)
+    dual      (d+1, n) int32 neighbor's face index back to us
+    inside    (d+1, n) bool inside-root mask
+    key       (d+1, n) U64 neighbor morton keys (garbage where ~inside on a
+              domain boundary — never read them there)
+    """
+
+    neighbor: Simplex
+    dual: jax.Array
+    inside: jax.Array
+    key: u64m.U64
+
+
 # ---------------------------------------------------------------- jnp backend
 def _bucket(n: int) -> int:
     """Next power-of-two batch size (>= 16): bounds jit recompiles to O(log n)."""
@@ -108,6 +148,21 @@ def _pad_simplex(s: Simplex, m: int) -> Simplex:
     return Simplex(_pad1(s.anchor, m), _pad1(s.level, m), _pad1(s.stype, m))
 
 
+def _face_sweep_fused(o: SimplexOps):
+    """One jitted program for the whole face sweep: vmap over the d+1 face
+    indices of (face_neighbor, is_inside_root, morton_key) — a single XLA
+    dispatch instead of 3 x (d+1)."""
+
+    def fn(s: Simplex) -> FaceSweep:
+        def one(f):
+            nb, dual = o.face_neighbor(s, f)
+            return FaceSweep(nb, dual, o.is_inside_root(nb), o.morton_key(nb))
+
+        return jax.vmap(one)(jnp.arange(o.d + 1, dtype=jnp.int32))
+
+    return fn
+
+
 @functools.lru_cache(maxsize=None)
 def _jnp_fns(d: int):
     o = get_ops(d)
@@ -118,6 +173,7 @@ def _jnp_fns(d: int):
         "parent_and_local_index": jax.jit(lambda s: (o.parent(s), o.local_index(s))),
         "children": jax.jit(o.children_tm),
         "face_neighbor": jax.jit(o.face_neighbor),
+        "face_sweep": jax.jit(_face_sweep_fused(o)),
         "successor": jax.jit(o.successor),
         "is_inside_root": jax.jit(o.is_inside_root),
         "local_index": jax.jit(o.local_index),
@@ -136,6 +192,31 @@ def _pad_markers(marker_tree: np.ndarray, marker_key: np.ndarray):
     mt[:P] = marker_tree
     mk[:P] = marker_key
     return mt, mk
+
+
+# Memoized pad + device transfer of the marker table, keyed on the identity
+# of the numpy arrays: every Balance round calls `owner_rank` many times with
+# the SAME marker-table objects, and re-padding/re-uploading P entries per
+# call was pure overhead.  Entries hold strong refs to the key arrays so ids
+# cannot be recycled while cached; a numpy array mutated in place would alias
+# its cache entry, but marker tables are write-once (`partition_markers`).
+_marker_pad_cache: OrderedDict = OrderedDict()
+_MARKER_CACHE_SIZE = 16
+
+
+def _padded_markers_cached(mt: np.ndarray, mk: np.ndarray):
+    """(device marker_tree, device marker_key U64), padded with sentinels."""
+    key = (id(mt), id(mk))
+    hit = _marker_pad_cache.get(key)
+    if hit is not None and hit[0] is mt and hit[1] is mk:
+        _marker_pad_cache.move_to_end(key)
+        return hit[2], hit[3]
+    mt_p, mk_p = _pad_markers(mt, mk)
+    val = (mt, mk, jnp.asarray(mt_p), u64m.from_int(mk_p))
+    _marker_pad_cache[key] = val
+    while len(_marker_pad_cache) > _MARKER_CACHE_SIZE:
+        _marker_pad_cache.popitem(last=False)
+    return val[2], val[3]
 
 
 def owner_rank_lex(t, hi, lo, mt, mhi, mlo):
@@ -165,6 +246,7 @@ def _pallas_ok(d: int) -> bool:
             jnp.zeros((1, d), jnp.int32), jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32)
         )
         kops.morton_key(d, s, 16)
+        kops.face_sweep(d, s, 16)
         return True
     except Exception as e:  # noqa: BLE001 - any lowering failure means fallback
         warnings.warn(f"pallas backend unavailable for d={d} ({e!r}); using jnp")
@@ -191,9 +273,11 @@ class BatchedOps:
         self.ops: SimplexOps = get_ops(d)
 
     # -- helpers -----------------------------------------------------------
-    def _which(self, n: int) -> str:
+    def _which(self, n: int, name: str | None = None) -> str:
         # Empty batches short-circuit to the eager path (a Pallas grid of 0
         # tiles is invalid, and there is nothing to fuse anyway).
+        if name is not None:
+            _dispatch_counts[name] = _dispatch_counts.get(name, 0) + 1
         return "reference" if n == 0 else self.backend
 
     def _jnp(self, name, s: Simplex, *extra):
@@ -216,7 +300,7 @@ class BatchedOps:
     # -- API ---------------------------------------------------------------
     def morton_key(self, s: Simplex) -> u64m.U64:
         """Level-padded consecutive index (the mixed-level SFC sort key)."""
-        which = self._which(s.level.shape[0])
+        which = self._which(s.level.shape[0], "morton_key")
         if which == "reference":
             return self.ops.morton_key(s)
         if which == "jnp":
@@ -234,7 +318,7 @@ class BatchedOps:
     def decode(self, key: u64m.U64, level) -> Simplex:
         """Algorithm 4.8 from a level-padded key (inverse of `morton_key`)."""
         level = jnp.asarray(level, jnp.int32)
-        which = self._which(key.hi.shape[0])
+        which = self._which(key.hi.shape[0], "decode")
         if which == "reference":
             return self.ops.decode_key(key, level)
         if which == "jnp":
@@ -253,7 +337,7 @@ class BatchedOps:
 
     def parent(self, s: Simplex) -> Simplex:
         """Algorithm 4.3."""
-        which = self._which(s.level.shape[0])
+        which = self._which(s.level.shape[0], "parent")
         if which == "reference":
             return self.ops.parent(s)
         if which == "jnp":
@@ -266,7 +350,7 @@ class BatchedOps:
     def parent_and_local_index(self, s: Simplex):
         """Fused Algorithm 4.3 + Table 6: (parent, TM child index) in one
         pass — the pair every family scan needs together."""
-        which = self._which(s.level.shape[0])
+        which = self._which(s.level.shape[0], "parent_and_local_index")
         if which == "reference":
             return self.ops.parent(s), self.ops.local_index(s)
         if which == "jnp":
@@ -278,7 +362,7 @@ class BatchedOps:
 
     def children(self, s: Simplex) -> Simplex:
         """All 2^d children in TM order: batch shape (n, 2^d)."""
-        which = self._which(s.level.shape[0])
+        which = self._which(s.level.shape[0], "children")
         if which == "reference":
             return self.ops.children_tm(s)
         if which == "jnp":
@@ -290,7 +374,7 @@ class BatchedOps:
 
     def face_neighbor(self, s: Simplex, face):
         """Algorithm 4.6: (same-level neighbor, dual face)."""
-        which = self._which(s.level.shape[0])
+        which = self._which(s.level.shape[0], "face_neighbor")
         if which == "reference":
             return self.ops.face_neighbor(s, jnp.int32(face))
         if which == "jnp":
@@ -303,9 +387,47 @@ class BatchedOps:
             face = _pad1(face, _bucket(s.level.shape[0]))
         return self._pallas(kops.face_neighbor, s, face)
 
+    def face_sweep(self, s: Simplex) -> FaceSweep:
+        """Fused all-faces sweep: (face_neighbor, is_inside_root, morton_key)
+        for every face 0..d in ONE backend dispatch — the hot query of the
+        Balance/Ghost eval loops (which previously issued 3 x (d+1) separate
+        dispatches per layer).  Results carry a leading face axis; slicing
+        row f yields exactly what composing the three per-face ops would."""
+        n = s.level.shape[0]
+        which = self._which(n, "face_sweep")
+        if which == "reference":
+            cols = [[] for _ in range(4)]
+            for f in range(self.d + 1):
+                nb, dual = self.ops.face_neighbor(s, jnp.int32(f))
+                cols[0].append(nb)
+                cols[1].append(dual)
+                cols[2].append(self.ops.is_inside_root(nb))
+                cols[3].append(self.ops.morton_key(nb))
+            nbs, duals, insides, keys = cols
+            return FaceSweep(
+                Simplex(
+                    jnp.stack([x.anchor for x in nbs]),
+                    jnp.stack([x.level for x in nbs]),
+                    jnp.stack([x.stype for x in nbs]),
+                ),
+                jnp.stack(duals),
+                jnp.stack(insides),
+                u64m.U64(jnp.stack([k.hi for k in keys]),
+                         jnp.stack([k.lo for k in keys])),
+            )
+        m = _bucket(n)
+        cut = functools.partial(jax.tree_util.tree_map, lambda a: a[:, :n])
+        if which == "jnp":
+            return cut(_jnp_fns(self.d)["face_sweep"](_pad_simplex(s, m)))
+        from repro.kernels import ops as kops
+
+        nb, dual, inside, key = kops.face_sweep(
+            self.d, _pad_simplex(s, m), min(1024, m))
+        return cut(FaceSweep(nb, dual, inside, key))
+
     def successor(self, s: Simplex) -> Simplex:
         """Batch Algorithm 4.10: next same-level element along the SFC."""
-        which = self._which(s.level.shape[0])
+        which = self._which(s.level.shape[0], "successor")
         if which == "reference":
             return self.ops.successor(s)
         if which == "jnp":
@@ -317,7 +439,7 @@ class BatchedOps:
 
     def is_inside_root(self, s: Simplex):
         """Section 4.4 inside-root test (Proposition 23 vs. the root simplex)."""
-        which = self._which(s.level.shape[0])
+        which = self._which(s.level.shape[0], "is_inside_root")
         if which == "reference":
             return self.ops.is_inside_root(s)
         if which == "jnp":
@@ -329,7 +451,7 @@ class BatchedOps:
 
     def local_index(self, s: Simplex):
         """TM child index within the parent (paper Table 6)."""
-        which = self._which(s.level.shape[0])
+        which = self._which(s.level.shape[0], "local_index")
         if which == "reference":
             return self.ops.local_index(s)
         if which == "jnp":
@@ -353,26 +475,24 @@ class BatchedOps:
         mt = np.asarray(marker_tree, np.int32)
         mk = np.asarray(marker_key, np.uint64)
         n = len(tree)
-        which = self._which(n)
+        which = self._which(n, "owner_rank")
         if which == "reference":
             le = (mt[None, :] < tree[:, None]) | (
                 (mt[None, :] == tree[:, None]) & (mk[None, :] <= key[:, None])
             )
             return np.maximum(le.sum(axis=1).astype(np.int32) - 1, 0)
-        mt_p, mk_p = _pad_markers(mt, mk)
-        mkey = u64m.from_int(mk_p)
+        mt_j, mkey = _padded_markers_cached(mt, mk)
         m = _bucket(n)
         t_p = _pad1(jnp.asarray(tree), m)
         k = u64m.from_int(key)
         hi, lo = _pad1(k.hi, m), _pad1(k.lo, m)
         if which == "jnp":
-            out = _owner_rank_jnp(
-                t_p, hi, lo, jnp.asarray(mt_p), mkey.hi, mkey.lo)
+            out = _owner_rank_jnp(t_p, hi, lo, mt_j, mkey.hi, mkey.lo)
             return np.asarray(out[:n], np.int32)
         from repro.kernels import ops as kops
 
         out = kops.owner_rank(
-            u64m.U64(hi, lo), t_p, (jnp.asarray(mt_p), mkey), min(1024, m))
+            u64m.U64(hi, lo), t_p, (mt_j, mkey), min(1024, m))
         return np.asarray(out[:n], np.int32)
 
     def tree_transform(self, s: Simplex, M, c, typemap) -> Simplex:
@@ -386,7 +506,7 @@ class BatchedOps:
         M = np.asarray(M, np.int64)
         c32 = wrap_i32(c)
         tm = np.asarray(typemap, np.int64)
-        which = self._which(s.level.shape[0])
+        which = self._which(s.level.shape[0], "tree_transform")
         if which == "reference":
             return self.ops.tree_transform(s, M, c32, tm)
         if which == "jnp":

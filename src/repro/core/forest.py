@@ -71,6 +71,9 @@ __all__ = [
     "validate",
     "count_global",
     "face_kind",
+    "face_kinds",
+    "face_sweep_layer",
+    "FaceSweepLayer",
     "FACE_INTERIOR",
     "FACE_INTER_TREE",
     "FACE_DOMAIN_BOUNDARY",
@@ -455,77 +458,147 @@ FACE_INTER_TREE = 1        # neighbor across a glued tree face (via Cmesh)
 FACE_DOMAIN_BOUNDARY = 2   # no neighbor: true domain boundary
 
 
-def _face_lookup(f: Forest, tree_ids: np.ndarray, s: Simplex, face: int):
-    """Where to look for the face-`face` neighbor of the elements in `s`
-    (any subset of local elements; `tree_ids` is their owning-tree column —
-    the boundary-only Balance rounds pass just the changed layer here).
+@dataclasses.dataclass
+class FaceSweepLayer:
+    """Host-side result of ONE fused `face_sweep` dispatch over an element
+    layer, with the cross-tree fixup already applied: for every face 0..d of
+    every element, where its neighbor region lives.  Arrays carry a leading
+    face axis of length d+1; `level` is shared (same-level neighbors).
 
-    Returns (tgt_tree, nkey, valid, nb, dual, kind):
-      tgt_tree  (n,) tree whose leaf table holds the neighbor region
-      nkey      (n,) uint64 neighbor morton key *in that tree's frame*
-                (garbage where ~valid — never read it there)
-      valid     (n,) False at the domain boundary
-      nb        neighbor Simplex, re-expressed in the target tree's frame
-                where the face crosses into another tree
-      dual      (n,) neighbor's face index back to us, renumbered through
-                the connection's face map for cross-tree faces
-      kind      (n,) FACE_INTERIOR / FACE_INTER_TREE / FACE_DOMAIN_BOUNDARY
+      tgt     (d+1, n) tree whose leaf table holds the neighbor region
+      nkey    (d+1, n) uint64 neighbor morton key *in that tree's frame*
+              (garbage where ~valid — never read it there)
+      valid   (d+1, n) False at the domain boundary
+      anchor  (d+1, n, d) / stype (d+1, n): the neighbor, re-expressed in the
+              target tree's frame where the face crosses into another tree
+      dual    (d+1, n) neighbor's face index back to us, renumbered through
+              the connection's face map for cross-tree faces
+      kind    (d+1, n) FACE_INTERIOR / FACE_INTER_TREE / FACE_DOMAIN_BOUNDARY
+
+    The Balance/Ghost/Iterate hot loops compute one sweep per eval layer and
+    slice per-face views from it (`face`), instead of re-dispatching
+    face_neighbor + is_inside_root + morton_key for every face."""
+
+    tgt: np.ndarray
+    nkey: np.ndarray
+    valid: np.ndarray
+    anchor: np.ndarray
+    level: np.ndarray
+    stype: np.ndarray
+    dual: np.ndarray
+    kind: np.ndarray
+
+    def face(self, f: int):
+        """The (tgt, nkey, valid, nb, dual, kind) view of one face — what the
+        per-face `_face_lookup` used to return."""
+        nb = Simplex(
+            jnp.asarray(self.anchor[f]), jnp.asarray(self.level),
+            jnp.asarray(self.stype[f]),
+        )
+        return (self.tgt[f], self.nkey[f], self.valid[f], nb,
+                self.dual[f], self.kind[f])
+
+
+def face_sweep_layer(f: Forest, tree_ids: np.ndarray, s: Simplex) -> FaceSweepLayer:
+    """Fused neighbor lookup for ALL faces of the elements in `s` (any subset
+    of local elements; `tree_ids` is their owning-tree column — the
+    boundary-only Balance rounds pass just the changed layer here).
+
+    One batched `face_sweep` dispatch computes every face's same-level
+    neighbor, inside-root mask, and morton key; the results are materialized
+    to the host once.  Faces that leave the root are then re-expressed in the
+    neighbor tree's frame via `f.cmesh`: the crossings are lexsort-grouped by
+    connection (source tree, root face) and each group gets one batched
+    `transform_across_face` + key recompute — no per-element Python loop.
 
     This is the single seam where the old is_root_boundary notion splits
     into "interior", "inter-tree face" (followed through `f.cmesh`), and
     "domain boundary" (no Cmesh connection)."""
     bops = f.bops
+    d = f.d
+    sw = bops.face_sweep(s)
+    # one host materialization per field; all later bookkeeping is numpy
+    anchor = np.asarray(sw.neighbor.anchor)
+    stype = np.asarray(sw.neighbor.stype)
+    level = np.asarray(s.level)
+    inside = np.asarray(sw.inside)
+    dual = np.asarray(sw.dual)
+    nkey = u64m.to_np(sw.key)
     tree_ids = np.asarray(tree_ids)
-    s_anchor = np.asarray(s.anchor)
-    s_level = np.asarray(s.level)
-    s_stype = np.asarray(s.stype)
-    nb, dual = bops.face_neighbor(s, face)
-    inside = np.asarray(bops.is_inside_root(nb))
-    tgt = tree_ids.copy()
+    n = level.shape[0]
+    tgt = np.broadcast_to(tree_ids, (d + 1, n)).copy()
     valid = inside.copy()
     kind = np.where(inside, FACE_INTERIOR, FACE_DOMAIN_BOUNDARY).astype(np.int32)
-    dual_np = np.asarray(dual).copy()
-    anchor = np.asarray(nb.anchor)
-    stype = np.asarray(nb.stype)
     cm = f.cmesh
     if cm is not None and not inside.all():
         anchor = anchor.copy()
         stype = stype.copy()
-        out_idx = np.nonzero(~inside)[0]
+        dual = dual.copy()
+        fidx, eidx = np.nonzero(~inside)
+        s_anchor = np.asarray(s.anchor)
+        s_stype = np.asarray(s.stype)
         src = Simplex(
-            jnp.asarray(s_anchor[out_idx]), jnp.asarray(s_level[out_idx]),
-            jnp.asarray(s_stype[out_idx]),
+            jnp.asarray(s_anchor[eidx]), jnp.asarray(level[eidx]),
+            jnp.asarray(s_stype[eidx]),
         )
-        rf = cm.root_face_of(src, face)
-        # group boundary crossings by connection (source tree, root face)
-        groups: dict[tuple[int, int], list[int]] = {}
-        for pos, (t1, rfv) in enumerate(zip(tree_ids[out_idx], rf)):
-            if rfv >= 0 and cm.face_tree[t1, rfv] >= 0:
-                groups.setdefault((int(t1), int(rfv)), []).append(pos)
-        for (t1, rfv), poss in groups.items():
-            idx = out_idx[np.asarray(poss)]
-            sub = Simplex(
-                jnp.asarray(anchor[idx]), jnp.asarray(s_level[idx]),
-                jnp.asarray(stype[idx]),
+        rf = cm.root_face_of(src, fidx)
+        t1 = tree_ids[eidx]
+        conn = (rf >= 0) & (cm.face_tree[t1, np.maximum(rf, 0)] >= 0)
+        keep = np.nonzero(conn)[0]
+        if len(keep):
+            # vectorized grouping by connection: lexsort the crossings on
+            # (source tree, root face), then walk the contiguous runs
+            fk, ek, rfk, t1k = fidx[keep], eidx[keep], rf[keep], t1[keep]
+            order = np.lexsort((rfk, t1k))
+            fo, eo, rfo, t1o = fk[order], ek[order], rfk[order], t1k[order]
+            starts = np.nonzero(
+                np.r_[True, (t1o[1:] != t1o[:-1]) | (rfo[1:] != rfo[:-1])])[0]
+            ends = np.r_[starts[1:], len(order)]
+            for a, b in zip(starts, ends):
+                fi, ei = fo[a:b], eo[a:b]
+                t1v, rfv = int(t1o[a]), int(rfo[a])
+                sub = Simplex(
+                    jnp.asarray(anchor[fi, ei]), jnp.asarray(level[ei]),
+                    jnp.asarray(stype[fi, ei]),
+                )
+                s2, t2 = cm.transform_across_face(sub, t1v, rfv, bops=bops)
+                old_stype = stype[fi, ei]
+                anchor[fi, ei] = np.asarray(s2.anchor)
+                stype[fi, ei] = np.asarray(s2.stype)
+                dual[fi, ei] = cm.face_facemap[t1v, rfv][old_stype, dual[fi, ei]]
+                tgt[fi, ei] = t2
+                valid[fi, ei] = True
+                kind[fi, ei] = FACE_INTER_TREE
+            # only the crossed entries changed anchors: recompute just their
+            # keys, in one batched call (the sweep's keys stand elsewhere)
+            crossed = Simplex(
+                jnp.asarray(anchor[fo, eo]), jnp.asarray(level[eo]),
+                jnp.asarray(stype[fo, eo]),
             )
-            s2, t2 = cm.transform_across_face(sub, t1, rfv, bops=bops)
-            old_stype = stype[idx]
-            anchor[idx] = np.asarray(s2.anchor)
-            stype[idx] = np.asarray(s2.stype)
-            dual_np[idx] = cm.face_facemap[t1, rfv][old_stype, dual_np[idx]]
-            tgt[idx] = t2
-            valid[idx] = True
-            kind[idx] = FACE_INTER_TREE
-    nb = Simplex(jnp.asarray(anchor), nb.level, jnp.asarray(stype))
-    nkey = bops.morton_key_np(nb)
-    return tgt, nkey, valid, nb, dual_np, kind
+            nkey[fo, eo] = bops.morton_key_np(crossed)
+    return FaceSweepLayer(tgt, nkey, valid, anchor, level, stype, dual, kind)
+
+
+def _face_lookup(f: Forest, tree_ids: np.ndarray, s: Simplex, face: int):
+    """Single-face view of `face_sweep_layer` (kept for callers that really
+    want one face, e.g. `face_kind`); the hot loops slice the full sweep."""
+    return face_sweep_layer(f, tree_ids, s).face(face)
+
+
+def face_kinds(f: Forest, s: Simplex) -> np.ndarray:
+    """Classify every face of every element in one fused sweep: (d+1, n)
+    matrix of FACE_INTERIOR (0) / FACE_INTER_TREE (1) /
+    FACE_DOMAIN_BOUNDARY (2) — the split of the old single is-root-boundary
+    test under the coarse mesh.  Prefer this over looping `face_kind` per
+    face: the whole matrix costs one sweep dispatch."""
+    return face_sweep_layer(f, f.tree, s).kind
 
 
 def face_kind(f: Forest, s: Simplex, face: int) -> np.ndarray:
-    """Classify face `face` of every element: FACE_INTERIOR (0),
-    FACE_INTER_TREE (1), or FACE_DOMAIN_BOUNDARY (2) — the split of the old
-    single is-root-boundary test under the coarse mesh."""
-    return _face_lookup(f, f.tree, s, face)[5]
+    """One face's row of `face_kinds`.  NOTE: every call runs the full
+    all-faces sweep and keeps one row — never loop this over faces; call
+    `face_kinds` once instead."""
+    return face_kinds(f, s)[face]
 
 
 # ------------------------------------------------------------------ balance
@@ -633,7 +706,8 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64) -> list[For
 
         def build_queries(i: int, sel: np.ndarray) -> dict:
             """Key-range queries for elements `sel` of local rank i whose
-            neighbor intervals reach beyond this rank: dest -> {(t, k0, l)}."""
+            neighbor intervals reach beyond this rank: dest -> {(t, k0, l)}.
+            One fused sweep + two owner_rank dispatches for ALL faces."""
             f = forests[i]
             g = comm.local_ranks[i]
             dest: dict[int, set] = {}
@@ -643,19 +717,19 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64) -> list[For
                           jnp.asarray(f.stype[sel]))
             lev = f.level[sel]
             span = _elem_spans(d, L, lev)
-            for face in range(d + 1):
-                tgt, nkey, valid, _, _, _ = _face_lookup(f, f.tree[sel], sub, face)
-                idx = np.nonzero(valid)[0]
-                if len(idx) == 0:
-                    continue
-                first = bops.owner_rank(tgt[idx], nkey[idx], mt, mk)
-                last = bops.owner_rank(
-                    tgt[idx], nkey[idx] + span[idx] - np.uint64(1), mt, mk)
-                for j in np.nonzero((first != g) | (last != g))[0]:
-                    q = (int(tgt[idx[j]]), int(nkey[idx[j]]), int(lev[idx[j]]))
-                    for r in range(int(first[j]), int(last[j]) + 1):
-                        if r != g:
-                            dest.setdefault(r, set()).add(q)
+            sw = face_sweep_layer(f, f.tree[sel], sub)
+            fi, ei = np.nonzero(sw.valid)
+            if len(ei) == 0:
+                return dest
+            tgt_v, nkey_v = sw.tgt[fi, ei], sw.nkey[fi, ei]
+            lev_v, span_v = lev[ei], span[ei]
+            first = bops.owner_rank(tgt_v, nkey_v, mt, mk)
+            last = bops.owner_rank(tgt_v, nkey_v + span_v - np.uint64(1), mt, mk)
+            for j in np.nonzero((first != g) | (last != g))[0]:
+                q = (int(tgt_v[j]), int(nkey_v[j]), int(lev_v[j]))
+                for r in range(int(first[j]), int(last[j]) + 1):
+                    if r != g:
+                        dest.setdefault(r, set()).add(q)
             return dest
 
         def answer(i: int, src: int, buf: np.ndarray) -> set:
@@ -687,7 +761,9 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64) -> list[For
 
         def eval_need(i: int) -> np.ndarray:
             """Local 2:1 sweep: per element, max leaf level in every face
-            interval over (local sorted arrays) ∪ (remote-leaf cache)."""
+            interval over (local sorted arrays) ∪ (remote-leaf cache).
+            ONE fused sweep dispatch per eval layer; the per-target-tree
+            interval searches run over the flattened (face, element) pairs."""
             f = forests[i]
             n = f.num_local
             need = np.zeros(n, bool)
@@ -696,22 +772,22 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64) -> list[For
             s = f.simplices()
             span = _elem_spans(d, L, f.level)
             cs = cache_sorted[i]
-            for face in range(d + 1):
-                tgt, nkey, valid, _, _, _ = _face_lookup(f, f.tree, s, face)
-                for t in np.unique(tgt[valid]):
-                    idx = np.nonzero(valid & (tgt == t))[0]
-                    gsel = np.searchsorted(f.tree, [t, t + 1])
-                    keys_t = f.keys[gsel[0]:gsel[1]]
-                    level_t = f.level[gsel[0]:gsel[1]]
-                    lo = np.searchsorted(keys_t, nkey[idx])
-                    hi = np.searchsorted(keys_t, nkey[idx] + span[idx])
-                    upd = _range_max(level_t, lo, hi) > f.level[idx] + 1
-                    if t in cs:
-                        ck, cl = cs[t]
-                        clo = np.searchsorted(ck, nkey[idx])
-                        chi = np.searchsorted(ck, nkey[idx] + span[idx])
-                        upd |= _range_max(cl, clo, chi) > f.level[idx] + 1
-                    need[idx[upd]] = True
+            sw = face_sweep_layer(f, f.tree, s)
+            for t in np.unique(sw.tgt[sw.valid]):
+                fi, ei = np.nonzero(sw.valid & (sw.tgt == t))
+                ks, sp = sw.nkey[fi, ei], span[ei]
+                gsel = np.searchsorted(f.tree, [t, t + 1])
+                keys_t = f.keys[gsel[0]:gsel[1]]
+                level_t = f.level[gsel[0]:gsel[1]]
+                lo = np.searchsorted(keys_t, ks)
+                hi = np.searchsorted(keys_t, ks + sp)
+                upd = _range_max(level_t, lo, hi) > f.level[ei] + 1
+                if t in cs:
+                    ck, cl = cs[t]
+                    clo = np.searchsorted(ck, ks)
+                    chi = np.searchsorted(ck, ks + sp)
+                    upd |= _range_max(cl, clo, chi) > f.level[ei] + 1
+                need[ei[upd]] = True
             return need
 
         def exchange(dests: list[dict], notifs: list[dict] | None) -> None:
@@ -837,8 +913,9 @@ def balance_oracle(forests: list[Forest], comm: Comm,
                 s = f.simplices()
                 need = np.zeros(f.num_local, bool)
                 span = _elem_spans(d, o.L, f.level)
+                sweep = face_sweep_layer(f, f.tree, s)  # one dispatch, all faces
                 for face in range(d + 1):
-                    tgt, nkey, valid, _, _, _ = _face_lookup(f, f.tree, s, face)
+                    tgt, nkey, valid = sweep.tgt[face], sweep.nkey[face], sweep.valid[face]
                     # per-target-tree slices of the global sorted leaf table
                     for t in np.unique(tgt[valid]):
                         sel = np.nonzero(valid & (tgt == t))[0]
@@ -916,17 +993,18 @@ def ghost(forests: list[Forest], comm: Comm) -> list[dict]:
             if f.num_local:
                 s = f.simplices()
                 span = _elem_spans(d, L, f.level)
-                for face in range(d + 1):
-                    tgt, nkey, valid, _, dual, _ = _face_lookup(f, f.tree, s, face)
-                    idx = np.nonzero(valid)[0]
-                    if len(idx) == 0:
-                        continue
-                    first = bops.owner_rank(tgt[idx], nkey[idx], mt, mk)
+                # one fused sweep + two owner_rank dispatches for ALL faces
+                sw = face_sweep_layer(f, f.tree, s)
+                fi, ei = np.nonzero(sw.valid)
+                if len(ei):
+                    tgt_v, nkey_v = sw.tgt[fi, ei], sw.nkey[fi, ei]
+                    dual_v, lev_v, span_v = sw.dual[fi, ei], f.level[ei], span[ei]
+                    first = bops.owner_rank(tgt_v, nkey_v, mt, mk)
                     last = bops.owner_rank(
-                        tgt[idx], nkey[idx] + span[idx] - np.uint64(1), mt, mk)
+                        tgt_v, nkey_v + span_v - np.uint64(1), mt, mk)
                     for j in np.nonzero((first != g) | (last != g))[0]:
-                        e = idx[j]
-                        q = (int(tgt[e]), int(nkey[e]), int(f.level[e]), int(dual[e]))
+                        q = (int(tgt_v[j]), int(nkey_v[j]), int(lev_v[j]),
+                             int(dual_v[j]))
                         for r in range(int(first[j]), int(last[j]) + 1):
                             if r != g:
                                 dest.setdefault(r, set()).add(q)
@@ -1059,8 +1137,9 @@ def ghost_oracle(forests: list[Forest], comm: Comm) -> list[dict]:
             continue
         s = f.simplices()
         cand = []
+        sweep = face_sweep_layer(f, f.tree, s)  # one dispatch, all faces
         for face in range(d + 1):
-            tgt, nkey, valid, nb, dual, _ = _face_lookup(f, f.tree, s, face)
+            tgt, nkey, valid, nb, dual, _ = sweep.face(face)
             nbc = None  # (n, d+1, d), computed only when candidates exist
             for t in np.unique(tgt[valid]):
                 sel = np.nonzero(valid & (tgt == t))[0]
@@ -1138,8 +1217,9 @@ def iterate(f: Forest, elem_fn=None, face_fn=None):
             key_index[(int(f.tree[i]), int(f.keys[i]), int(f.level[i]))] = i
         own_coords = None  # lazy: only adapted meshes have hanging faces
         pairs = []
+        sweep = face_sweep_layer(f, f.tree, s)  # one dispatch, all faces
         for face in range(d + 1):
-            tgt, nkey, valid, nb, dual, _ = _face_lookup(f, f.tree, s, face)
+            tgt, nkey, valid, nb, dual, _ = sweep.face(face)
             nlvl = np.asarray(nb.level)
             nbc = None
             for i in np.nonzero(valid)[0]:

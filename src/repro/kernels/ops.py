@@ -62,6 +62,22 @@ def face_neighbor(d: int, s: Simplex, face, block: int = sfc.DEFAULT_BLOCK):
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2))
+def face_sweep(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK):
+    """One fused kernel dispatch over ALL d+1 faces: returns
+    (neighbor Simplex, dual, inside, key U64), each with a leading face axis
+    of length d+1 (anchor is (d+1, n, d))."""
+    n = s.level.shape[0]
+    np_ = _pad(n, block)
+    arrays = _padded(_fields(s) + [s.level, s.stype], np_)
+    outs = sfc.face_sweep_kernel(d, *arrays, block=block, interpret=_interpret())
+    cut = [o[:n].T for o in outs]  # (d+1, n) per field
+    anchor = jnp.stack(cut[:d], axis=-1)  # (d+1, n, d)
+    level = jnp.broadcast_to(s.level, (d + 1, n))
+    nb = Simplex(anchor, level, cut[d])
+    return nb, cut[d + 1], cut[d + 2].astype(bool), u64m.U64(cut[d + 3], cut[d + 4])
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
 def successor(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK) -> Simplex:
     n = s.level.shape[0]
     np_ = _pad(n, block)

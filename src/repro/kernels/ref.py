@@ -65,6 +65,27 @@ def face_neighbor_ref(d, *arrays):
     return (*outs, nb.stype, dual)
 
 
+def face_sweep_ref(d, *arrays):
+    """Composed oracle of the fused face sweep: per face, face_neighbor +
+    is_inside_root + morton_key, stacked with a trailing face axis to match
+    the kernel's (n, d+1) tiles."""
+    o = get_ops(d)
+    s = _simplex(d, *arrays)
+    cols = [[] for _ in range(d + 5)]
+    for f in range(d + 1):
+        nb, dual = o.face_neighbor(s, jnp.int32(f))
+        inside = o.is_inside_root(nb)
+        key = o.morton_key(nb)
+        for k in range(d):
+            cols[k].append(nb.anchor[..., k])
+        cols[d].append(nb.stype)
+        cols[d + 1].append(dual)
+        cols[d + 2].append(inside.astype(jnp.int32))
+        cols[d + 3].append(key.hi)
+        cols[d + 4].append(key.lo)
+    return tuple(jnp.stack(c, axis=-1) for c in cols)
+
+
 def tree_transform_ref(d, M, c, tmap, *arrays):
     o = get_ops(d)
     s2 = o.tree_transform(_simplex(d, *arrays), M, c, tmap)

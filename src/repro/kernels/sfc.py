@@ -70,19 +70,15 @@ def _lut(consts, idx):
     return acc
 
 
-# ------------------------------------------------------------ kernel bodies
-def _encode_body(d: int, refs):
-    """morton key (level-padded consecutive index) from Tet-id."""
+# ---------------------------------------------------- shared body expressions
+# The per-op kernel bodies below and the fused face-sweep body compose these
+# pure vreg->vreg expressions; keeping them shared means the fused kernel can
+# never drift from the single-op kernels it replaces.
+def _encode_expr(d: int, coords, b):
+    """morton key (level-padded consecutive index) from Tet-id -> (hi, lo)."""
     L = MAXLEVEL[d]
     enc, _, _ = _packed_tables(d)
     nc = 2 ** d
-    if d == 3:
-        x_ref, y_ref, z_ref, b_ref, hi_ref, lo_ref = refs
-        coords = (x_ref[...], y_ref[...], z_ref[...])
-    else:
-        x_ref, y_ref, b_ref, hi_ref, lo_ref = refs
-        coords = (x_ref[...], y_ref[...])
-    b = b_ref[...]
     hi = jnp.zeros(b.shape, jnp.uint32)
     lo = jnp.zeros(b.shape, jnp.uint32)
     for i in range(L, 0, -1):  # fine -> coarse; positions are independent
@@ -99,8 +95,69 @@ def _encode_body(d: int, refs):
                 hi = hi | (iloc >> (32 - pos))
         else:
             hi = hi | (iloc << (pos - 32))
-    hi_ref[...] = hi
-    lo_ref[...] = lo
+    return hi, lo
+
+
+def _neighbor_expr(d: int, coords, lvl, b, f):
+    """Same-level face neighbor (Algorithm 4.6) -> (coords', type', dual).
+    `f` is a face-index vreg or a static Python int (the fused sweep unrolls
+    it statically)."""
+    L = MAXLEVEL[d]
+    _, _, nei = _packed_tables(d)
+    h = (jnp.int32(1) << (L - lvl)).astype(jnp.int32)
+    packed = _lut(nei, b * (d + 1) + f)
+    out = []
+    for k in range(d):
+        off = ((packed >> (6 + 2 * k)) & 3) - 1
+        out.append(coords[k] + off * h)
+    return out, packed & 7, (packed >> 3) & 7
+
+
+def _inside_expr(d: int, coords, lvl, b):
+    """Constant-time inside-root test (Proposition 23 with T = root, type 0)
+    -> int32 0/1 mask.  The axis permutation and boundary type sets collapse
+    to per-type constants baked into the instruction stream."""
+    L = MAXLEVEL[d]
+    t = get_tables(d)
+    p = tuple(int(v) for v in t.outside_perm[0])
+    KJ = tuple(int(v) for v in t.outside_types_kj[0])
+    IK = tuple(int(v) for v in t.outside_types_ik[0])
+    DIAG = tuple(int(v) for v in t.outside_types_diag[0])
+    ht = jnp.int32(1 << L)
+    ai = coords[p[0]]
+    aj = coords[p[1]]
+    at_root = (lvl == 0) & (b == 0)
+    for c in coords:
+        at_root = at_root & (c == 0)
+    if d == 2:
+        inside = (aj >= 0) & (ai < ht) & (aj <= ai)
+        ok_diag = _lut(KJ, b) == 0
+        inside = inside & ((aj != ai) | ok_diag)
+    else:
+        ak = coords[p[2]]
+        inside = (aj >= 0) & (ai < ht) & (ak <= ai) & (aj <= ak)
+        eq_ik = ak == ai
+        eq_kj = aj == ak
+        ok_ik = _lut(IK, b) == 0
+        ok_kj = _lut(KJ, b) == 0
+        ok_diag = _lut(DIAG, b) == 0
+        ok = jnp.where(
+            eq_ik & eq_kj, ok_diag, jnp.where(eq_ik, ok_ik, jnp.where(eq_kj, ok_kj, True))
+        )
+        inside = inside & ok
+    return (at_root | ((lvl > 0) & inside)).astype(jnp.int32)
+
+
+# ------------------------------------------------------------ kernel bodies
+def _encode_body(d: int, refs):
+    """morton key (level-padded consecutive index) from Tet-id."""
+    if d == 3:
+        x_ref, y_ref, z_ref, b_ref, hi_ref, lo_ref = refs
+        coords = (x_ref[...], y_ref[...], z_ref[...])
+    else:
+        x_ref, y_ref, b_ref, hi_ref, lo_ref = refs
+        coords = (x_ref[...], y_ref[...])
+    hi_ref[...], lo_ref[...] = _encode_expr(d, coords, b_ref[...])
 
 
 def _decode_body(d: int, refs):
@@ -143,8 +200,6 @@ def _decode_body(d: int, refs):
 
 def _neighbor_body(d: int, refs):
     """Same-level face neighbor (Algorithm 4.6): single pass, no level loop."""
-    L = MAXLEVEL[d]
-    _, _, nei = _packed_tables(d)
     if d == 3:
         x_ref, y_ref, z_ref, lvl_ref, b_ref, f_ref, ox_ref, oy_ref, oz_ref, ob_ref, of_ref = refs
         coords = (x_ref[...], y_ref[...], z_ref[...])
@@ -153,16 +208,44 @@ def _neighbor_body(d: int, refs):
         x_ref, y_ref, lvl_ref, b_ref, f_ref, ox_ref, oy_ref, ob_ref, of_ref = refs
         coords = (x_ref[...], y_ref[...])
         outs = (ox_ref, oy_ref)
+    ncoords, ntype, dual = _neighbor_expr(d, coords, lvl_ref[...], b_ref[...], f_ref[...])
+    for k in range(d):
+        outs[k][...] = ncoords[k]
+    ob_ref[...] = ntype
+    of_ref[...] = dual
+
+
+def _face_sweep_body(d: int, refs):
+    """Fused per-element face sweep: for ALL d+1 faces at once, the same-level
+    neighbor (coords/type/dual), its inside-root mask, and its morton key —
+    the three ops Balance/Ghost evaluation composes per face, with the
+    element's (anchor, level, type) read from memory exactly once.  The face
+    loop is a static unroll, so the body stays straight-line vector code; each
+    output is a (block, d+1) tile (one column per face, like the children
+    kernel)."""
+    if d == 3:
+        x_ref, y_ref, z_ref, lvl_ref, b_ref = refs[:5]
+        coords = (x_ref[...], y_ref[...], z_ref[...])
+    else:
+        x_ref, y_ref, lvl_ref, b_ref = refs[:4]
+        coords = (x_ref[...], y_ref[...])
+    out_refs = refs[d + 2:]  # d coord outs, type, dual, inside, hi, lo
     lvl = lvl_ref[...]
     b = b_ref[...]
-    f = f_ref[...]
-    h = (jnp.int32(1) << (L - lvl)).astype(jnp.int32)
-    packed = _lut(nei, b * (d + 1) + f)
-    for k in range(d):
-        off = ((packed >> (6 + 2 * k)) & 3) - 1
-        outs[k][...] = coords[k] + off * h
-    ob_ref[...] = packed & 7
-    of_ref[...] = (packed >> 3) & 7
+    cols = [[] for _ in range(len(out_refs))]
+    for f in range(d + 1):
+        ncoords, ntype, dual = _neighbor_expr(d, coords, lvl, b, f)
+        inside = _inside_expr(d, ncoords, lvl, ntype)
+        hi, lo = _encode_expr(d, ncoords, ntype)
+        for k in range(d):
+            cols[k].append(ncoords[k])
+        cols[d].append(ntype)
+        cols[d + 1].append(dual)
+        cols[d + 2].append(inside)
+        cols[d + 3].append(hi)
+        cols[d + 4].append(lo)
+    for ref, col in zip(out_refs, cols):
+        ref[...] = jnp.stack(col, axis=-1)
 
 
 def _successor_body(d: int, refs):
@@ -319,46 +402,14 @@ def _owner_rank_body(num_markers: int, refs):
 
 
 def _inside_body(d: int, refs):
-    """Constant-time inside-root test (Proposition 23 with T = root, type 0):
-    the axis permutation and boundary type sets collapse to per-type
-    constants baked into the instruction stream."""
-    L = MAXLEVEL[d]
-    t = get_tables(d)
-    p = tuple(int(v) for v in t.outside_perm[0])
-    KJ = tuple(int(v) for v in t.outside_types_kj[0])
-    IK = tuple(int(v) for v in t.outside_types_ik[0])
-    DIAG = tuple(int(v) for v in t.outside_types_diag[0])
+    """Constant-time inside-root test (Proposition 23 with T = root, type 0)."""
     if d == 3:
         x_ref, y_ref, z_ref, lvl_ref, b_ref, o_ref = refs
         coords = (x_ref[...], y_ref[...], z_ref[...])
     else:
         x_ref, y_ref, lvl_ref, b_ref, o_ref = refs
         coords = (x_ref[...], y_ref[...])
-    lvl = lvl_ref[...]
-    b = b_ref[...]
-    ht = jnp.int32(1 << L)
-    ai = coords[p[0]]
-    aj = coords[p[1]]
-    at_root = (lvl == 0) & (b == 0)
-    for c in coords:
-        at_root = at_root & (c == 0)
-    if d == 2:
-        inside = (aj >= 0) & (ai < ht) & (aj <= ai)
-        ok_diag = _lut(KJ, b) == 0
-        inside = inside & ((aj != ai) | ok_diag)
-    else:
-        ak = coords[p[2]]
-        inside = (aj >= 0) & (ai < ht) & (ak <= ai) & (aj <= ak)
-        eq_ik = ak == ai
-        eq_kj = aj == ak
-        ok_ik = _lut(IK, b) == 0
-        ok_kj = _lut(KJ, b) == 0
-        ok_diag = _lut(DIAG, b) == 0
-        ok = jnp.where(
-            eq_ik & eq_kj, ok_diag, jnp.where(eq_ik, ok_ik, jnp.where(eq_kj, ok_kj, True))
-        )
-        inside = inside & ok
-    o_ref[...] = (at_root | ((lvl > 0) & inside)).astype(jnp.int32)
+    o_ref[...] = _inside_expr(d, coords, lvl_ref[...], b_ref[...])
 
 
 # --------------------------------------------------------------- pallas_call
@@ -407,6 +458,28 @@ def face_neighbor_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret:
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32)] * (d + 2),
+        interpret=interpret,
+    )(*arrays)
+
+
+def face_sweep_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """arrays: x, y, (z,), level, type — int32 (N,) with N % block == 0.
+    One fused dispatch over ALL d+1 faces: returns x, y, (z,), type, dual,
+    inside, key_hi, key_lo of every same-level face neighbor, each output a
+    (N, d+1) tile with one column per face.  key_hi/lo are uint32 morton-key
+    words; inside is an int32 0/1 mask."""
+    n = arrays[0].shape[0]
+    nf = d + 1
+    in_specs, _ = _specs(len(arrays), 0, block)
+    out_spec = pl.BlockSpec((block, nf), lambda i: (i, 0))
+    n_out = d + 3  # coords, type, dual, inside (+ hi, lo below)
+    return pl.pallas_call(
+        lambda *refs: _face_sweep_body(d, refs),
+        grid=(n // block,),
+        in_specs=in_specs,
+        out_specs=[out_spec] * (n_out + 2),
+        out_shape=[jax.ShapeDtypeStruct((n, nf), jnp.int32)] * n_out
+        + [jax.ShapeDtypeStruct((n, nf), jnp.uint32)] * 2,
         interpret=interpret,
     )(*arrays)
 

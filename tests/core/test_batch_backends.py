@@ -153,6 +153,9 @@ def test_empty_batch_all_ops(d, backend):
     assert np.asarray(b.is_inside_root(s)).shape == (0,)
     nb, dual = b.face_neighbor(s, 0)
     assert nb.level.shape == (0,)
+    sw = b.face_sweep(s)
+    assert sw.neighbor.anchor.shape == (d + 1, 0, d)
+    assert sw.key.hi.shape == (d + 1, 0)
     assert b.tree_transform(
         s, np.eye(d, dtype=np.int64), np.zeros(d, np.int64), np.arange(o.nt)
     ).level.shape == (0,)

@@ -1,0 +1,232 @@
+"""The fused face sweep vs the composed per-face ops it replaces.
+
+`BatchedOps.face_sweep` must be bit-identical to composing `face_neighbor` +
+`is_inside_root` + `morton_key` per face — across all three backends, on
+random batches (property-tested through the offline `_pbt` shim) AND on the
+forests of every multitree fixture, whose elements exercise all three face
+kinds (interior, inter-tree, domain boundary).  `forest.face_sweep_layer`
+(the sweep + cross-tree fixup the hot loops consume) is pinned against an
+independent composed-and-dict-grouped reimplementation of the pre-fusion
+lookup, and the Balance/Ghost dispatch-count invariant — one sweep dispatch
+per eval layer, zero per-face neighbor dispatches — is asserted directly.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline: bounded random sampling
+    from _pbt import given, settings, strategies as st
+
+from _helpers import rand_simplices
+from repro.core import batch, get_ops
+from repro.core import cmesh as C
+from repro.core import forest as F
+from repro.core import u64 as u64m
+from repro.core.types import Simplex
+
+BACKENDS = ["reference", "jnp", pytest.param("pallas", marks=pytest.mark.slow)]
+
+N = 64  # one padding bucket -> one jit/interpret compile per op
+
+
+def composed_sweep(bops, s):
+    """The pre-fusion composition, stacked per face: the oracle the fused
+    dispatch must match bit for bit."""
+    nbs, duals, insides, keys = [], [], [], []
+    for f in range(bops.d + 1):
+        nb, dual = bops.face_neighbor(s, f)
+        nbs.append(nb)
+        duals.append(np.asarray(dual))
+        insides.append(np.asarray(bops.is_inside_root(nb)))
+        keys.append(bops.morton_key_np(nb))
+    return (
+        np.stack([np.asarray(x.anchor) for x in nbs]),
+        np.stack([np.asarray(x.level) for x in nbs]),
+        np.stack([np.asarray(x.stype) for x in nbs]),
+        np.stack(duals), np.stack(insides), np.stack(keys),
+    )
+
+
+def assert_sweep_matches(sw: batch.FaceSweep, oracle) -> None:
+    anchor, level, stype, dual, inside, keys = oracle
+    np.testing.assert_array_equal(np.asarray(sw.neighbor.anchor), anchor)
+    np.testing.assert_array_equal(np.asarray(sw.neighbor.level), level)
+    np.testing.assert_array_equal(np.asarray(sw.neighbor.stype), stype)
+    np.testing.assert_array_equal(np.asarray(sw.dual), dual)
+    np.testing.assert_array_equal(np.asarray(sw.inside), inside.astype(bool))
+    np.testing.assert_array_equal(u64m.to_np(sw.key), keys)
+
+
+@pytest.fixture(params=[2, 3])
+def d(request):
+    return request.param
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_face_sweep_matches_composed_ops(d, backend):
+    """Random batches (levels 0..MAXLEVEL, neighbors falling outside the
+    root included): fused == composed, bit for bit, per backend."""
+    s = rand_simplices(d, N, seed=70 + d, min_level=0)
+    ref = batch.get_batch_ops(d, "reference")
+    got = batch.get_batch_ops(d, backend)
+    assert_sweep_matches(got.face_sweep(s), composed_sweep(ref, s))
+
+
+@given(seed=st.integers(0, 2**31 - 1), dim=st.sampled_from([2, 3]))
+@settings(max_examples=25, deadline=None)
+def test_face_sweep_property(seed, dim):
+    """Property test (hypothesis, or offline via tests/_pbt.py): for
+    arbitrary valid elements the fused jnp sweep equals the composed
+    reference ops on every face."""
+    s = rand_simplices(dim, 16, seed=seed, min_level=0)
+    ref = batch.get_batch_ops(dim, "reference")
+    got = batch.get_batch_ops(dim, "jnp")
+    assert_sweep_matches(got.face_sweep(s), composed_sweep(ref, s))
+
+
+def test_face_sweep_empty_batch(d):
+    o = get_ops(d)
+    s = o.from_linear_id(u64m.from_int(np.zeros(0, np.uint64)), jnp.zeros(0, jnp.int32))
+    for backend in ("reference", "jnp"):
+        sw = batch.get_batch_ops(d, backend).face_sweep(s)
+        assert sw.neighbor.anchor.shape == (d + 1, 0, d)
+        assert sw.dual.shape == (d + 1, 0)
+        assert sw.inside.shape == (d + 1, 0)
+        assert sw.key.hi.shape == (d + 1, 0)
+
+
+# ------------------------------------------------ forest layer (cross-tree)
+FIXTURES = {
+    # name: (d, cmesh factory, base level, deep level)
+    "kuhn2_d2": (2, lambda: C.cmesh_unit_cube(2), 2, 4),
+    "kuhn6_d3": (3, lambda: C.cmesh_unit_cube(3), 1, 3),
+    "periodic_d2": (2, lambda: C.cmesh_unit_cube(2, periodic=(True, True)), 2, 4),
+    "rotated_pair": (2, C.cmesh_rotated_pair, 2, 4),
+    "single_tree_d3": (3, lambda: None, 1, 3),
+}
+
+
+def _fixture_forest(name):
+    d, mk_cmesh, base, deep = FIXTURES[name]
+    cm = mk_cmesh()
+    num_trees = cm.num_trees if cm is not None else 2
+    comm = F.SimComm(1)
+
+    def corner(tree, elems):
+        a = np.asarray(elems.anchor)
+        l = np.asarray(elems.level)
+        return ((np.asarray(tree) == 0) & (a.sum(1) == 0) & (l < deep)).astype(np.int32)
+
+    [f] = F.new_uniform(d, num_trees, base, comm, cmesh=cm)
+    return F.adapt(f, corner, recursive=True)
+
+
+def composed_face_lookup(f, tree_ids, s, face):
+    """Independent reimplementation of the pre-fusion `_face_lookup`: per-face
+    composed dispatches + the per-element Python dict grouping for cross-tree
+    faces.  Kept verbatim from the pre-sweep code so the vectorized
+    lexsort-grouped fixup has a fixed oracle."""
+    bops = f.bops
+    tree_ids = np.asarray(tree_ids)
+    s_anchor, s_level, s_stype = (np.asarray(s.anchor), np.asarray(s.level),
+                                  np.asarray(s.stype))
+    nb, dual = bops.face_neighbor(s, face)
+    inside = np.asarray(bops.is_inside_root(nb))
+    tgt = tree_ids.copy()
+    valid = inside.copy()
+    kind = np.where(inside, F.FACE_INTERIOR, F.FACE_DOMAIN_BOUNDARY).astype(np.int32)
+    dual_np = np.asarray(dual).copy()
+    anchor = np.asarray(nb.anchor)
+    stype = np.asarray(nb.stype)
+    cm = f.cmesh
+    if cm is not None and not inside.all():
+        anchor = anchor.copy()
+        stype = stype.copy()
+        out_idx = np.nonzero(~inside)[0]
+        src = Simplex(jnp.asarray(s_anchor[out_idx]), jnp.asarray(s_level[out_idx]),
+                      jnp.asarray(s_stype[out_idx]))
+        rf = cm.root_face_of(src, face)
+        groups = {}
+        for pos, (t1, rfv) in enumerate(zip(tree_ids[out_idx], rf)):
+            if rfv >= 0 and cm.face_tree[t1, rfv] >= 0:
+                groups.setdefault((int(t1), int(rfv)), []).append(pos)
+        for (t1, rfv), poss in groups.items():
+            idx = out_idx[np.asarray(poss)]
+            sub = Simplex(jnp.asarray(anchor[idx]), jnp.asarray(s_level[idx]),
+                          jnp.asarray(stype[idx]))
+            s2, t2 = cm.transform_across_face(sub, t1, rfv, bops=bops)
+            old_stype = stype[idx]
+            anchor[idx] = np.asarray(s2.anchor)
+            stype[idx] = np.asarray(s2.stype)
+            dual_np[idx] = cm.face_facemap[t1, rfv][old_stype, dual_np[idx]]
+            tgt[idx] = t2
+            valid[idx] = True
+            kind[idx] = F.FACE_INTER_TREE
+    nb = Simplex(jnp.asarray(anchor), nb.level, jnp.asarray(stype))
+    nkey = bops.morton_key_np(nb)
+    return tgt, nkey, valid, nb, dual_np, kind
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_sweep_layer_matches_composed_lookup(name, backend):
+    """On every multitree fixture (interior + inter-tree + domain-boundary
+    faces) the fused layer equals the composed per-face lookup, element for
+    element, on every backend."""
+    with batch.use_backend(backend):
+        f = _fixture_forest(name)
+        s = f.simplices()
+        sweep = F.face_sweep_layer(f, f.tree, s)
+        assert {int(k) for k in np.unique(sweep.kind)} <= {
+            F.FACE_INTERIOR, F.FACE_INTER_TREE, F.FACE_DOMAIN_BOUNDARY}
+        for face in range(f.d + 1):
+            tgt, nkey, valid, nb, dual, kind = composed_face_lookup(
+                f, f.tree, s, face)
+            np.testing.assert_array_equal(sweep.tgt[face], tgt)
+            np.testing.assert_array_equal(sweep.valid[face], valid)
+            np.testing.assert_array_equal(sweep.dual[face], dual)
+            np.testing.assert_array_equal(sweep.kind[face], kind)
+            np.testing.assert_array_equal(sweep.nkey[face], nkey)
+            np.testing.assert_array_equal(sweep.anchor[face], np.asarray(nb.anchor))
+            np.testing.assert_array_equal(sweep.stype[face], np.asarray(nb.stype))
+            # the public single-face view slices the same sweep
+            got = F._face_lookup(f, f.tree, s, face)
+            np.testing.assert_array_equal(got[0], tgt)
+            np.testing.assert_array_equal(got[1], nkey)
+        if f.cmesh is not None:
+            assert (sweep.kind == F.FACE_INTER_TREE).any(), name
+
+
+@pytest.mark.parametrize("name", ["kuhn2_d2", "single_tree_d3"])
+def test_balance_and_ghost_fuse_the_face_dispatches(name):
+    """The point of the fusion: Balance/Ghost evaluation issues `face_sweep`
+    dispatches ONLY — never per-face face_neighbor / is_inside_root — and
+    Ghost's routing pass is exactly one sweep per non-empty rank."""
+    d, mk_cmesh, base, deep = FIXTURES[name]
+    cm = mk_cmesh()
+    num_trees = cm.num_trees if cm is not None else 2
+    comm = F.SimComm(2)
+    fs = F.new_uniform(d, num_trees, base, comm, cmesh=cm)
+
+    def corner(tree, elems):
+        a = np.asarray(elems.anchor)
+        l = np.asarray(elems.level)
+        return ((a.sum(1) == 0) & (l < deep)).astype(np.int32)
+
+    fs = [F.adapt(f, corner, recursive=True) for f in fs]
+    batch.reset_dispatch_counts()
+    out = F.balance(fs, comm)
+    counts = batch.dispatch_counts()
+    assert counts.get("face_sweep", 0) > 0
+    assert counts.get("face_neighbor", 0) == 0, counts
+    assert counts.get("is_inside_root", 0) == 0, counts
+    batch.reset_dispatch_counts()
+    F.ghost(out, comm)
+    counts = batch.dispatch_counts()
+    nonempty = sum(1 for f in out if f.num_local)
+    assert counts.get("face_sweep", 0) == nonempty, counts
+    assert counts.get("face_neighbor", 0) == 0, counts
+    batch.reset_dispatch_counts()

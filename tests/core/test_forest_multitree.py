@@ -256,9 +256,9 @@ def test_periodic_cube_has_no_boundary(d):
     F.iterate(fs[0], face_fn=lambda f, pairs: seen.setdefault("pairs", pairs))
     assert len(seen["pairs"]) == (d + 1) * n // 2
     s = fs[0].simplices()
-    for face in range(d + 1):
-        kind = F.face_kind(fs[0], s, face)
-        assert (kind != F.FACE_DOMAIN_BOUNDARY).all()
+    kinds = F.face_kinds(fs[0], s)  # all faces, one sweep
+    assert kinds.shape == (d + 1, n)
+    assert (kinds != F.FACE_DOMAIN_BOUNDARY).all()
 
 
 def test_rotated_pair_pipeline():

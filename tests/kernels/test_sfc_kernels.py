@@ -109,6 +109,24 @@ def test_inside_root_kernel(d, n):
 
 
 @pytest.mark.parametrize("d", [2, 3])
+@pytest.mark.parametrize("n", [130])
+def test_face_sweep_kernel(d, n):
+    """The fused all-faces kernel equals its composed oracle on every output
+    tile (neighbor coords/type, dual, inside mask, morton-key words)."""
+    o = get_ops(d)
+    s = rand_simplices(d, n, seed=n + 7, max_level=o.L)
+    fields = [s.anchor[..., k] for k in range(d)]
+    want = kref.face_sweep_ref(d, *fields, s.level, s.stype)
+    nb, dual, inside, key = kops.face_sweep(d, s)
+    got = (
+        *[nb.anchor[..., k].T for k in range(d)], nb.stype.T, dual.T,
+        inside.astype(jnp.int32).T, key.hi.T, key.lo.T,
+    )
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("d", [2, 3])
 @pytest.mark.parametrize("n", SHAPES)
 def test_owner_rank_kernel(d, n):
     from repro.core.batch import _pad_markers
@@ -164,3 +182,14 @@ def test_ref_module_consistency(d):
     np.testing.assert_array_equal(
         np.asarray(kref.is_inside_root_ref(d, *raw)), np.asarray(o.is_inside_root(s))
     )
+    souts = kref.face_sweep_ref(d, *raw)
+    for f in range(d + 1):
+        nb, dual = o.face_neighbor(s, jnp.int32(f))
+        np.testing.assert_array_equal(np.asarray(souts[d][..., f]), np.asarray(nb.stype))
+        np.testing.assert_array_equal(np.asarray(souts[d + 1][..., f]), np.asarray(dual))
+        np.testing.assert_array_equal(
+            np.asarray(souts[d + 2][..., f]).astype(bool),
+            np.asarray(o.is_inside_root(nb)))
+        want_k = o.morton_key(nb)
+        np.testing.assert_array_equal(np.asarray(souts[d + 3][..., f]), np.asarray(want_k.hi))
+        np.testing.assert_array_equal(np.asarray(souts[d + 4][..., f]), np.asarray(want_k.lo))
