@@ -28,6 +28,12 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
                          6-tree (3D) cube domains per backend; asserts
                          bit-identity and that refinement ripples across
                          tree faces (derived = cross-tree ghost fraction)
+  scale                  overlapped vs serialized Balance under simulated
+                         round-trip latency (8k elements, asserts >= 1.3x
+                         in the full run) plus REAL DistComm subprocess
+                         weak scaling (P = 1/2/4, per-rank wire volume and
+                         wall times; merges "overlap" and "scale" sections
+                         into BENCH_forest.json)
   roofline_summary       reads results/dryrun/*.json (derived = roofline
                          fraction); run `python -m repro.launch.dryrun --all`
                          first
@@ -302,10 +308,11 @@ def forest_backends(tiny: bool = False):
     # tiny (CI smoke) runs must not clobber the full benchmark artifact
     name = "BENCH_forest_tiny.json" if tiny else "BENCH_forest.json"
     out_path = Path(__file__).resolve().parents[1] / name
-    if out_path.exists():  # keep sibling suites' sections (face_sweep)
+    if out_path.exists():  # keep sibling suites' sections
         prev = json.loads(out_path.read_text())
-        if "face_sweep" in prev:
-            report["face_sweep"] = prev["face_sweep"]
+        for key in ("face_sweep", "overlap", "scale"):
+            if key in prev:
+                report[key] = prev[key]
     out_path.write_text(json.dumps(report, indent=2))
     row("forest_backends_json", 0.0, str(out_path))
 
@@ -451,6 +458,195 @@ def multitree(tiny: bool = False):
     row("multitree_identical", 0.0, "reference==jnp")
 
 
+_SCALE_SCRIPT = r"""
+import json, sys, time
+import numpy as np
+import jax
+
+port, pid, P, level, out_path = (
+    sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4]),
+    sys.argv[5])
+jax.distributed.initialize(
+    coordinator_address=f"localhost:{port}", num_processes=P, process_id=pid)
+
+from repro.core import cmesh as C
+from repro.core import forest as F
+from repro.core.comm import DistComm
+from repro.launch.multiproc import WEAK_BRICK_SETUP
+
+comm_ov = DistComm(timeout_s=240, namespace="ov.")
+comm_ser = DistComm(timeout_s=240, namespace="ser.")
+exec(WEAK_BRICK_SETUP)  # defines corner, cm, fs0 (the weak-scaling domain)
+
+def timed(comm, overlap):
+    t0 = time.perf_counter()
+    out = F.balance([f for f in fs0], comm, overlap=overlap)
+    return out, time.perf_counter() - t0
+
+# first runs warm the jit caches (and the KV path), second runs are timed
+F.balance([f for f in fs0], comm_ov, overlap=True)
+F.balance([f for f in fs0], comm_ser, overlap=False)
+comm_ov.reset_counters()
+comm_ser.reset_counters()
+out_ov, t_ov = timed(comm_ov, True)
+out_ser, t_ser = timed(comm_ser, False)
+np.testing.assert_array_equal(out_ov[0].keys, out_ser[0].keys)
+np.testing.assert_array_equal(out_ov[0].level, out_ser[0].level)
+assert comm_ov.wire_digest() == comm_ser.wire_digest()
+gh = F.ghost(out_ov, comm_ov)
+
+rec = {
+    "rank": pid,
+    "elements_initial": int(fs0[0].num_local),
+    "elements_balanced": int(out_ov[0].num_local),
+    "ghosts": int(len(gh[0]["level"])),
+    "balance_bytes": int(comm_ov.bytes_for("balance")),
+    "ghost_bytes": int(comm_ov.bytes_for("ghost")),
+    "t_overlap_s": t_ov,
+    "t_serialized_s": t_ser,
+}
+world = comm_ov.allgather([rec])
+if pid == 0:
+    json.dump({"ranks": P, "level": level, "per_rank": world},
+              open(out_path, "w"))
+comm_ov.barrier()
+print(f"rank {pid}: scale OK", flush=True)
+"""
+
+
+def _run_scale_case(P: int, level: int) -> dict:
+    """Spawn P real DistComm processes on a weak-scaling brick; collect the
+    per-rank record rank 0 aggregates."""
+    import os
+    import tempfile
+
+    from repro.launch.multiproc import run_ranks
+
+    fd, tmp_name = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    out_path = Path(tmp_name)
+    try:
+        outs = run_ranks(_SCALE_SCRIPT, P, extra_args=(P, level, out_path))
+        for pid, (out, _err) in enumerate(outs):
+            assert f"rank {pid}: scale OK" in out
+        return json.loads(out_path.read_text())
+    finally:
+        out_path.unlink(missing_ok=True)
+
+
+def scale(tiny: bool = False):
+    """Overlapped vs serialized Balance, and weak-scaling wire volume.
+
+    Two parts, merged into BENCH_forest.json:
+
+      "overlap"  in-process `LatencyComm(4)` (SimComm + simulated per-
+                 collective round-trip time, KV-RPC scale) on the 8k-element
+                 d=3 mesh: the double-buffered round loop vs the serialized
+                 one (`overlap=False`).  Results are asserted bit-identical;
+                 the full run asserts the acceptance bar of >= 1.3x.
+
+      "scale"    REAL `DistComm` subprocesses over jax.distributed on a
+                 weak-scaling domain (2D Kuhn brick, one cube column and
+                 hence a constant element load per rank): per-rank
+                 balance/ghost wire bytes and overlapped-vs-serialized wall
+                 times at P = 1 (in-process LocalComm), 2, and 4 ranks.
+    """
+    from repro.core import batch
+    from repro.core import cmesh as Cm
+    from repro.core import forest as F
+    from repro.core.comm import LatencyComm
+
+    # ---- part 1: overlap at the 8k-element size -------------------------
+    d = 3
+    level = 2 if tiny else 4
+    latency_s = 0.002 if tiny else 0.01
+    P = 4
+    base = F.new_uniform(d, 2, level, F.SimComm(P))
+    n0 = F.count_global(base)
+
+    def corner_cb(tree, elems, cap=level + 2):
+        a = np.asarray(elems.anchor)
+        l = np.asarray(elems.level)
+        return ((a.sum(1) == 0) & (l < cap)).astype(np.int32)
+
+    with batch.use_backend("jnp"):
+        fs0 = [F.adapt(f, corner_cb, recursive=True) for f in base]
+        # compute-only reference (no latency), also warms the jit caches
+        us_zero = _time(lambda: F.balance([f for f in fs0], F.SimComm(P)), n=2)
+        us_ser = _time(lambda: F.balance(
+            [f for f in fs0], LatencyComm(P, latency_s), overlap=False), n=3)
+        us_ovl = _time(lambda: F.balance(
+            [f for f in fs0], LatencyComm(P, latency_s), overlap=True), n=3)
+        # identity assert on latency-free runs (LatencyComm changes timing
+        # only — pinned by tests — so paying the simulated RTT again here
+        # would be pure waste)
+        out_s = F.balance([f for f in fs0], F.SimComm(P), overlap=False)
+        out_o = F.balance([f for f in fs0], F.SimComm(P), overlap=True)
+    identical = all(
+        np.array_equal(a.keys, b.keys) and np.array_equal(a.level, b.level)
+        for a, b in zip(out_s, out_o))
+    assert identical, "overlapped balance diverged from serialized"
+    speedup = us_ser / us_ovl
+    overlap_report = {
+        "d": d, "level": level, "elements": n0, "ranks": P,
+        "latency_s": latency_s, "zero_latency_us": us_zero,
+        "serialized_us": us_ser, "overlapped_us": us_ovl,
+        "speedup": speedup, "identical": identical,
+    }
+    row("overlap_balance_serialized", us_ser, f"latency={latency_s}s")
+    row("overlap_balance_overlapped", us_ovl,
+        f"{speedup:.2f}x_vs_serialized:identical={int(identical)}")
+    if not tiny:
+        assert speedup >= 1.3, (
+            f"overlap acceptance: {speedup:.2f}x < 1.3x at {n0} elements")
+
+    # ---- part 2: weak-scaling DistComm subprocess runs ------------------
+    wlevel = 2 if tiny else 3
+    ranks = [2] if tiny else [2, 4]
+    cases = []
+    # P = 1 baseline in-process: same per-rank load, zero wire.  Executes
+    # the SAME scenario fragment as the subprocess ranks, so the
+    # weak-scaling rows cannot drift apart (equal caps, equal domains).
+    from repro.launch.multiproc import WEAK_BRICK_SETUP
+
+    lc = F.LocalComm()
+    ns = {"np": np, "C": Cm, "F": F, "P": 1, "level": wlevel, "comm_ov": lc}
+    exec(WEAK_BRICK_SETUP, ns)
+    out1 = F.balance(ns["fs0"], lc)
+    cases.append({"ranks": 1, "level": wlevel,
+                  "elements_per_rank": int(out1[0].num_local),
+                  "balance_bytes_per_rank": int(lc.bytes_for("balance")),
+                  "ghost_bytes_per_rank": 0})
+    for Pw in ranks:
+        rec = _run_scale_case(Pw, wlevel)
+        per = rec["per_rank"]
+        bb = [r["balance_bytes"] for r in per]
+        gb = [r["ghost_bytes"] for r in per]
+        cases.append({
+            "ranks": Pw, "level": wlevel,
+            "elements_per_rank": int(np.mean([r["elements_balanced"] for r in per])),
+            "balance_bytes_per_rank": int(np.mean(bb)),
+            "balance_bytes_per_rank_max": int(np.max(bb)),
+            "ghost_bytes_per_rank": int(np.mean(gb)),
+            "t_overlap_s_max": max(r["t_overlap_s"] for r in per),
+            "t_serialized_s_max": max(r["t_serialized_s"] for r in per),
+            "per_rank": per,
+        })
+        row(f"scale_distcomm_P{Pw}", cases[-1]["t_overlap_s_max"] * 1e6,
+            f"bytes_per_rank={cases[-1]['balance_bytes_per_rank']}"
+            f":serialized_s={cases[-1]['t_serialized_s_max']:.3f}")
+    scale_report = {"d": 2, "domain": "kuhn_brick_Px1",
+                    "cells_per_rank": 1, "cases": cases}
+
+    name = "BENCH_forest_tiny.json" if tiny else "BENCH_forest.json"
+    out_path = Path(__file__).resolve().parents[1] / name
+    data = json.loads(out_path.read_text()) if out_path.exists() else {}
+    data["overlap"] = overlap_report
+    data["scale"] = scale_report
+    out_path.write_text(json.dumps(data, indent=2))
+    row("scale_json", 0.0, str(out_path))
+
+
 def roofline_summary():
     d = Path(__file__).resolve().parents[1] / "results" / "dryrun"
     if not d.exists():
@@ -477,6 +673,7 @@ SUITES = {
     "forest_backends": forest_backends,
     "face_sweep": face_sweep,
     "multitree": multitree,
+    "scale": scale,
     "roofline_summary": lambda tiny: roofline_summary(),
 }
 

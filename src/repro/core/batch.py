@@ -194,29 +194,31 @@ def _pad_markers(marker_tree: np.ndarray, marker_key: np.ndarray):
     return mt, mk
 
 
-# Memoized pad + device transfer of the marker table, keyed on the identity
-# of the numpy arrays: every Balance round calls `owner_rank` many times with
-# the SAME marker-table objects, and re-padding/re-uploading P entries per
-# call was pure overhead.  Entries hold strong refs to the key arrays so ids
-# cannot be recycled while cached; a numpy array mutated in place would alias
-# its cache entry, but marker tables are write-once (`partition_markers`).
+# Memoized pad + device transfer of the marker table, keyed on CONTENT (the
+# marker bytes): every Balance round calls `owner_rank` many times with the
+# same P-entry table, and re-padding/re-uploading it per call was pure
+# overhead.  The previous identity key (`id(mt), id(mk)`) silently served
+# stale device markers to a caller that mutated a table in place (identity
+# unchanged, content changed) — the content key closes that hole and also
+# dedupes equal-content tables that arrive as fresh arrays.  Hashing P
+# entries per call is O(P) host work, noise next to one dispatch.
 _marker_pad_cache: OrderedDict = OrderedDict()
 _MARKER_CACHE_SIZE = 16
 
 
 def _padded_markers_cached(mt: np.ndarray, mk: np.ndarray):
     """(device marker_tree, device marker_key U64), padded with sentinels."""
-    key = (id(mt), id(mk))
+    key = (mt.tobytes(), mk.tobytes())
     hit = _marker_pad_cache.get(key)
-    if hit is not None and hit[0] is mt and hit[1] is mk:
+    if hit is not None:
         _marker_pad_cache.move_to_end(key)
-        return hit[2], hit[3]
+        return hit
     mt_p, mk_p = _pad_markers(mt, mk)
-    val = (mt, mk, jnp.asarray(mt_p), u64m.from_int(mk_p))
+    val = (jnp.asarray(mt_p), u64m.from_int(mk_p))
     _marker_pad_cache[key] = val
     while len(_marker_pad_cache) > _MARKER_CACHE_SIZE:
         _marker_pad_cache.popitem(last=False)
-    return val[2], val[3]
+    return val
 
 
 def owner_rank_lex(t, hi, lo, mt, mhi, mlo):

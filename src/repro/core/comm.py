@@ -17,26 +17,40 @@ unchanged under either hosting:
                service (each payload travels through the key-value store of
                the coordinator that `jax.distributed.initialize` brings up).
 
+Every collective also exists in a *nonblocking* form — `iallgather` /
+`ialltoallv` return a `CommHandle` whose `wait()` delivers the same result
+the blocking call would (the blocking calls are literally post + wait).
+`SimComm` handles complete immediately, `DistComm` posts mpi4py nonblocking
+point-to-point exchanges or KV-store writes and only blocks in `wait()`,
+and `LatencyComm` simulates round-trip time so overlap can be measured
+in-process.  Handles of one communicator must be waited in the order they
+were posted, the same on every rank (the SPMD forest code does this; the
+KV transport's cleanup barrier relies on it).
+
 Payloads are nested tuples/lists/dicts of numpy arrays and scalars.  The
-base class meters every collective: bytes that would cross a rank boundary
-are accumulated into per-phase counters (`comm.phase("balance")`), which is
-how the benchmarks attribute wire volume to Balance / Ghost / Partition and
-how the boundary-layer exchange is shown to beat the allgathered-leaf-table
-baseline.
+base class meters every collective *at post time*: bytes that would cross a
+rank boundary are accumulated into per-phase counters
+(`comm.phase("balance")`), which is how the benchmarks attribute wire
+volume to Balance / Ghost / Partition and how the boundary-layer exchange
+is shown to beat the allgathered-leaf-table baseline.
 """
 
 from __future__ import annotations
 
 import contextlib
+import hashlib
 import struct
-from typing import Sequence
+import time
+from typing import Callable, Sequence
 
 import numpy as np
 
 __all__ = [
     "Comm",
+    "CommHandle",
     "SimComm",
     "LocalComm",
+    "LatencyComm",
     "DistComm",
     "payload_nbytes",
     "encode_payload",
@@ -65,10 +79,12 @@ def payload_nbytes(obj) -> int:
 
 
 # ------------------------------------------------------- wire serialization
-# Self-describing tagged format for the payload types above — the DistComm
-# KV-store transport.  No pickle: only data, no code.  (The optional mpi4py
-# binding uses mpi4py's own object collectives instead, which pickle; that
-# path assumes the usual MPI trust model of mutually trusted ranks.)
+# Self-describing tagged format for the payload types above — the ONE wire
+# codec of BOTH DistComm transports.  No pickle: only data, no code.  (The
+# mpi4py binding used mpi4py's pickling object collectives while the KV
+# path used this codec, so the two bindings moved different bytes; the
+# mpi4py path now ships exactly these buffers over MPI.BYTE point-to-point
+# exchanges, and `DistComm.wire_digest()` lets tests pin the parity.)
 def _enc(obj, out: list) -> None:
     if obj is None:
         out.append(b"N")
@@ -181,6 +197,54 @@ def decode_payload(buf: bytes):
     return obj
 
 
+# ------------------------------------------------------------------ handles
+class CommHandle:
+    """Waitable result of a nonblocking collective (`iallgather` /
+    `ialltoallv`).
+
+    `wait()` blocks until delivery and returns the collective's result —
+    idempotent, later calls return the same object.  `done()` polls for
+    completion without blocking.  Handles must be waited in posting order,
+    identically on every rank (the KV transport's per-generation cleanup
+    barrier and MPI tag matching rely on it); the SPMD forest code always
+    does.
+    """
+
+    __slots__ = ("_complete", "_poll", "_result", "_done")
+
+    def __init__(self, complete: Callable | None = None,
+                 poll: Callable[[], bool] | None = None,
+                 result=None, done: bool = False):
+        self._complete = complete
+        self._poll = poll
+        self._result = result
+        self._done = done
+
+    @classmethod
+    def ready(cls, result) -> "CommHandle":
+        """An already-completed handle (immediate transports, e.g. SimComm)."""
+        return cls(result=result, done=True)
+
+    def done(self) -> bool:
+        """True once the collective's data is available — `wait()` will not
+        block on peers' payloads (a binding may still synchronize transport
+        cleanup inside `wait()`, see DistComm's KV barrier).  A deferred
+        handle whose binding supplied no poll conservatively reports False."""
+        if self._done:
+            return True
+        if self._poll is not None:
+            return self._poll()
+        return False
+
+    def wait(self):
+        """Deliver the result, blocking if the exchange is still in flight."""
+        if not self._done:
+            self._result = self._complete()
+            self._complete = self._poll = None
+            self._done = True
+        return self._result
+
+
 # ----------------------------------------------------------------- the seam
 class Comm:
     """Abstract communicator: rank/size plus the two forest collectives.
@@ -188,9 +252,13 @@ class Comm:
     `local_ranks` lists the global ranks resident in this process; every
     collective consumes a list with one payload per local rank and returns,
     per local rank, the global view (`allgather`: length-P list; `alltoallv`:
-    length-P list of what each global rank sent here).  Subclasses implement
-    `_allgather` / `_alltoallv`; the base class meters byte volume into
-    per-phase counters.
+    length-P list of what each global rank sent here).  Both collectives
+    exist blocking (`allgather`/`alltoallv`) and nonblocking
+    (`iallgather`/`ialltoallv` -> `CommHandle`); the blocking forms are
+    post + `wait()`.  Subclasses implement `_allgather` / `_alltoallv` (and
+    optionally the nonblocking `_iallgather` / `_ialltoallv`, which default
+    to immediate completion); the base class meters byte volume into
+    per-phase counters at post time.
     """
 
     size: int
@@ -236,16 +304,26 @@ class Comm:
     # -- collectives -------------------------------------------------------
     def allgather(self, per_local: Sequence) -> list:
         """per_local[i] from local rank i -> full per-global-rank list."""
+        return self.iallgather(per_local).wait()
+
+    def alltoallv(self, send: Sequence[Sequence]) -> list:
+        """send[i][q]: payload from local rank i to global rank q.
+        Returns recv[i][p]: what global rank p sent to local rank i."""
+        return self.ialltoallv(send).wait()
+
+    def iallgather(self, per_local: Sequence) -> CommHandle:
+        """Nonblocking `allgather`: posts the exchange, meters its bytes to
+        the phase active NOW, and returns a waitable `CommHandle`."""
         assert len(per_local) == len(self.local_ranks)
         b = self._bucket()
         b["allgather_calls"] += 1
         b["allgather_bytes"] += sum(
             payload_nbytes(x) * (self.size - 1) for x in per_local)
-        return self._allgather(list(per_local))
+        return self._iallgather(list(per_local))
 
-    def alltoallv(self, send: Sequence[Sequence]) -> list:
-        """send[i][q]: payload from local rank i to global rank q.
-        Returns recv[i][p]: what global rank p sent to local rank i."""
+    def ialltoallv(self, send: Sequence[Sequence]) -> CommHandle:
+        """Nonblocking `alltoallv`: posts, meters at post time, returns a
+        `CommHandle` delivering recv[i][p] on `wait()`."""
         assert len(send) == len(self.local_ranks)
         b = self._bucket()
         b["alltoallv_calls"] += 1
@@ -253,7 +331,7 @@ class Comm:
             assert len(send[i]) == self.size
             b["alltoallv_bytes"] += sum(
                 payload_nbytes(x) for q, x in enumerate(send[i]) if q != g)
-        return self._alltoallv([list(row) for row in send])
+        return self._ialltoallv([list(row) for row in send])
 
     def barrier(self) -> None:  # pragma: no cover - trivial default
         pass
@@ -263,6 +341,14 @@ class Comm:
 
     def _alltoallv(self, send: list) -> list:
         raise NotImplementedError
+
+    # Default nonblocking forms: complete-at-post via the blocking transport
+    # (correct for any binding; real transports override to defer the wait).
+    def _iallgather(self, per_local: list) -> CommHandle:
+        return CommHandle.ready(self._allgather(per_local))
+
+    def _ialltoallv(self, send: list) -> CommHandle:
+        return CommHandle.ready(self._alltoallv(send))
 
 
 class SimComm(Comm):
@@ -298,6 +384,42 @@ class LocalComm(SimComm):
         super().__init__(1)
 
 
+class LatencyComm(SimComm):
+    """SimComm plus a simulated per-collective round-trip time.
+
+    A collective's result is not *deliverable* until `latency_s` after it
+    was posted: blocking calls (post + wait) therefore pay the full latency,
+    while a nonblocking handle matures in the background and `wait()` only
+    sleeps whatever the caller's compute did not already cover.  This is the
+    in-process stand-in for transports dominated by round-trip time (the
+    DistComm KV store's per-exchange RPCs); the overlap benchmark uses it to
+    measure how much of a Balance round's communication the double-buffered
+    loop actually hides.  Results are bit-identical to `SimComm` — only
+    timing changes.
+    """
+
+    def __init__(self, num_ranks: int, latency_s: float = 0.0):
+        super().__init__(num_ranks)
+        self.latency_s = latency_s
+
+    def _delayed(self, result) -> CommHandle:
+        ready_at = time.monotonic() + self.latency_s
+
+        def complete():
+            rem = ready_at - time.monotonic()
+            if rem > 0:
+                time.sleep(rem)
+            return result
+
+        return CommHandle(complete, poll=lambda: time.monotonic() >= ready_at)
+
+    def _iallgather(self, per_local: list) -> CommHandle:
+        return self._delayed(self._allgather(per_local))
+
+    def _ialltoallv(self, send: list) -> CommHandle:
+        return self._delayed(self._alltoallv(send))
+
+
 class DistComm(Comm):
     """One rank per process, over mpi4py or the jax.distributed coordinator.
 
@@ -307,17 +429,48 @@ class DistComm(Comm):
     (set/get/delete per generation, with a barrier before cleanup).  Either
     way the surface is identical to `SimComm` with `local_ranks == [rank]`,
     so the forest algorithms run unmodified.
+
+    BOTH transports move exactly the `encode_payload` buffers — the mpi4py
+    binding ships them as MPI.BYTE point-to-point pairs (length header, then
+    payload), never mpi4py's pickling object collectives — so the bindings
+    are byte-for-byte interchangeable; `wire_digest()` exposes a running
+    sha256 over every posted payload blob for tests to pin that.
+
+    Nonblocking semantics: `iallgather`/`ialltoallv` *post* (KV writes are
+    issued, MPI sends and header receives are in flight) and return a
+    `CommHandle`; the blocking receive side runs in `wait()`, and `done()`
+    polls (an MPI progress driver that posts the payload receives once the
+    headers land, or a zero-timeout KV probe).  Handles must be waited in
+    posting order, identically on every rank.  `namespace` isolates several
+    DistComm instances sharing one runtime (e.g. an overlapped and a
+    serialized benchmark run): it prefixes the KV keys and barrier names,
+    and gives the mpi4py binding its own duplicated communicator so
+    interleaved exchanges cannot cross-match by tag.
     """
 
-    def __init__(self, timeout_s: float = 120.0):
+    def __init__(self, timeout_s: float = 120.0, namespace: str = ""):
         super().__init__()
         self._timeout_ms = int(timeout_s * 1000)
+        self._ns = namespace
         self._gen = 0
         self._mpi = None
+        self._MPI = None
         self._client = None
+        self._wire = hashlib.sha256()
         mpi = self._try_mpi()
         if mpi is not None:
-            self._mpi = mpi
+            from mpi4py import MPI  # noqa: PLC0415
+
+            # a namespaced instance needs its own tag-matching space: MPI
+            # matches by (source, tag, communicator), and two instances
+            # with independent generation counters would cross-match on a
+            # shared communicator (Dup is collective — every rank builds
+            # its DistComm instances in the same order).  The dup is owned
+            # by this instance: `close()` frees it (context ids are a
+            # finite MPI resource).
+            self._owns_mpi = bool(namespace)
+            self._mpi = mpi.Dup() if namespace else mpi
+            self._MPI = MPI
             self.rank = mpi.Get_rank()
             self.size = mpi.Get_size()
         else:
@@ -334,6 +487,26 @@ class DistComm(Comm):
             self.size = jax.process_count()
         self.local_ranks = range(self.rank, self.rank + 1)
 
+    @classmethod
+    def _testing_instance(cls, rank: int, size: int, *, mpi=None, MPI=None,
+                          client=None, timeout_s: float = 5.0,
+                          namespace: str = "") -> "DistComm":
+        """Build a DistComm over injected transports (fake MPI module / fake
+        KV client) without a real runtime — the offline transport tests."""
+        self = cls.__new__(cls)
+        Comm.__init__(self)
+        self._timeout_ms = int(timeout_s * 1000)
+        self._ns = namespace
+        self._gen = 0
+        self._mpi = mpi
+        self._MPI = MPI
+        self._client = client
+        self._wire = hashlib.sha256()
+        self.rank = rank
+        self.size = size
+        self.local_ranks = range(rank, rank + 1)
+        return self
+
     @staticmethod
     def _try_mpi():
         try:
@@ -349,64 +522,194 @@ class DistComm(Comm):
     def P(self) -> int:
         return self.size
 
+    def close(self) -> None:
+        """Release owned transport resources: frees the communicator a
+        namespaced mpi4py binding Dup()ed (collective — close on every
+        rank, after all handles are waited).  The KV binding holds nothing
+        beyond per-generation keys, which each exchange already cleans."""
+        if getattr(self, "_owns_mpi", False) and self._mpi is not None:
+            self._mpi.Free()
+            self._mpi = None
+            self._owns_mpi = False
+
+    # -- wire accounting ---------------------------------------------------
+    def _wire_update(self, outbox: dict[int, bytes]) -> None:
+        """Fold every posted payload blob into the running wire digest, in
+        deterministic (peer, length, bytes) order — transport independent."""
+        for q in sorted(outbox):
+            self._wire.update(struct.pack("<II", q, len(outbox[q])))
+            self._wire.update(outbox[q])
+
+    def wire_digest(self) -> str:
+        """sha256 over every payload blob this rank has posted so far; equal
+        runs over either transport yield equal digests (the packed-codec
+        parity the tests assert)."""
+        return self._wire.hexdigest()
+
     # -- KV-store transport ------------------------------------------------
-    def _kv_exchange(self, outbox: dict[int, bytes], tag: str) -> dict[int, bytes]:
-        """Deliver outbox[q] to each rank q; return {p: payload_from_p}.
-        Peers that sent nothing are absent from the result."""
+    def _key(self, gen: int, tag: str, rest: str) -> str:
+        return f"repro_comm/{self._ns}{gen}/{tag}/{rest}"
+
+    def _kv_post(self, outbox: dict[int, bytes], tag: str):
+        """Publish outbox[q] for each rank q (payloads first, then the
+        targets index, so a visible index implies fetchable payloads)."""
         c = self._client
         gen = self._gen
         self._gen += 1
         me = self.rank
         for q, blob in outbox.items():
-            c.key_value_set_bytes(f"repro_comm/{gen}/{tag}/{me}>{q}", blob)
-        # publish which peers each rank targeted so receivers know what to get
+            c.key_value_set_bytes(self._key(gen, tag, f"{me}>{q}"), blob)
         targets = ",".join(str(q) for q in sorted(outbox))
-        c.key_value_set(f"repro_comm/{gen}/{tag}/targets/{me}", targets or "-")
+        c.key_value_set(self._key(gen, tag, f"targets/{me}"), targets or "-")
+        return (gen, tag, frozenset(outbox))
+
+    def _kv_complete(self, st) -> dict[int, bytes]:
+        """Blocking receive side: fetch every peer's payload, then barrier
+        and delete this generation's keys.  Returns {p: payload_from_p}."""
+        gen, tag, sent = st
+        c = self._client
+        me = self.rank
         inbox: dict[int, bytes] = {}
         for p in range(self.size):
             if p == me:
                 continue
             t = c.blocking_key_value_get(
-                f"repro_comm/{gen}/{tag}/targets/{p}", self._timeout_ms)
+                self._key(gen, tag, f"targets/{p}"), self._timeout_ms)
             if t != "-" and str(me) in t.split(","):
                 inbox[p] = c.blocking_key_value_get_bytes(
-                    f"repro_comm/{gen}/{tag}/{p}>{me}", self._timeout_ms)
-        c.wait_at_barrier(f"repro_comm_{gen}_{tag}", self._timeout_ms)
-        for q in outbox:
-            c.key_value_delete(f"repro_comm/{gen}/{tag}/{me}>{q}")
-        c.key_value_delete(f"repro_comm/{gen}/{tag}/targets/{me}")
+                    self._key(gen, tag, f"{p}>{me}"), self._timeout_ms)
+        c.wait_at_barrier(f"repro_comm_{self._ns}{gen}_{tag}", self._timeout_ms)
+        for q in sent:
+            c.key_value_delete(self._key(gen, tag, f"{me}>{q}"))
+        c.key_value_delete(self._key(gen, tag, f"targets/{me}"))
         return inbox
 
+    def _kv_ready(self, st) -> bool:
+        """Poll: every peer's targets index visible (payloads are set before
+        the index, so visibility implies the data is fetchable).  NOTE: a
+        True poll means the *data* side of `wait()` will not block; the
+        per-generation cleanup barrier inside `_kv_complete` still
+        synchronizes with peers that have not reached their own wait yet."""
+        gen, tag, _ = st
+        c = self._client
+        try:
+            for p in range(self.size):
+                if p != self.rank:
+                    c.blocking_key_value_get(
+                        self._key(gen, tag, f"targets/{p}"), 1)
+        except Exception:  # noqa: BLE001 - any miss/timeout means not ready
+            return False
+        return True
+
+    # -- mpi4py transport --------------------------------------------------
+    # Point-to-point packed exchange: each peer gets an 8-byte length header
+    # then the `encode_payload` blob, both as MPI.BYTE-class buffers (no
+    # pickle anywhere).  Sends and header receives post immediately; payload
+    # receives post once the headers have sized their buffers (in wait() or
+    # the poll).  One shape serves allgather and alltoallv alike, mirrors
+    # the KV transport byte for byte, and is what the offline fake-MPI
+    # tests drive; the cost is P-1 messages per rank even for allgather —
+    # switching that path to native Iallgatherv over the same buffers is
+    # the P>=16 upgrade noted in ROADMAP's multi-host item.
+    def _mpi_post(self, outbox: dict[int, bytes]):
+        MPI, w = self._MPI, self._mpi
+        gen = self._gen
+        self._gen += 1
+        t_hdr = (2 * gen) % 32000
+        t_pay = t_hdr + 1
+        keep, sreqs = [], []
+        for q, blob in outbox.items():
+            hdr = np.array([len(blob)], np.int64)
+            buf = np.frombuffer(blob, np.uint8) if blob else np.zeros(0, np.uint8)
+            keep.append((hdr, buf))
+            sreqs.append(w.Isend([hdr, MPI.INT64_T], dest=q, tag=t_hdr))
+            sreqs.append(w.Isend([buf, MPI.BYTE], dest=q, tag=t_pay))
+        peers = [p for p in range(self.size) if p != self.rank]
+        rhdr = {p: np.empty(1, np.int64) for p in peers}
+        rreq = [w.Irecv([rhdr[p], MPI.INT64_T], source=p, tag=t_hdr)
+                for p in peers]
+        return {"keep": keep, "sreqs": sreqs, "peers": peers,
+                "rhdr": rhdr, "rreq": rreq, "t_pay": t_pay}
+
+    def _mpi_payload_recvs(self, st) -> None:
+        """Once the headers are in, size the buffers and post the payload
+        receives (idempotent; shared by the poll and the blocking wait)."""
+        if "bufs" in st:
+            return
+        MPI, w = self._MPI, self._mpi
+        st["bufs"] = {p: np.empty(int(st["rhdr"][p][0]), np.uint8)
+                      for p in st["peers"]}
+        st["preq"] = [w.Irecv([st["bufs"][p], MPI.BYTE], source=p,
+                              tag=st["t_pay"])
+                      for p in st["peers"]]
+
+    def _mpi_complete(self, st) -> dict[int, bytes]:
+        MPI = self._MPI
+        if "bufs" not in st:
+            MPI.Request.Waitall(st["rreq"])
+            self._mpi_payload_recvs(st)
+        MPI.Request.Waitall(st["preq"])
+        MPI.Request.Waitall(st["sreqs"])
+        return {p: st["bufs"][p].tobytes() for p in st["peers"]}
+
+    def _mpi_test(self, st) -> bool:
+        """Nonblocking progress driver: posts the payload receives as soon
+        as the headers have completed, and reports True only when payloads
+        AND sends are done — i.e. `wait()` will not block."""
+        MPI = self._MPI
+        if "bufs" not in st:
+            if not MPI.Request.Testall(st["rreq"]):
+                return False
+            self._mpi_payload_recvs(st)
+        return (bool(MPI.Request.Testall(st["preq"]))
+                and bool(MPI.Request.Testall(st["sreqs"])))
+
+    # -- collectives -------------------------------------------------------
     def barrier(self) -> None:
         if self._mpi is not None:
             self._mpi.Barrier()
         else:
             gen = self._gen
             self._gen += 1
-            self._client.wait_at_barrier(f"repro_comm_{gen}_b", self._timeout_ms)
+            self._client.wait_at_barrier(
+                f"repro_comm_{self._ns}{gen}_b", self._timeout_ms)
 
-    def _allgather(self, per_local: list) -> list:
+    def _post(self, outbox: dict[int, bytes], tag: str):
+        """Post one packed exchange on whichever transport is bound; returns
+        (complete, poll) closures delivering/probing {p: blob_from_p}."""
+        self._wire_update(outbox)
+        if self._mpi is not None:
+            st = self._mpi_post(outbox)
+            return (lambda: self._mpi_complete(st)), (lambda: self._mpi_test(st))
+        st = self._kv_post(outbox, tag)
+        return (lambda: self._kv_complete(st)), (lambda: self._kv_ready(st))
+
+    def _iallgather(self, per_local: list) -> CommHandle:
         x = per_local[0]
-        if self._mpi is not None:
-            return list(self._mpi.allgather(x))
         blob = encode_payload(x)
-        inbox = self._kv_exchange(
-            {q: blob for q in range(self.size) if q != self.rank}, "ag")
-        out = [None] * self.size
-        out[self.rank] = x
-        for p, b in inbox.items():
-            out[p] = decode_payload(b)
-        return out
+        outbox = {q: blob for q in range(self.size) if q != self.rank}
+        complete, poll = self._post(outbox, "ag")
 
-    def _alltoallv(self, send: list) -> list:
+        def deliver():
+            out = [None] * self.size
+            out[self.rank] = x
+            for p, b in complete().items():
+                out[p] = decode_payload(b)
+            return out
+
+        return CommHandle(deliver, poll=poll)
+
+    def _ialltoallv(self, send: list) -> CommHandle:
         row = send[0]
-        if self._mpi is not None:
-            return [list(self._mpi.alltoall(row))]
         outbox = {q: encode_payload(row[q])
                   for q in range(self.size) if q != self.rank}
-        inbox = self._kv_exchange(outbox, "a2a")
-        recv = [None] * self.size
-        recv[self.rank] = row[self.rank]
-        for p, b in inbox.items():
-            recv[p] = decode_payload(b)
-        return [recv]
+        complete, poll = self._post(outbox, "a2a")
+
+        def deliver():
+            recv = [None] * self.size
+            recv[self.rank] = row[self.rank]
+            for p, b in complete().items():
+                recv[p] = decode_payload(b)
+            return [recv]
+
+        return CommHandle(deliver, poll=poll)

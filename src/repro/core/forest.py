@@ -47,7 +47,7 @@ import jax.numpy as jnp
 from . import u64 as u64m
 from .batch import BatchedOps, get_batch_ops
 from .cmesh import Cmesh
-from .comm import Comm, DistComm, LocalComm, SimComm
+from .comm import Comm, CommHandle, DistComm, LatencyComm, LocalComm, SimComm
 from .ops import SimplexOps, get_ops
 from .tables import face_plane
 from .types import Simplex, pack_wire, unpack_wire
@@ -55,8 +55,10 @@ from .types import Simplex, pack_wire, unpack_wire
 __all__ = [
     "Forest",
     "Comm",
+    "CommHandle",
     "SimComm",
     "LocalComm",
+    "LatencyComm",
     "DistComm",
     "new_uniform",
     "adapt",
@@ -427,19 +429,16 @@ def partition(forests: list[Forest], comm: Comm,
     return out
 
 
-def partition_markers(forests: list[Forest], comm: Comm):
-    """Allgather the partition-marker table: per rank the (tree, key) of its
-    first local element (`global_first_desc_key`).  Empty ranks inherit the
-    next non-empty rank's marker (trailing empties keep the (num_trees, 0)
-    sentinel), so the table is lex-sorted and `owner_rank` — a vectorized
-    searchsorted on the batch backends — resolves any (tree, key) to the
-    rank whose contiguous SFC range holds it.  This P-entry exchange is the
-    ONLY global metadata Balance/Ghost need: everything else travels as
-    boundary-local key-range messages."""
-    K = forests[0].num_trees
-    per_local = [tuple(map(int, f.global_first_desc_key())) for f in forests]
-    pairs = comm.allgather(per_local)
-    P = comm.size
+def _marker_pairs(forests: list[Forest]) -> list:
+    """Per local rank, the (tree, key) of its first element — the payload of
+    the marker allgather (split out so `balance` can post it nonblocking)."""
+    return [tuple(map(int, f.global_first_desc_key())) for f in forests]
+
+
+def _markers_from_pairs(K: int, P: int, pairs) -> tuple[np.ndarray, np.ndarray]:
+    """Allgathered first-element pairs -> the lex-sorted marker table.
+    Empty ranks inherit the next non-empty rank's marker (trailing empties
+    keep the (num_trees, 0) sentinel)."""
     mt = np.empty(P, np.int32)
     mk = np.empty(P, np.uint64)
     nxt = (K, 0)
@@ -450,6 +449,20 @@ def partition_markers(forests: list[Forest], comm: Comm):
         mt[r], mk[r] = t, np.uint64(k)
         nxt = (t, k)
     return mt, mk
+
+
+def partition_markers(forests: list[Forest], comm: Comm):
+    """Allgather the partition-marker table: per rank the (tree, key) of its
+    first local element (`global_first_desc_key`).  Empty ranks inherit the
+    next non-empty rank's marker (trailing empties keep the (num_trees, 0)
+    sentinel), so the table is lex-sorted and `owner_rank` — a vectorized
+    searchsorted on the batch backends — resolves any (tree, key) to the
+    rank whose contiguous SFC range holds it.  This P-entry exchange is the
+    ONLY global metadata Balance/Ghost need: everything else travels as
+    boundary-local key-range messages."""
+    K = forests[0].num_trees
+    pairs = comm.allgather(_marker_pairs(forests))
+    return _markers_from_pairs(K, comm.size, pairs)
 
 
 # ------------------------------------------------------- cross-tree lookups
@@ -649,9 +662,11 @@ def _pack_triples(triples) -> np.ndarray:
     )
 
 
-def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64) -> list[Forest]:
+def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64,
+            overlap: bool = True) -> list[Forest]:
     """2:1 balance across faces (ripple algorithm), across tree faces when
-    the forest carries a Cmesh (intra-tree otherwise) — message based.
+    the forest carries a Cmesh (intra-tree otherwise) — message based, with
+    the boundary exchange overlapped behind interior compute.
 
     A leaf is refined when some face-neighbor key interval contains a leaf
     more than one level finer; neighbor regions behind a glued tree face are
@@ -672,9 +687,26 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64) -> list[For
 
     Received witnesses/notifications accumulate in a per-rank cache of
     remote leaves, so each round's refine decision is a purely local sweep
-    (local sorted arrays + cache).  Reaches the same least fixpoint as
-    `balance_oracle` — element for element — and raises
-    `BalanceNonConvergence` with per-rank diagnostics on round exhaustion.
+    (local sorted arrays + cache).
+
+    The round loop is *double buffered* (p4est-style overlap): round r's
+    queries and notifications are posted nonblocking (`Comm.ialltoallv`) as
+    soon as round r-1's refinement produced them, and the next round's
+    fused face sweep runs while they are on the wire.  The first merge
+    point waits them, answers the received queries, and immediately posts
+    the replies — which then hide behind the interior 2:1 eval against the
+    LOCAL sorted arrays (complete for every interior element, whose
+    neighbor intervals lie inside this rank's marker range).  Only after
+    the second merge point folds the replies do the boundary-adjacent
+    elements finish against the refreshed remote-leaf cache; the
+    convergence vote hides behind the refinement, and the initial marker
+    allgather behind the first sweep (which double-duties as the initial
+    query builder).  The split changes scheduling only: the refine
+    decisions, the message bytes, and the least fixpoint are bit-identical
+    to the serialized loop (`overlap=False` completes every collective at
+    its post site — the benchmark baseline) and to `balance_oracle`,
+    element for element.  Raises `BalanceNonConvergence` with per-rank
+    diagnostics on round exhaustion.
     """
     if max_rounds < 1:
         raise ValueError("max_rounds must be >= 1")
@@ -685,8 +717,16 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64) -> list[For
     P = comm.size
     nloc = len(forests)
     forests = list(forests)
+
+    def post(h: CommHandle) -> CommHandle:
+        # serialized mode: complete every collective where it was posted
+        return h if overlap else CommHandle.ready(h.wait())
+
     with comm.phase("balance"):
-        mt, mk = partition_markers(forests, comm)
+        # markers are posted nonblocking; the first face sweep hides the wire
+        K = forests[0].num_trees
+        h_mk = post(comm.iallgather(_marker_pairs(forests)))
+        mt = mk = None  # assigned at the marker merge point below
         # answering side: (tree, span_exp) -> {k0: (min queried level, ranks)}
         registries: list[dict] = [{} for _ in range(nloc)]
         # requesting side: remote leaves learned from replies/notifications
@@ -704,20 +744,12 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64) -> list[For
                          np.array([l for _, l in kl], np.int32))
             cache_sorted[i] = cs
 
-        def build_queries(i: int, sel: np.ndarray) -> dict:
-            """Key-range queries for elements `sel` of local rank i whose
+        def route_queries(i: int, sw: FaceSweepLayer, lev, span) -> dict:
+            """Key-range queries for the swept elements of local rank i whose
             neighbor intervals reach beyond this rank: dest -> {(t, k0, l)}.
-            One fused sweep + two owner_rank dispatches for ALL faces."""
-            f = forests[i]
+            Two owner_rank dispatches for ALL (face, element) pairs."""
             g = comm.local_ranks[i]
             dest: dict[int, set] = {}
-            if len(sel) == 0:
-                return dest
-            sub = Simplex(jnp.asarray(f.anchor[sel]), jnp.asarray(f.level[sel]),
-                          jnp.asarray(f.stype[sel]))
-            lev = f.level[sel]
-            span = _elem_spans(d, L, lev)
-            sw = face_sweep_layer(f, f.tree[sel], sub)
             fi, ei = np.nonzero(sw.valid)
             if len(ei) == 0:
                 return dest
@@ -731,6 +763,19 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64) -> list[For
                     if r != g:
                         dest.setdefault(r, set()).add(q)
             return dest
+
+        def build_queries(i: int, sel: np.ndarray) -> dict:
+            """Queries for an element subset (the per-round child layers):
+            one fused sweep of the subset + the owner-rank routing."""
+            f = forests[i]
+            if len(sel) == 0:
+                return {}
+            sub = Simplex(jnp.asarray(f.anchor[sel]), jnp.asarray(f.level[sel]),
+                          jnp.asarray(f.stype[sel]))
+            lev = f.level[sel]
+            span = _elem_spans(d, L, lev)
+            sw = face_sweep_layer(f, f.tree[sel], sub)
+            return route_queries(i, sw, lev, span)
 
         def answer(i: int, src: int, buf: np.ndarray) -> set:
             """Register one rank's queries and answer them from the local
@@ -759,20 +804,28 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64) -> list[For
                         reply.add((t, int(keys_t[j]), mx))
             return reply
 
-        def eval_need(i: int) -> np.ndarray:
-            """Local 2:1 sweep: per element, max leaf level in every face
-            interval over (local sorted arrays) ∪ (remote-leaf cache).
-            ONE fused sweep dispatch per eval layer; the per-target-tree
-            interval searches run over the flattened (face, element) pairs."""
+        def sweep_only(i: int):
+            """The round's fused face sweep over ALL local elements of rank
+            i (+ key-interval spans) — communication free, so it runs while
+            the previous round's exchange (or the marker allgather) is on
+            the wire.  Reused by the interior/boundary evals AND (in the
+            initial round) the query builder, so each round sweeps once."""
             f = forests[i]
-            n = f.num_local
-            need = np.zeros(n, bool)
-            if n == 0:
+            if f.num_local == 0:
+                return None, None
+            sw = face_sweep_layer(f, f.tree, f.simplices())
+            return sw, _elem_spans(d, L, f.level)
+
+        def eval_local(i: int, sw, span) -> np.ndarray:
+            """The 2:1 condition against the LOCAL sorted arrays: per
+            element, max leaf level in every face interval.  Complete for
+            interior elements; the local half of the OR for boundary ones.
+            Communication free — this is the work that hides the in-flight
+            exchange."""
+            f = forests[i]
+            need = np.zeros(f.num_local, bool)
+            if sw is None:
                 return need
-            s = f.simplices()
-            span = _elem_spans(d, L, f.level)
-            cs = cache_sorted[i]
-            sw = face_sweep_layer(f, f.tree, s)
             for t in np.unique(sw.tgt[sw.valid]):
                 fi, ei = np.nonzero(sw.valid & (sw.tgt == t))
                 ks, sp = sw.nkey[fi, ei], span[ei]
@@ -782,18 +835,52 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64) -> list[For
                 lo = np.searchsorted(keys_t, ks)
                 hi = np.searchsorted(keys_t, ks + sp)
                 upd = _range_max(level_t, lo, hi) > f.level[ei] + 1
-                if t in cs:
-                    ck, cl = cs[t]
-                    clo = np.searchsorted(ck, ks)
-                    chi = np.searchsorted(ck, ks + sp)
-                    upd |= _range_max(cl, clo, chi) > f.level[ei] + 1
                 need[ei[upd]] = True
             return need
 
-        def exchange(dests: list[dict], notifs: list[dict] | None) -> None:
-            """One boundary exchange: ship (notifications, queries) per
-            destination, answer received queries, ship replies back, fold
-            replies and notifications into the remote-leaf caches."""
+        def eval_cache(i: int, sw, span) -> np.ndarray:
+            """The remote-leaf-cache half of the 2:1 condition, boundary-
+            adjacent elements only: an interior interval lies wholly inside
+            this rank's marker range [marker_g, marker_{g+1}), where remote
+            leaves (always owned by other ranks, hence outside that range)
+            can never fall — so skipping interior elements here is exact,
+            not approximate.  The boundary split is pure host lex compares
+            against the marker table, no extra batched dispatch."""
+            f = forests[i]
+            need = np.zeros(f.num_local, bool)
+            cs = cache_sorted[i]
+            if sw is None or not cs:
+                return need
+            g = comm.local_ranks[i]
+            fi, ei = np.nonzero(sw.valid)
+            t_v = sw.tgt[fi, ei]
+            k_lo = sw.nkey[fi, ei]
+            k_hi = k_lo + span[ei] - np.uint64(1)
+            off = np.zeros(len(ei), bool)
+            if g > 0:  # keys below the global first element clamp to rank 0
+                off |= (t_v < mt[g]) | ((t_v == mt[g]) & (k_lo < mk[g]))
+            if g + 1 < P:
+                off |= (t_v > mt[g + 1]) | ((t_v == mt[g + 1]) & (k_hi >= mk[g + 1]))
+            bmask = np.zeros(f.num_local, bool)
+            bmask[ei[off]] = True
+            if not bmask.any():
+                return need
+            valid_b = sw.valid & bmask[None, :]
+            for t in np.unique(sw.tgt[valid_b]):
+                if t not in cs:
+                    continue
+                fi, ei = np.nonzero(valid_b & (sw.tgt == t))
+                ks, sp = sw.nkey[fi, ei], span[ei]
+                ck, cl = cs[t]
+                clo = np.searchsorted(ck, ks)
+                chi = np.searchsorted(ck, ks + sp)
+                upd = _range_max(cl, clo, chi) > f.level[ei] + 1
+                need[ei[upd]] = True
+            return need
+
+        def post_exchange(dests: list[dict], notifs: list[dict] | None) -> CommHandle:
+            """Ship (notifications, queries) per destination — nonblocking;
+            the next `eval_round` waits it at the round's first merge point."""
             send = []
             for i in range(nloc):
                 row = []
@@ -802,23 +889,51 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64) -> list[For
                     row.append((_pack_triples(nt),
                                 _pack_triples(dests[i].get(q, ()))))
                 send.append(row)
-            recv = comm.alltoallv(send)
-            reply_rows = []
+            return comm.ialltoallv(send)
+
+        def eval_round(pending: CommHandle, sweeps=None) -> list[np.ndarray]:
+            """One double-buffered round evaluation.  Timeline:
+
+              sweep faces            <- hides the in-flight `pending`
+                                        queries/notifications (posted at
+                                        the END of the previous round)
+              merge 1: wait pending; answer queries; POST replies
+              fold notifications; eval interior (local sorted arrays only)
+                                     <- hides the in-flight replies
+              merge 2: wait replies; fold; recompile caches
+              eval boundary elements against the refreshed cache
+
+            The initial round passes the sweeps it already computed (they
+            hid the marker allgather and built the first queries)."""
+            if sweeps is None:
+                sweeps = [sweep_only(i) for i in range(nloc)]
+            recv = pending.wait()
+            reply_rows, notif_bufs = [], []
             for i in range(nloc):
                 g = comm.local_ranks[i]
                 row = [np.zeros(0, np.uint8)] * P
+                nbufs = []
                 for p in range(P):
                     if p == g or recv[i][p] is None:
                         continue
                     nbuf, qbuf = recv[i][p]
                     if len(nbuf):
-                        t_, k_, l_ = unpack_wire(nbuf)
-                        cache_entries[i].update(
-                            zip(t_.tolist(), k_.tolist(), l_.tolist()))
+                        nbufs.append(nbuf)
                     if len(qbuf):
                         row[p] = _pack_triples(answer(i, p, qbuf))
                 reply_rows.append(row)
-            rrecv = comm.alltoallv(reply_rows)
+                notif_bufs.append(nbufs)
+            hr = post(comm.ialltoallv(reply_rows))
+            # everything below merge 1 overlaps the reply flight: fold the
+            # received notifications, then the interior (local-only) eval
+            for i in range(nloc):
+                for nbuf in notif_bufs[i]:
+                    t_, k_, l_ = unpack_wire(nbuf)
+                    cache_entries[i].update(
+                        zip(t_.tolist(), k_.tolist(), l_.tolist()))
+            needs = [eval_local(i, sw, span) for i, (sw, span) in
+                     zip(range(nloc), sweeps)]
+            rrecv = hr.wait()
             for i in range(nloc):
                 g = comm.local_ranks[i]
                 for p in range(P):
@@ -828,14 +943,14 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64) -> list[For
                     t_, k_, l_ = unpack_wire(buf)
                     cache_entries[i].update(zip(t_.tolist(), k_.tolist(), l_.tolist()))
                 recompile_cache(i)
+            for i, (sw, span) in enumerate(sweeps):
+                needs[i] |= eval_cache(i, sw, span)
+            return needs
 
-        # initial halo: every element registers + queries its remote intervals
-        exchange([build_queries(i, np.arange(forests[i].num_local))
-                  for i in range(nloc)], None)
-        for _ in range(max_rounds):
-            needs = [eval_need(i) for i in range(nloc)]
-            if not any(comm.allgather([int(nd.any()) for nd in needs])):
-                return forests
+        def refine_and_build(needs: list[np.ndarray]):
+            """Refine this round's violators and build the NEXT round's
+            queries and notifications (runs while the convergence flag is
+            on the wire)."""
             new_dests: list[dict] = [{} for _ in range(nloc)]
             new_notifs: list[dict] = [{} for _ in range(nloc)]
             for i in range(nloc):
@@ -873,9 +988,32 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64) -> list[For
                             if ent is not None and l > ent[0] + 1:
                                 for r in ent[1]:
                                     new_notifs[i].setdefault(r, set()).add((t, k, l))
-            exchange(new_dests, new_notifs)
-        # budget exhausted: converged iff the last round left nothing dirty
-        counts = comm.allgather([int(eval_need(i).sum()) for i in range(nloc)])
+            return new_dests, new_notifs
+
+        # initial round: the sweeps run while the marker allgather flies,
+        # then double-duty as both the first query builder and the first
+        # eval layer; the initial halo (every element registers + queries
+        # its remote intervals) is itself posted nonblocking
+        sweeps0 = [sweep_only(i) for i in range(nloc)]
+        mt, mk = _markers_from_pairs(K, P, h_mk.wait())
+        pending = post(post_exchange(
+            [route_queries(i, sw, forests[i].level, span)
+             if sw is not None else {}
+             for i, (sw, span) in zip(range(nloc), sweeps0)], None))
+        needs = eval_round(pending, sweeps0)
+        for _ in range(max_rounds):
+            # post the convergence vote, then refine + build the next
+            # round's messages while it is on the wire (a no-op when the
+            # vote comes back all-clear: nothing was dirty anywhere)
+            h_conv = post(comm.iallgather([int(nd.any()) for nd in needs]))
+            new_dests, new_notifs = refine_and_build(needs)
+            if not any(h_conv.wait()):
+                return forests
+            pending = post(post_exchange(new_dests, new_notifs))
+            needs = eval_round(pending)
+        # budget exhausted: the last eval (which completed the last round's
+        # exchange) decides converged-on-last-round vs genuinely dirty
+        counts = comm.allgather([int(nd.sum()) for nd in needs])
         if not any(counts):
             return forests
     raise BalanceNonConvergence(max_rounds, counts)

@@ -1,0 +1,86 @@
+"""Spawn P coordinated `jax.distributed` processes (one rank each).
+
+The subprocess harness shared by the DistComm substrate tests and the
+`--suite scale` benchmark: bind a free localhost port for the coordinator,
+launch P copies of a `python -c` script that calls
+`jax.distributed.initialize` against it, run them CONCURRENTLY (the ranks
+rendezvous at the coordinator — launching sequentially would deadlock),
+and collect per-rank (stdout, stderr), killing the whole fleet if any
+rank hangs past the timeout.
+"""
+
+from __future__ import annotations
+
+import socket
+import subprocess
+import sys
+from pathlib import Path
+
+__all__ = ["WEAK_BRICK_SETUP", "free_port", "run_ranks"]
+
+_ROOT = Path(__file__).resolve().parents[3]
+
+# The shared weak-scaling scenario of the DistComm subprocess runs (the
+# P=4 substrate test, the --suite scale benchmark ranks, and its
+# in-process P=1 baseline): a 2D Kuhn brick with one cube column per rank
+# and corner refinement (cap = level + 2) in EVERY tree, so the per-rank
+# element load is constant in P and the 2:1 ripple crosses every
+# inter-cell face.  `exec` it with `np`, `C` (repro.core.cmesh), `F`
+# (repro.core.forest), `P`, `level`, and `comm_ov` bound; it defines
+# `corner`, `cm`, and the adapted single-local-rank forest list `fs0`.
+# One copy here keeps the benchmark rows, the baseline, and the test
+# fixture refining identically.
+WEAK_BRICK_SETUP = r"""
+def corner(tree, elems, cap=level + 2):
+    a = np.asarray(elems.anchor)
+    l = np.asarray(elems.level)
+    return ((a.sum(1) == 0) & (l < cap)).astype(np.int32)
+
+cm = C.cmesh_brick(2, (P, 1))   # one Kuhn cell column per rank
+fs0 = F.new_uniform(2, cm.num_trees, level, comm_ov, cmesh=cm)
+fs0 = [F.adapt(fs0[0], corner, recursive=True)]
+"""
+
+
+def free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+def run_ranks(script: str, num_ranks: int, extra_args: tuple = (),
+              timeout: float = 600.0) -> list[tuple[str, str]]:
+    """Run `script` in `num_ranks` concurrent subprocesses.
+
+    Each subprocess receives argv = [coordinator_port, rank, *extra_args]
+    and a minimal CPU-only environment with the repo's `src` on
+    PYTHONPATH.  Returns the per-rank (stdout, stderr) list; raises
+    RuntimeError naming the first failing rank (with its stderr tail) and
+    TimeoutExpired — after killing every rank — if any rank hangs.
+    """
+    port = free_port()
+    env = {"PYTHONPATH": str(_ROOT / "src"), "PATH": "/usr/bin:/bin",
+           "JAX_PLATFORMS": "cpu"}
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", script, str(port), str(pid),
+             *[str(a) for a in extra_args]],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=env,
+        )
+        for pid in range(num_ranks)
+    ]
+    outs = []
+    for pr in procs:
+        try:
+            outs.append(pr.communicate(timeout=timeout))
+        except subprocess.TimeoutExpired:
+            for p2 in procs:
+                p2.kill()
+            for p2 in procs:  # reap: no zombies/undrained pipes left behind
+                p2.wait()
+            raise
+    for pid, (out, err) in enumerate(outs):
+        if procs[pid].returncode != 0:
+            raise RuntimeError(
+                f"rank {pid} exited {procs[pid].returncode}: {err[-3000:]}")
+    return outs

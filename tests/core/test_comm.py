@@ -1,13 +1,16 @@
 """Comm-layer unit tests: surface conformance, byte metering, wire formats,
 marker routing (owner_rank + partition_markers)."""
 
+import time
+
 import numpy as np
 import pytest
 
 from repro.core import batch
 from repro.core import forest as F
 from repro.core.comm import (
-    LocalComm, SimComm, decode_payload, encode_payload, payload_nbytes,
+    LatencyComm, LocalComm, SimComm, decode_payload, encode_payload,
+    payload_nbytes,
 )
 from repro.core.types import pack_wire, unpack_wire
 
@@ -57,6 +60,52 @@ def test_payload_nbytes_nested():
     obj = {"a": np.zeros((2, 3), np.int32), "b": [np.zeros(5, np.uint8), 7]}
     # 1-byte keys + 24-byte array + 5-byte array + 8-byte scalar
     assert payload_nbytes(obj) == 1 + 24 + 1 + 5 + 8
+
+
+# ------------------------------------------------------------------ handles
+def test_nonblocking_handles_match_blocking():
+    """iallgather/ialltoallv deliver exactly what the blocking calls do;
+    wait() is idempotent and SimComm handles complete immediately."""
+    comm = SimComm(3)
+    h = comm.iallgather([10, 11, 12])
+    assert h.done()
+    assert h.wait() == [10, 11, 12]
+    assert h.wait() == [10, 11, 12]  # idempotent
+    send = [[f"{p}->{q}" for q in range(3)] for p in range(3)]
+    hv = comm.ialltoallv(send)
+    assert hv.wait() == comm.alltoallv(send)
+
+
+def test_bytes_metered_at_post_time():
+    """A collective's bytes land in the phase active when it was POSTED,
+    not when it was waited — how the overlapped balance keeps attribution."""
+    comm = SimComm(2)
+    x = np.zeros(16, np.uint8)
+    with comm.phase("posted"):
+        h = comm.iallgather([x, x])
+    with comm.phase("waited"):
+        h.wait()
+    assert comm.bytes_for("posted") == 16 * 2
+    assert comm.bytes_for("waited") == 0
+
+
+def test_latencycomm_handles_mature_in_background():
+    """LatencyComm: a handle is not done before the latency elapses, and a
+    blocking call (post + wait) pays the full round trip.  The latency is
+    generous (250 ms) so a loaded CI runner's scheduling stall between the
+    post and the first poll cannot mature the handle early."""
+    comm = LatencyComm(2, latency_s=0.25)
+    t0 = time.monotonic()
+    h = comm.iallgather([1, 2])
+    if time.monotonic() - t0 < 0.2:  # poll promptly enough to be meaningful
+        assert not h.done()
+    time.sleep(0.3)
+    assert h.done()
+    assert h.wait() == [1, 2]  # already matured: no further sleep
+    assert time.monotonic() - t0 < 2.0
+    t0 = time.monotonic()
+    assert comm.allgather([3, 4]) == [3, 4]
+    assert time.monotonic() - t0 >= 0.25
 
 
 # --------------------------------------------------------------- wire codec
@@ -141,6 +190,37 @@ def test_partition_markers_fill_empty_ranks():
             continue
         own = bops.owner_rank(f.tree, f.keys, mt, mk)
         assert (own == p).all()
+
+
+def test_owner_rank_marker_cache_not_stale_after_mutation():
+    """Regression: the pad+upload memo must key on marker CONTENT.  The old
+    identity key (`id(mt), id(mk)`) kept serving the stale device copy when
+    a table was mutated in place — same identity, different content."""
+    rng = np.random.default_rng(3)
+    P = 5
+    mt = np.sort(rng.integers(0, 3, P)).astype(np.int32)
+    mk = rng.integers(0, 2**60, P).astype(np.uint64)
+    order = np.lexsort((mk, mt))
+    mt, mk = mt[order], mk[order]
+    t = rng.integers(0, 3, 64).astype(np.int32)
+    k = rng.integers(0, 2**60, 64).astype(np.uint64)
+
+    def brute(mt_, mk_):
+        le = (mt_[None, :] < t[:, None]) | (
+            (mt_[None, :] == t[:, None]) & (mk_[None, :] <= k[:, None]))
+        return np.maximum(le.sum(axis=1).astype(np.int32) - 1, 0)
+
+    with batch.use_backend("jnp"):
+        bops = batch.get_batch_ops(3)
+        np.testing.assert_array_equal(bops.owner_rank(t, k, mt, mk), brute(mt, mk))
+        # repartition in place: same identity, different content
+        mk2 = np.sort(rng.integers(0, 2**60, P).astype(np.uint64))
+        mt[:] = 1
+        mk[:] = mk2
+        np.testing.assert_array_equal(bops.owner_rank(t, k, mt, mk), brute(mt, mk))
+        # fresh arrays with equal content still hit the memo correctly
+        np.testing.assert_array_equal(
+            bops.owner_rank(t, k, mt.copy(), mk.copy()), brute(mt, mk))
 
 
 def test_count_global_with_comm():

@@ -1,0 +1,344 @@
+"""Async Comm surface: handle semantics, both DistComm transports offline
+(fake MPI module / fake KV client), wire-format parity between the bindings,
+and the completion-order-randomized Balance determinism property test.
+
+The DistComm transports are exercised WITHOUT a real runtime: a dict-backed
+fake of the jax.distributed KV client and an in-memory mailbox fake of the
+mpi4py surface the binding uses (Isend/Irecv over BYTE buffers + Request
+Waitall/Testall).  Posting both ranks before waiting either mirrors the
+nonblocking protocol exactly, single threaded.  The parity test pins the
+satellite bugfix: both bindings move exactly the `encode_payload` buffers
+(equal `wire_digest()`), never pickle.
+"""
+
+import hashlib
+import random
+import struct
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline: bounded random sampling
+    from _pbt import given, settings, strategies as st
+
+from repro.core import cmesh as C
+from repro.core import forest as F
+from repro.core.comm import (
+    CommHandle, DistComm, LatencyComm, SimComm, encode_payload,
+)
+
+
+# --------------------------------------------------------------- fake KV
+class FakeKVClient:
+    """Dict-backed stand-in for the jax.distributed coordination client.
+
+    Single-threaded harness contract: every rank posts before any rank
+    waits, so blocking gets always find their key (a miss is a protocol
+    bug, surfaced as KeyError — which is also what the `_kv_ready` poll
+    catches to report not-ready).  The real pre-cleanup barrier cannot
+    block here, so deletes tombstone instead of destroy: the value stays
+    readable for the rank that has not caught up yet (exactly what the
+    barrier guarantees two real processes), while `store` emptying still
+    proves every owner cleaned up its generation."""
+
+    def __init__(self):
+        self.store: dict = {}
+        self.graveyard: dict = {}
+        self.barriers: list[str] = []
+
+    def key_value_set(self, k, v):
+        self.store[k] = v
+
+    def key_value_set_bytes(self, k, v):
+        self.store[k] = bytes(v)
+
+    def blocking_key_value_get(self, k, timeout_ms):
+        return self.store[k] if k in self.store else self.graveyard[k]
+
+    blocking_key_value_get_bytes = blocking_key_value_get
+
+    def key_value_delete(self, k):
+        if k in self.store:
+            self.graveyard[k] = self.store.pop(k)
+
+    def wait_at_barrier(self, name, timeout_ms):
+        self.barriers.append(name)
+
+
+# -------------------------------------------------------------- fake MPI
+class _FakeReq:
+    def __init__(self, deliver=None, test=None):
+        self._deliver = deliver
+        self._test = test
+        self._done = deliver is None
+
+    def Wait(self):
+        if not self._done:
+            self._deliver()
+            self._done = True
+
+
+class _FakeRequestNS:
+    @staticmethod
+    def Waitall(reqs):
+        for r in reqs:
+            r.Wait()
+
+    @staticmethod
+    def Testall(reqs):
+        # MPI semantics: a successful Testall COMPLETES the requests
+        # (buffers are filled) — the DistComm poll path relies on it
+        if all(r._done or (r._test is not None and r._test()) for r in reqs):
+            for r in reqs:
+                r.Wait()
+            return True
+        return False
+
+
+class FakeMPIModule:
+    BYTE = "BYTE"
+    INT64_T = "INT64_T"
+    Request = _FakeRequestNS
+
+
+class FakeMPIComm:
+    """Mailbox-backed mpi4py communicator fake: messages keyed by
+    (dst, src, tag), FIFO per key, buffers copied at send time."""
+
+    def __init__(self, rank, size, mailbox):
+        self._rank, self._size, self._box = rank, size, mailbox
+
+    def Get_rank(self):
+        return self._rank
+
+    def Get_size(self):
+        return self._size
+
+    def Isend(self, spec, dest, tag):
+        buf, _ = spec
+        self._box.setdefault((dest, self._rank, tag), []).append(
+            np.array(buf, copy=True))
+        return _FakeReq()
+
+    def Irecv(self, spec, source, tag):
+        buf, _ = spec
+        key = (self._rank, source, tag)
+
+        def deliver():
+            q = self._box.get(key)
+            if not q:
+                raise RuntimeError(f"no message posted for {key}")
+            msg = q.pop(0)
+            buf[: len(msg)] = msg
+
+        return _FakeReq(deliver, test=lambda: bool(self._box.get(key)))
+
+
+def _mpi_pair():
+    box: dict = {}
+    return [
+        DistComm._testing_instance(
+            r, 2, mpi=FakeMPIComm(r, 2, box), MPI=FakeMPIModule)
+        for r in range(2)
+    ]
+
+
+def _kv_pair():
+    client = FakeKVClient()
+    return [DistComm._testing_instance(r, 2, client=client) for r in range(2)]
+
+
+PAYLOAD = [
+    {"a": np.arange(7, dtype=np.uint64) * 2**40, "b": [None, True, -5, 1.5]},
+    (np.zeros((0, 3), np.int32), b"\x00\xff", "text"),
+]
+
+
+def _expected_digest(blob_seq):
+    """Digest of (peer, len, bytes) records — the documented wire_digest
+    format — recomputed from raw encode_payload output."""
+    h = hashlib.sha256()
+    for q, blob in blob_seq:
+        h.update(struct.pack("<II", q, len(blob)))
+        h.update(blob)
+    return h.hexdigest()
+
+
+@pytest.mark.parametrize("pair_fn", [_mpi_pair, _kv_pair],
+                         ids=["mpi", "kv"])
+def test_distcomm_transport_collectives(pair_fn):
+    """allgather/alltoallv through each fake transport match SimComm, with
+    the nonblocking post-both-then-wait-both protocol."""
+    comms = pair_fn()
+    sim = SimComm(2)
+    xs = [PAYLOAD[0], PAYLOAD[1]]
+    hs = [comms[r].iallgather([xs[r]]) for r in range(2)]
+    want = sim.allgather(list(xs))
+    for r in range(2):
+        got = hs[r].wait()
+        assert len(got) == 2
+        np.testing.assert_array_equal(got[0]["a"], want[0]["a"])
+        np.testing.assert_array_equal(got[1][0], want[1][0])
+        assert got[1][1] == want[1][1] and got[1][2] == want[1][2]
+    rows = [[(r, q, np.full(3, 10 * r + q, np.int32)) for q in range(2)]
+            for r in range(2)]
+    hs = [comms[r].ialltoallv([rows[r]]) for r in range(2)]
+    wantv = sim.alltoallv(list(rows))
+    for r in range(2):
+        got = hs[r].wait()[0]
+        for p in range(2):
+            assert got[p][:2] == wantv[r][p][:2]
+            np.testing.assert_array_equal(got[p][2], wantv[r][p][2])
+
+
+def test_distcomm_wire_parity_between_bindings():
+    """The satellite bugfix pinned: mpi4py and KV-store bindings move
+    byte-identical wire payloads — the packed `encode_payload` buffers —
+    for the same collective sequence (equal running wire digests, matching
+    a digest recomputed from encode_payload directly: no pickle)."""
+    mpi_pair, kv_pair = _mpi_pair(), _kv_pair()
+    per_rank_expect = []
+    for r in range(2):
+        x = PAYLOAD[r]
+        row = [PAYLOAD[0], None]
+        blob_ag = encode_payload(x)
+        peer = 1 - r
+        per_rank_expect.append(_expected_digest(
+            [(peer, blob_ag), (peer, encode_payload(row[peer]))]))
+        for comms in (mpi_pair, kv_pair):
+            comms[r].iallgather([x])  # handles waited below, posts hash now
+    for comms in (mpi_pair, kv_pair):
+        hs = [comms[r].ialltoallv([[PAYLOAD[0], None]]) for r in range(2)]
+        for h in hs:
+            h.wait()
+    for r in range(2):
+        d_mpi = mpi_pair[r].wire_digest()
+        d_kv = kv_pair[r].wire_digest()
+        assert d_mpi == d_kv == per_rank_expect[r]
+
+
+def test_distcomm_mpi_poll_drives_progress():
+    """`done()` on the MPI binding is a real progress driver: False before
+    the peer posts, True once headers AND payloads are deliverable — and a
+    True poll means `wait()` will not block (payload receives are already
+    posted and complete)."""
+    comms = _mpi_pair()
+    h0 = comms[0].iallgather([7])
+    assert not h0.done()  # peer's header not sent yet
+    h1 = comms[1].iallgather([8])
+    assert h0.done() and h1.done()
+    assert h0.wait() == [7, 8] and h1.wait() == [7, 8]
+
+
+def test_distcomm_kv_poll_and_cleanup():
+    """`done()` is a real poll on the KV binding (false before the peer
+    posts, true after), and completed generations delete their keys."""
+    client = FakeKVClient()
+    c0, c1 = (DistComm._testing_instance(r, 2, client=client)
+              for r in range(2))
+    h0 = c0.iallgather([1])
+    assert not h0.done()  # rank 1 has not posted its targets index yet
+    h1 = c1.iallgather([2])
+    assert h0.done() and h1.done()
+    assert h0.wait() == [1, 2] and h1.wait() == [1, 2]
+    assert not client.store, f"leaked KV keys: {sorted(client.store)}"
+    assert len(client.barriers) == 2  # one per rank for the one generation
+
+
+def test_distcomm_namespace_isolates_keys():
+    """Two DistComm instances over one coordinator (overlapped + serialized
+    benchmark runs) must not collide: namespaces split keys and barriers."""
+    client = FakeKVClient()
+    a = [DistComm._testing_instance(r, 2, client=client, namespace="a.")
+         for r in range(2)]
+    b = [DistComm._testing_instance(r, 2, client=client, namespace="b.")
+         for r in range(2)]
+    ha = [a[r].iallgather([("A", r)]) for r in range(2)]
+    hb = [b[r].iallgather([("B", r)]) for r in range(2)]
+    assert ha[0].wait() == [("A", 0), ("A", 1)]
+    assert hb[0].wait() == [("B", 0), ("B", 1)]
+    ha[1].wait(), hb[1].wait()
+    assert {n.split("_")[2] for n in client.barriers} == {"a.0", "b.0"}
+
+
+# ------------------------------------------- completion-order determinism
+class JitterComm(SimComm):
+    """SimComm whose nonblocking handles mature out of order: waiting any
+    handle first completes a random subset of the other in-flight exchanges
+    (seeded), simulating a transport that delivers in arbitrary order.  The
+    collectives' RESULTS are unchanged — the shim checks that the overlapped
+    Balance protocol never depends on completion order."""
+
+    def __init__(self, num_ranks: int, seed: int = 0):
+        super().__init__(num_ranks)
+        self._rng = random.Random(seed)
+        self._inflight: list = []
+
+    def _defer(self, result) -> CommHandle:
+        box: dict = {}
+
+        def mature():
+            box["r"] = result
+            if mature in self._inflight:
+                self._inflight.remove(mature)
+
+        self._inflight.append(mature)
+
+        def complete():
+            others = [m for m in self._inflight if m is not mature]
+            self._rng.shuffle(others)
+            for m in others[: self._rng.randint(0, len(others))]:
+                m()
+            if "r" not in box:
+                mature()
+            return box["r"]
+
+        return CommHandle(complete, poll=lambda: "r" in box)
+
+    def _iallgather(self, per_local):
+        return self._defer(self._allgather(per_local))
+
+    def _ialltoallv(self, send):
+        return self._defer(self._alltoallv(send))
+
+
+def _jitter_fixture():
+    cm = C.cmesh_unit_cube(2)
+    comm = SimComm(2)
+    fs = F.new_uniform(2, 2, 1, comm, cmesh=cm)
+
+    def corner(tree, elems):
+        a = np.asarray(elems.anchor)
+        l = np.asarray(elems.level)
+        return ((np.asarray(tree) == 0) & (a.sum(1) == 0) & (l < 5)).astype(np.int32)
+
+    return [F.adapt(f, corner, recursive=True) for f in fs]
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_balance_completion_order_invariant(seed):
+    """Property: under randomized handle-completion interleavings the
+    overlapped balance is bit-identical to the serialized round loop."""
+    fs = _jitter_fixture()
+    out_j = F.balance([f for f in fs], JitterComm(2, seed), overlap=True)
+    out_s = F.balance([f for f in fs], SimComm(2), overlap=False)
+    for a, b in zip(out_j, out_s):
+        np.testing.assert_array_equal(a.keys, b.keys)
+        np.testing.assert_array_equal(a.level, b.level)
+        np.testing.assert_array_equal(a.anchor, b.anchor)
+        np.testing.assert_array_equal(a.stype, b.stype)
+        np.testing.assert_array_equal(a.tree, b.tree)
+
+
+def test_balance_latencycomm_matches_simcomm():
+    """LatencyComm changes timing only: balance over it is bit-identical to
+    SimComm, overlapped and serialized."""
+    fs = _jitter_fixture()
+    ref = F.balance([f for f in fs], SimComm(2))
+    for ov in (True, False):
+        out = F.balance([f for f in fs], LatencyComm(2, 1e-4), overlap=ov)
+        for a, b in zip(out, ref):
+            np.testing.assert_array_equal(a.keys, b.keys)

@@ -99,6 +99,75 @@ def test_balance_never_materializes_global_table():
     assert comm.bytes_for("balance") < one_table_round
 
 
+def test_balance_max_rounds_one_on_balanced_mesh():
+    """A mesh that is already 2:1 balanced must come back unchanged from
+    `balance(..., max_rounds=1)` — no `BalanceNonConvergence`: the round
+    budget bounds *refinement* rounds, and zero are needed."""
+    cm = C.cmesh_unit_cube(2)
+    comm = F.SimComm(2)
+    fs = F.new_uniform(2, 2, 2, comm, cmesh=cm)  # uniform == balanced
+    out = F.balance([f for f in fs], comm, max_rounds=1)
+    for a, b in zip(out, fs):
+        np.testing.assert_array_equal(a.keys, b.keys)
+        np.testing.assert_array_equal(a.level, b.level)
+    # single-rank world, single tree: same boundary semantics
+    lc = F.LocalComm()
+    fs1 = F.new_uniform(3, 1, 1, lc)
+    out1 = F.balance(fs1, lc, max_rounds=1)
+    np.testing.assert_array_equal(out1[0].keys, fs1[0].keys)
+
+
+def test_balance_round_budget_boundary_is_exact():
+    """Pin the converged-on-last-round vs exhausted boundary: with R* the
+    exact convergence round of the multi-round kuhn2_d2 ripple, max_rounds
+    = R* must succeed (bit-identical to the unconstrained run) and
+    max_rounds = R* - 1 must raise."""
+    d, mk_cmesh, base, deep, P = FIXTURES["kuhn2_d2"]
+    cm = mk_cmesh()
+    comm = F.SimComm(P)
+    fs = F.new_uniform(d, cm.num_trees, base, comm, cmesh=cm)
+    fs = [F.adapt(f, _corner_cb(deep), recursive=True) for f in fs]
+    ref = F.balance([f for f in fs], F.SimComm(P))
+    r_star = None
+    for r in range(1, 65):
+        try:
+            out = F.balance([f for f in fs], F.SimComm(P), max_rounds=r)
+        except F.BalanceNonConvergence as e:
+            assert e.rounds == r
+            continue
+        r_star = r
+        break
+    assert r_star is not None and r_star > 1, "fixture must need a ripple"
+    for a, b in zip(out, ref):
+        np.testing.assert_array_equal(a.keys, b.keys)
+        np.testing.assert_array_equal(a.level, b.level)
+    with pytest.raises(F.BalanceNonConvergence):
+        F.balance([f for f in fs], F.SimComm(P), max_rounds=r_star - 1)
+
+
+@pytest.mark.parametrize("name", ["kuhn2_d2", "single_tree_d3"])
+def test_balance_serialized_matches_overlapped(name):
+    """`overlap=False` (every collective completed at its post site — the
+    benchmark baseline) is bit-identical to the double-buffered loop, and
+    ships exactly the same bytes."""
+    d, mk_cmesh, base, deep, P = FIXTURES[name]
+    cm = mk_cmesh()
+    num_trees = cm.num_trees if cm is not None else 2
+    comm_o, comm_s = F.SimComm(P), F.SimComm(P)
+    fs = F.new_uniform(d, num_trees, base, comm_o, cmesh=cm)
+    fs = [F.adapt(f, _corner_cb(deep), recursive=True) for f in fs]
+    out_o = F.balance([f for f in fs], comm_o, overlap=True)
+    out_s = F.balance([f for f in fs], comm_s, overlap=False)
+    for a, b in zip(out_o, out_s):
+        np.testing.assert_array_equal(a.keys, b.keys)
+        np.testing.assert_array_equal(a.level, b.level)
+        np.testing.assert_array_equal(a.anchor, b.anchor)
+        np.testing.assert_array_equal(a.stype, b.stype)
+        np.testing.assert_array_equal(a.tree, b.tree)
+    assert comm_o.bytes_for("balance") == comm_s.bytes_for("balance")
+    assert comm_o.counters["balance"] == comm_s.counters["balance"]
+
+
 def test_balance_nonconvergence_diagnostics():
     """A refinement pattern whose ripple needs several rounds (deep corner
     in tree 0 of the glued 2-tree square, rippling across the tree face)

@@ -9,16 +9,13 @@ same pipeline under the in-process `SimComm(2)`: the SPMD forest code must
 produce bit-identical forests and ghost layers under either hosting.
 """
 
-import socket
-import subprocess
-import sys
-from pathlib import Path
-
 import pytest
 
-ROOT = Path(__file__).resolve().parents[2]
+from repro.launch.multiproc import run_ranks
 
 SCRIPT = r"""
+import hashlib
+import struct
 import sys
 import numpy as np
 import jax
@@ -28,15 +25,24 @@ jax.distributed.initialize(
     coordinator_address=f"localhost:{port}", num_processes=2, process_id=pid)
 
 from repro.core import forest as F
-from repro.core.comm import DistComm
+from repro.core.comm import DistComm, encode_payload
 
 comm = DistComm(timeout_s=120)
 assert comm.size == 2 and comm.rank == pid
 assert list(comm.local_ranks) == [pid]
 
 # surface sanity: allgather + alltoallv of arrays through the KV store
-got = comm.allgather([np.full(3, comm.rank, np.int32)])
+x = np.full(3, comm.rank, np.int32)
+got = comm.allgather([x])
 assert [int(g[0]) for g in got] == [0, 1]
+# wire-format parity: the transport moved EXACTLY the packed encode_payload
+# buffer (never pickle) — the digest recomputes from the codec alone
+blob = encode_payload(x)
+h = hashlib.sha256()
+h.update(struct.pack("<II", 1 - pid, len(blob)))
+h.update(blob)
+assert comm.wire_digest() == h.hexdigest(), "transport bytes != packed codec"
+print(f"rank {pid}: wire format OK", flush=True)
 recv = comm.alltoallv([[np.full(2, 10 * comm.rank + q, np.int32)
                         for q in range(2)]])
 assert [int(r[0]) for r in recv[0]] == [10 * 0 + pid, 10 * 1 + pid]
@@ -84,36 +90,11 @@ print(f"rank {pid}: pipeline OK", flush=True)
 """
 
 
-def _free_port() -> int:
-    with socket.socket() as s:
-        s.bind(("localhost", 0))
-        return s.getsockname()[1]
-
-
 @pytest.mark.slow
 def test_distcomm_two_process_pipeline():
-    port = _free_port()
-    env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
-           "JAX_PLATFORMS": "cpu"}
-    # both ranks must run CONCURRENTLY: they rendezvous at the coordinator
-    procs = [
-        subprocess.Popen(
-            [sys.executable, "-c", SCRIPT, str(port), str(pid)],
-            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=env,
-        )
-        for pid in range(2)
-    ]
-    outs = []
-    for pid, pr in enumerate(procs):
-        try:
-            out, err = pr.communicate(timeout=600)
-        except subprocess.TimeoutExpired:
-            for p2 in procs:
-                p2.kill()
-            raise
-        outs.append((out, err))
-    for pid, (out, err) in enumerate(outs):
-        assert procs[pid].returncode == 0, (pid, err[-3000:])
+    outs = run_ranks(SCRIPT, 2)
+    for pid, (out, _err) in enumerate(outs):
+        assert f"rank {pid}: wire format OK" in out
         assert f"rank {pid}: collectives OK" in out
         assert f"rank {pid}: pipeline OK" in out
     assert "rank 0: DistComm == SimComm" in outs[0][0]

@@ -1,0 +1,102 @@
+"""DistComm at P=4: four REAL processes over jax.distributed.
+
+The ROADMAP scale item beyond the 2-process binding proof: each subprocess
+initializes `jax.distributed` against a shared coordinator and runs the
+message-based pipeline on one rank of a FOUR-rank world, on the weak-scaling
+domain the `--suite scale` benchmark uses (a glued 2D Kuhn brick with one
+cube column per rank, corner refinement in every tree so each rank does the
+same work and the 2:1 ripple crosses every inter-cell face).
+
+Pinned here, per rank:
+  * overlapped (double-buffered) balance == serialized balance, bit for bit,
+    on separate namespaced DistComm instances sharing one coordinator;
+  * equal `wire_digest()` for the two runs — overlap changes scheduling,
+    never bytes;
+  * nonblocking handle semantics over the real KV transport (post, poll,
+    wait);
+and on rank 0: the gathered world equals the in-process `SimComm(4)` run of
+the same pipeline, element for element.
+"""
+
+import pytest
+
+from repro.launch.multiproc import run_ranks
+
+SCRIPT = r"""
+import sys
+import numpy as np
+import jax
+
+port, pid = sys.argv[1], int(sys.argv[2])
+P = 4
+jax.distributed.initialize(
+    coordinator_address=f"localhost:{port}", num_processes=P, process_id=pid)
+
+from repro.core import cmesh as C
+from repro.core import forest as F
+from repro.core.comm import DistComm
+from repro.launch.multiproc import WEAK_BRICK_SETUP
+
+comm = comm_ov = DistComm(timeout_s=240, namespace="ov.")
+comm_ser = DistComm(timeout_s=240, namespace="ser.")
+comm_h = DistComm(timeout_s=240, namespace="h.")  # keeps comm's digest pure
+assert comm.size == P and comm.rank == pid
+
+# nonblocking handles over the real KV transport: post, poll, wait
+h = comm_h.iallgather([np.full(2, comm_h.rank, np.int32)])
+h.done()  # poll is allowed (and harmless) before peers post
+got = h.wait()
+assert [int(g[0]) for g in got] == list(range(P))
+print(f"rank {pid}: handles OK", flush=True)
+
+level = 2
+exec(WEAK_BRICK_SETUP)  # the benchmark's weak-scaling domain: corner, cm, fs0
+assert len(fs0) == 1 and fs0[0].rank == pid
+
+fs = F.balance([f for f in fs0], comm, overlap=True)
+fs_ser = F.balance([f for f in fs0], comm_ser, overlap=False)
+np.testing.assert_array_equal(fs[0].keys, fs_ser[0].keys)
+np.testing.assert_array_equal(fs[0].level, fs_ser[0].level)
+np.testing.assert_array_equal(fs[0].tree, fs_ser[0].tree)
+assert comm.wire_digest() == comm_ser.wire_digest(), \
+    "overlap changed the wire bytes"
+print(f"rank {pid}: overlap == serialized", flush=True)
+
+gh = F.ghost(fs, comm)
+n_global = F.count_global(fs, comm)
+fs = F.partition(fs, comm)
+assert F.count_global(fs, comm) == n_global
+
+blob = (fs[0].anchor, fs[0].level, fs[0].stype, fs[0].tree,
+        gh[0]["anchor"], gh[0]["level"], gh[0]["tree"], gh[0]["owner"])
+world = comm.allgather([blob])
+if pid == 0:
+    sim = F.SimComm(P)
+    sfs = F.new_uniform(2, cm.num_trees, level, sim, cmesh=cm)
+    sfs = [F.adapt(f, corner, recursive=True) for f in sfs]
+    sfs = F.balance(sfs, sim)
+    sgh = F.ghost(sfs, sim)
+    sfs = F.partition(sfs, sim)
+    assert F.count_global(sfs) == n_global
+    for p in range(P):
+        a, l, b, t, ga, gl, gt, go = world[p]
+        np.testing.assert_array_equal(a, sfs[p].anchor)
+        np.testing.assert_array_equal(l, sfs[p].level)
+        np.testing.assert_array_equal(t, sfs[p].tree)
+        np.testing.assert_array_equal(ga, sgh[p]["anchor"])
+        np.testing.assert_array_equal(gl, sgh[p]["level"])
+        np.testing.assert_array_equal(go, sgh[p]["owner"])
+    print("rank 0: DistComm(P=4) == SimComm(4)", flush=True)
+comm.barrier()
+print(f"rank {pid}: pipeline OK", flush=True)
+"""
+
+
+@pytest.mark.slow
+def test_distcomm_four_process_pipeline():
+    outs = run_ranks(SCRIPT, 4)
+    for pid, (out, _err) in enumerate(outs):
+        assert f"rank {pid}: handles OK" in out
+        assert f"rank {pid}: overlap == serialized" in out
+        assert f"rank {pid}: pipeline OK" in out
+    assert "rank 0: DistComm(P=4) == SimComm(4)" in outs[0][0]
