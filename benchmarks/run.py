@@ -34,6 +34,14 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
                          weak scaling (P = 1/2/4, per-rank wire volume and
                          wall times; merges "overlap" and "scale" sections
                          into BENCH_forest.json)
+  repartition            dynamic repartition on the skewed-adapt Kuhn
+                         brick: imbalance before/after, migrated wire
+                         bytes, overlapped vs serialized wall time under
+                         simulated latency, plus REAL DistComm
+                         subprocesses (P=4, P=2 in tiny) asserting
+                         imbalance <= 1.1 and element-for-element identity
+                         with the single-rank oracle; merges a
+                         "repartition" section into BENCH_forest.json
   roofline_summary       reads results/dryrun/*.json (derived = roofline
                          fraction); run `python -m repro.launch.dryrun --all`
                          first
@@ -310,7 +318,7 @@ def forest_backends(tiny: bool = False):
     out_path = Path(__file__).resolve().parents[1] / name
     if out_path.exists():  # keep sibling suites' sections
         prev = json.loads(out_path.read_text())
-        for key in ("face_sweep", "overlap", "scale"):
+        for key in ("face_sweep", "overlap", "scale", "repartition"):
             if key in prev:
                 report[key] = prev[key]
     out_path.write_text(json.dumps(report, indent=2))
@@ -647,6 +655,184 @@ def scale(tiny: bool = False):
     row("scale_json", 0.0, str(out_path))
 
 
+_REPART_SCRIPT = r"""
+import json, sys, time
+import numpy as np
+import jax
+
+port, pid, P, out_path = (
+    sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), sys.argv[4])
+jax.distributed.initialize(
+    coordinator_address=f"localhost:{port}", num_processes=P, process_id=pid)
+
+from repro.core import cmesh as C
+from repro.core import forest as F
+from repro.core.comm import DistComm
+from repro.launch.multiproc import SKEW_BRICK_SETUP
+
+comm_ov = DistComm(timeout_s=240, namespace="rp.ov.")
+comm_ser = DistComm(timeout_s=240, namespace="rp.ser.")
+# housekeeping comm: keeps the ov/ser wire digests strictly migration
+# traffic (wire_digest is cumulative — reset_counters does not clear it)
+comm_h = DistComm(timeout_s=240, namespace="rp.h.")
+exec(SKEW_BRICK_SETUP)  # defines skew, cm, fs0 (the skewed-adapt domain)
+
+imb_before = F.load_imbalance(fs0, comm_h)
+# first runs warm the jit caches (and the KV path), second runs are timed
+F.repartition([f for f in fs0], comm_ov, overlap=True)
+F.repartition([f for f in fs0], comm_ser, overlap=False)
+comm_ov.reset_counters()
+comm_ser.reset_counters()
+t0 = time.perf_counter()
+out_ov = F.repartition([f for f in fs0], comm_ov, overlap=True)
+t_ov = time.perf_counter() - t0
+t0 = time.perf_counter()
+out_ser = F.repartition([f for f in fs0], comm_ser, overlap=False)
+t_ser = time.perf_counter() - t0
+np.testing.assert_array_equal(out_ov[0].keys, out_ser[0].keys)
+np.testing.assert_array_equal(out_ov[0].level, out_ser[0].level)
+np.testing.assert_array_equal(out_ov[0].tree, out_ser[0].tree)
+assert comm_ov.wire_digest() == comm_ser.wire_digest(), \
+    "overlap changed the migration bytes"
+imb_after = F.load_imbalance(out_ov, comm_ov)
+assert imb_after <= 1.1, f"imbalance {imb_after} > 1.1 after repartition"
+# the migrated layout keeps working: balance + ghost on fresh derived state
+bal = F.balance([f for f in out_ov], comm_ov)
+F.ghost(bal, comm_ov)
+
+rec = {
+    "rank": pid,
+    "elements_before": int(fs0[0].num_local),
+    "elements_after": int(out_ov[0].num_local),
+    "migrated_bytes": int(comm_ov.bytes_for("repartition")),
+    "t_overlap_s": t_ov,
+    "t_serialized_s": t_ser,
+}
+blob = (rec, out_ov[0].tree, out_ov[0].keys, out_ov[0].level,
+        out_ov[0].anchor, out_ov[0].stype)
+world = comm_ov.allgather([blob])
+if pid == 0:
+    # single-rank oracle: the same domain and skewed adapt under
+    # `LocalComm`, where repartition is the identity on the global leaf
+    # sequence — the migrated world must match it element for element
+    ns = {"np": np, "C": C, "F": F, "P": P, "comm_ov": F.LocalComm()}
+    exec(SKEW_BRICK_SETUP, ns)
+    ref = F.repartition(ns["fs0"], ns["comm_ov"])
+    for i, name in ((1, "tree"), (2, "keys"), (3, "level"),
+                    (4, "anchor"), (5, "stype")):
+        np.testing.assert_array_equal(
+            np.concatenate([w[i] for w in world]),
+            np.concatenate([getattr(f, name) for f in ref]))
+    print("rank 0: repartition == single-rank oracle", flush=True)
+    json.dump({"ranks": P,
+               "imbalance_before": float(imb_before),
+               "imbalance_after": float(imb_after),
+               "per_rank": [w[0] for w in world]},
+              open(out_path, "w"))
+comm_ov.barrier()
+print(f"rank {pid}: repartition OK", flush=True)
+"""
+
+
+def _run_repart_case(P: int) -> dict:
+    """Spawn P real DistComm processes on the skewed-adapt brick; collect
+    the per-rank record rank 0 aggregates after its oracle check."""
+    import os
+    import tempfile
+
+    from repro.launch.multiproc import run_ranks
+
+    fd, tmp_name = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    out_path = Path(tmp_name)
+    try:
+        outs = run_ranks(_REPART_SCRIPT, P, extra_args=(P, out_path))
+        for pid, (out, _err) in enumerate(outs):
+            assert f"rank {pid}: repartition OK" in out
+        assert "rank 0: repartition == single-rank oracle" in outs[0][0]
+        return json.loads(out_path.read_text())
+    finally:
+        out_path.unlink(missing_ok=True)
+
+
+def repartition(tiny: bool = False):
+    """Dynamic repartition on the skewed-adapt Kuhn brick.
+
+    Two parts, merged into BENCH_forest.json under "repartition":
+
+      in-process  `SimComm(4)` on the skewed brick (only the first cube
+                  cell refines, so the initial SFC split is ~P:1
+                  imbalanced): element imbalance before/after, migrated
+                  wire bytes, overlap == serialized identity, and the
+                  overlapped vs serialized wall time under `LatencyComm`
+                  (the weight-total allgather and the migration alltoallv
+                  each hide local packing/assembly work).
+
+      distcomm    REAL `DistComm` subprocesses over jax.distributed on
+                  the same domain — the tentpole's acceptance run: P = 4
+                  (2 in tiny), post-repartition imbalance <= 1.1, world
+                  element-for-element identical to the single-rank
+                  oracle, wire-digest parity between the overlapped and
+                  serialized migrations.
+    """
+    from repro.core import cmesh as Cm
+    from repro.core import forest as F
+    from repro.core.comm import LatencyComm
+    from repro.launch.multiproc import SKEW_BRICK_SETUP
+
+    P = 4
+    latency_s = 0.002 if tiny else 0.01
+    ns = {"np": np, "C": Cm, "F": F, "P": P, "comm_ov": F.SimComm(P)}
+    exec(SKEW_BRICK_SETUP, ns)
+    fs0, comm = ns["fs0"], ns["comm_ov"]
+    imb_before = F.load_imbalance(fs0, comm)
+    out = F.repartition([f for f in fs0], comm)
+    imb_after = F.load_imbalance(out, comm)
+    migrated = comm.bytes_for("repartition")
+    n = F.count_global(out)
+    assert imb_after <= 1.1, f"imbalance {imb_after} > 1.1 after repartition"
+    out_ser = F.repartition([f for f in fs0], F.SimComm(P), overlap=False)
+    identical = all(
+        np.array_equal(a.keys, b.keys) and np.array_equal(a.level, b.level)
+        and np.array_equal(a.tree, b.tree) for a, b in zip(out, out_ser))
+    assert identical, "overlapped repartition diverged from serialized"
+    us_ser = _time(lambda: F.repartition(
+        [f for f in fs0], LatencyComm(P, latency_s), overlap=False), n=3)
+    us_ovl = _time(lambda: F.repartition(
+        [f for f in fs0], LatencyComm(P, latency_s), overlap=True), n=3)
+    report = {
+        "d": 2, "domain": f"kuhn_brick_{P}x1", "ranks": P, "elements": n,
+        "imbalance_before": imb_before, "imbalance_after": imb_after,
+        "migrated_bytes": migrated, "latency_s": latency_s,
+        "serialized_us": us_ser, "overlapped_us": us_ovl,
+        "overlap_speedup": us_ser / us_ovl, "identical": identical,
+    }
+    row("repartition_imbalance", 0.0,
+        f"{imb_before:.2f}->{imb_after:.3f}:migrated_bytes={migrated}")
+    row("repartition_overlapped", us_ovl,
+        f"{us_ser / us_ovl:.2f}x_vs_serialized:identical={int(identical)}")
+
+    Pw = 2 if tiny else 4
+    rec = _run_repart_case(Pw)
+    assert rec["imbalance_after"] <= 1.1, rec
+    mig = sum(r["migrated_bytes"] for r in rec["per_rank"])
+    t_ov = max(r["t_overlap_s"] for r in rec["per_rank"])
+    t_ser = max(r["t_serialized_s"] for r in rec["per_rank"])
+    rec["oracle_identical"] = True  # asserted inside the rank-0 subprocess
+    report["distcomm"] = rec
+    row(f"repartition_distcomm_P{Pw}", t_ov * 1e6,
+        f"imbalance={rec['imbalance_before']:.2f}->"
+        f"{rec['imbalance_after']:.3f}:migrated_bytes={mig}"
+        f":serialized_s={t_ser:.3f}")
+
+    name = "BENCH_forest_tiny.json" if tiny else "BENCH_forest.json"
+    out_path = Path(__file__).resolve().parents[1] / name
+    data = json.loads(out_path.read_text()) if out_path.exists() else {}
+    data["repartition"] = report
+    out_path.write_text(json.dumps(data, indent=2))
+    row("repartition_json", 0.0, str(out_path))
+
+
 def roofline_summary():
     d = Path(__file__).resolve().parents[1] / "results" / "dryrun"
     if not d.exists():
@@ -674,6 +860,7 @@ SUITES = {
     "face_sweep": face_sweep,
     "multitree": multitree,
     "scale": scale,
+    "repartition": repartition,
     "roofline_summary": lambda tiny: roofline_summary(),
 }
 

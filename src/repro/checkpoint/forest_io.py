@@ -22,6 +22,7 @@ from repro.core import forest as forest_mod
 from repro.core.cmesh import Cmesh
 from repro.core.comm import Comm
 from repro.core.forest import Forest, partition_markers
+from repro.core.placement import target_ranks_np
 from repro.core.types import Simplex, pack
 
 from .store import restore_checkpoint, save_checkpoint
@@ -83,13 +84,20 @@ def save_forest(path, forests: list[Forest], comm: Comm, *, step: int = 0):
 
 
 def load_forest(path, comm: Comm, *, step: int | None = None,
-                cmesh: Cmesh | None = None) -> list[Forest]:
+                cmesh: Cmesh | None = None,
+                weights: np.ndarray | None = None) -> list[Forest]:
     """Restore a forest checkpoint onto `comm` — elastically.
 
     Same rank count as the writer: the saved markers reproduce the original
     partition bit for bit.  Different rank count: the global SFC sequence is
-    re-split into `comm.size` equal contiguous runs.  Returns one `Forest`
-    per local rank (all of them under `SimComm`)."""
+    re-split into `comm.size` equal contiguous runs.  With `weights` (one
+    nonnegative float per GLOBAL element, in the saved SFC order) the
+    restore splits by the paper's weighted Partition rule instead —
+    overriding the marker split even at equal rank count, so a restore can
+    land directly on the rebalanced layout `forest.repartition` would reach
+    (identical boundaries: both routes go through
+    `placement.target_ranks_np` over the same prefix sums).  Returns one
+    `Forest` per local rank (all of them under `SimComm`)."""
     like = {k: np.zeros(0, np.uint8) for k in
             ("anchor", "level", "stype", "tree", "marker_tree",
              "marker_key_hi", "marker_key_lo")}
@@ -103,7 +111,14 @@ def load_forest(path, comm: Comm, *, step: int | None = None,
     tree = np.asarray(tree_payload["tree"], np.int32).reshape(-1)
     N = len(level)
     P = comm.size
-    if P == int(meta["num_ranks"]):
+    if weights is not None:
+        w = np.asarray(weights, np.float64).reshape(-1)
+        if len(w) != N:
+            raise ValueError(
+                f"need one weight per saved element: {len(w)} vs {N}")
+        t = target_ranks_np(np.cumsum(w) - w / 2.0, P, float(w.sum()))
+        bounds = [int(b) for b in np.searchsorted(t, np.arange(P + 1))]
+    elif P == int(meta["num_ranks"]):
         # exact restore: split at the saved markers
         mt = np.asarray(tree_payload["marker_tree"], np.int64).reshape(-1)
         mk = (np.asarray(tree_payload["marker_key_hi"], np.uint64).reshape(-1)

@@ -24,8 +24,10 @@ the blocking call would (the blocking calls are literally post + wait).
 point-to-point exchanges or KV-store writes and only blocks in `wait()`,
 and `LatencyComm` simulates round-trip time so overlap can be measured
 in-process.  Handles of one communicator must be waited in the order they
-were posted, the same on every rank (the SPMD forest code does this; the
-KV transport's cleanup barrier relies on it).
+were posted, the same on every rank (the SPMD forest code does this; MPI
+tag/collective matching relies on it).  A handle that polls `done() ==
+True` has a free `wait()`: the data is cached and no transport round-trips
+remain.
 
 Payloads are nested tuples/lists/dicts of numpy arrays and scalars.  The
 base class meters every collective *at post time*: bytes that would cross a
@@ -204,10 +206,11 @@ class CommHandle:
 
     `wait()` blocks until delivery and returns the collective's result —
     idempotent, later calls return the same object.  `done()` polls for
-    completion without blocking.  Handles must be waited in posting order,
-    identically on every rank (the KV transport's per-generation cleanup
-    barrier and MPI tag matching rely on it); the SPMD forest code always
-    does.
+    completion without blocking and doubles as the transport's progress
+    driver; once it returns True, `wait()` performs no further transport
+    round-trips.  Handles must be waited in posting order, identically on
+    every rank (MPI tag and collective matching rely on it); the SPMD
+    forest code always does.
     """
 
     __slots__ = ("_complete", "_poll", "_result", "_done")
@@ -227,9 +230,9 @@ class CommHandle:
 
     def done(self) -> bool:
         """True once the collective's data is available — `wait()` will not
-        block on peers' payloads (a binding may still synchronize transport
-        cleanup inside `wait()`, see DistComm's KV barrier).  A deferred
-        handle whose binding supplied no poll conservatively reports False."""
+        block on peers' payloads and performs no transport round-trips.  A
+        deferred handle whose binding supplied no poll conservatively
+        reports False."""
         if self._done:
             return True
         if self._poll is not None:
@@ -425,27 +428,32 @@ class DistComm(Comm):
 
     Binding order: an initialized mpi4py world with more than one process
     wins; otherwise `jax.distributed.initialize()` must have been called and
-    payloads travel through the coordination service's key-value store
-    (set/get/delete per generation, with a barrier before cleanup).  Either
-    way the surface is identical to `SimComm` with `local_ranks == [rank]`,
-    so the forest algorithms run unmodified.
+    payloads travel through the coordination service's key-value store (one
+    key per peer per generation, deleted by its single reader right after
+    the fetch — no cleanup barrier anywhere).  Either way the surface is
+    identical to `SimComm` with `local_ranks == [rank]`, so the forest
+    algorithms run unmodified.
 
     BOTH transports move exactly the `encode_payload` buffers — the mpi4py
-    binding ships them as MPI.BYTE point-to-point pairs (length header, then
-    payload), never mpi4py's pickling object collectives — so the bindings
-    are byte-for-byte interchangeable; `wire_digest()` exposes a running
-    sha256 over every posted payload blob for tests to pin that.
+    binding ships alltoallv rows as MPI.BYTE point-to-point pairs (length
+    header, then payload) and allgathers as native Iallgather+Iallgatherv
+    over the same packed bytes, never mpi4py's pickling object collectives —
+    so the bindings are byte-for-byte interchangeable; `wire_digest()`
+    exposes a running sha256 over every posted payload blob for tests to
+    pin that.
 
     Nonblocking semantics: `iallgather`/`ialltoallv` *post* (KV writes are
-    issued, MPI sends and header receives are in flight) and return a
-    `CommHandle`; the blocking receive side runs in `wait()`, and `done()`
-    polls (an MPI progress driver that posts the payload receives once the
-    headers land, or a zero-timeout KV probe).  Handles must be waited in
-    posting order, identically on every rank.  `namespace` isolates several
-    DistComm instances sharing one runtime (e.g. an overlapped and a
-    serialized benchmark run): it prefixes the KV keys and barrier names,
-    and gives the mpi4py binding its own duplicated communicator so
-    interleaved exchanges cannot cross-match by tag.
+    issued, MPI sends/collectives and header receives are in flight) and
+    return a `CommHandle`; the blocking receive side runs in `wait()`, and
+    `done()` polls (an MPI progress driver that posts the payload
+    receives/collectives once the size headers land, or a short-timeout KV
+    probe that caches what it fetches).  Once `done()` is True, `wait()` is
+    free: no KV round-trips, no blocking MPI calls.  Handles must be waited
+    in posting order, identically on every rank.  `namespace` isolates
+    several DistComm instances sharing one runtime (e.g. an overlapped and
+    a serialized benchmark run): it prefixes the KV keys, and gives the
+    mpi4py binding its own duplicated communicator so interleaved exchanges
+    cannot cross-match by tag or collective order.
     """
 
     def __init__(self, timeout_s: float = 120.0, namespace: str = ""):
@@ -547,70 +555,68 @@ class DistComm(Comm):
         return self._wire.hexdigest()
 
     # -- KV-store transport ------------------------------------------------
+    # Every exchange posts one payload key per peer (both collectives build
+    # a full outbox — an empty alltoallv row still encodes as b"N"), so the
+    # key's presence IS the posted signal: no targets index, and cleanup is
+    # reader-side (rank q deletes `p>q` right after fetching it — exactly
+    # one reader per key, so no barrier is needed anywhere).  Fetched blobs
+    # are cached in the exchange state, which is what keeps cleanup off the
+    # `wait()` critical path: once the poll has seen every peer
+    # (`done() == True`), `wait()` touches the KV store zero times.
     def _key(self, gen: int, tag: str, rest: str) -> str:
         return f"repro_comm/{self._ns}{gen}/{tag}/{rest}"
 
     def _kv_post(self, outbox: dict[int, bytes], tag: str):
-        """Publish outbox[q] for each rank q (payloads first, then the
-        targets index, so a visible index implies fetchable payloads)."""
+        """Publish outbox[q] for each rank q; the exchange state carries the
+        inbox cache that the poll and the wait fill cooperatively."""
         c = self._client
         gen = self._gen
         self._gen += 1
         me = self.rank
         for q, blob in outbox.items():
             c.key_value_set_bytes(self._key(gen, tag, f"{me}>{q}"), blob)
-        targets = ",".join(str(q) for q in sorted(outbox))
-        c.key_value_set(self._key(gen, tag, f"targets/{me}"), targets or "-")
-        return (gen, tag, frozenset(outbox))
+        return {"gen": gen, "tag": tag, "inbox": {}}
+
+    def _kv_fetch(self, st, p: int, timeout_ms: int) -> None:
+        """Fetch-and-delete peer p's payload into the inbox cache (raises on
+        timeout; the single-reader delete is this exchange's only cleanup)."""
+        c = self._client
+        key = self._key(st["gen"], st["tag"], f"{p}>{self.rank}")
+        st["inbox"][p] = c.blocking_key_value_get_bytes(key, timeout_ms)
+        c.key_value_delete(key)
 
     def _kv_complete(self, st) -> dict[int, bytes]:
-        """Blocking receive side: fetch every peer's payload, then barrier
-        and delete this generation's keys.  Returns {p: payload_from_p}."""
-        gen, tag, sent = st
-        c = self._client
-        me = self.rank
-        inbox: dict[int, bytes] = {}
+        """Blocking receive side: fetch whatever the poll has not already
+        cached.  Returns {p: payload_from_p} — no barrier, no KV traffic at
+        all when the handle already polled done."""
         for p in range(self.size):
-            if p == me:
-                continue
-            t = c.blocking_key_value_get(
-                self._key(gen, tag, f"targets/{p}"), self._timeout_ms)
-            if t != "-" and str(me) in t.split(","):
-                inbox[p] = c.blocking_key_value_get_bytes(
-                    self._key(gen, tag, f"{p}>{me}"), self._timeout_ms)
-        c.wait_at_barrier(f"repro_comm_{self._ns}{gen}_{tag}", self._timeout_ms)
-        for q in sent:
-            c.key_value_delete(self._key(gen, tag, f"{me}>{q}"))
-        c.key_value_delete(self._key(gen, tag, f"targets/{me}"))
-        return inbox
+            if p != self.rank and p not in st["inbox"]:
+                self._kv_fetch(st, p, self._timeout_ms)
+        return st["inbox"]
 
     def _kv_ready(self, st) -> bool:
-        """Poll: every peer's targets index visible (payloads are set before
-        the index, so visibility implies the data is fetchable).  NOTE: a
-        True poll means the *data* side of `wait()` will not block; the
-        per-generation cleanup barrier inside `_kv_complete` still
-        synchronizes with peers that have not reached their own wait yet."""
-        gen, tag, _ = st
-        c = self._client
-        try:
-            for p in range(self.size):
-                if p != self.rank:
-                    c.blocking_key_value_get(
-                        self._key(gen, tag, f"targets/{p}"), 1)
-        except Exception:  # noqa: BLE001 - any miss/timeout means not ready
-            return False
+        """Poll-as-progress-driver: probe missing peers with a zero-ish
+        timeout and cache (and clean up) whatever has landed, so a True
+        return means `wait()` is KV-free."""
+        for p in range(self.size):
+            if p == self.rank or p in st["inbox"]:
+                continue
+            try:
+                self._kv_fetch(st, p, 1)
+            except Exception:  # noqa: BLE001 - miss/timeout: not posted yet
+                return False
         return True
 
     # -- mpi4py transport --------------------------------------------------
-    # Point-to-point packed exchange: each peer gets an 8-byte length header
-    # then the `encode_payload` blob, both as MPI.BYTE-class buffers (no
-    # pickle anywhere).  Sends and header receives post immediately; payload
-    # receives post once the headers have sized their buffers (in wait() or
-    # the poll).  One shape serves allgather and alltoallv alike, mirrors
-    # the KV transport byte for byte, and is what the offline fake-MPI
-    # tests drive; the cost is P-1 messages per rank even for allgather —
-    # switching that path to native Iallgatherv over the same buffers is
-    # the P>=16 upgrade noted in ROADMAP's multi-host item.
+    # Point-to-point packed exchange (alltoallv): each peer gets an 8-byte
+    # length header then the `encode_payload` blob, both as MPI.BYTE-class
+    # buffers (no pickle anywhere).  Sends and header receives post
+    # immediately; payload receives post once the headers have sized their
+    # buffers (in wait() or the poll).  Allgather does NOT use this path:
+    # replicating one blob to P-1 peers as point-to-point pairs is O(P^2)
+    # messages across the world, so it rides the native nonblocking
+    # collectives below instead — same `encode_payload` buffers, same wire
+    # digest.
     def _mpi_post(self, outbox: dict[int, bytes]):
         MPI, w = self._MPI, self._mpi
         gen = self._gen
@@ -664,6 +670,59 @@ class DistComm(Comm):
         return (bool(MPI.Request.Testall(st["preq"]))
                 and bool(MPI.Request.Testall(st["sreqs"])))
 
+    # Native-collective allgather: one Iallgather of the int64 blob sizes,
+    # then one Iallgatherv of the payload bytes sized by it.  The payload
+    # collective can only post once the sizes are in, and MPI matches
+    # nonblocking collectives by POSTING ORDER on the communicator, so
+    # pending payload posts drain through a FIFO — every rank posts them in
+    # the same order no matter which handle's poll or wait drives progress.
+    def _mpi_iag_post(self, blob: bytes):
+        MPI, w = self._MPI, self._mpi
+        hdr = np.array([len(blob)], np.int64)
+        counts = np.zeros(self.size, np.int64)
+        sbuf = np.frombuffer(blob, np.uint8) if blob else np.zeros(0, np.uint8)
+        st = {"hdr": hdr, "counts": counts, "sbuf": sbuf,
+              "hreq": w.Iallgather([hdr, MPI.INT64_T], [counts, MPI.INT64_T])}
+        if not hasattr(self, "_iag_fifo"):
+            self._iag_fifo = []
+        self._iag_fifo.append(st)
+        return st
+
+    def _mpi_iag_drain(self) -> None:
+        """Post payload Iallgatherv's for every pending exchange whose size
+        collective has completed, in FIFO order; stop at the first that has
+        not (posting a later one first would mismatch across ranks)."""
+        MPI, w = self._MPI, self._mpi
+        while self._iag_fifo:
+            st = self._iag_fifo[0]
+            if not MPI.Request.Testall([st["hreq"]]):
+                return
+            counts = st["counts"]
+            displs = np.zeros(self.size, np.int64)
+            np.cumsum(counts[:-1], out=displs[1:])
+            st["rbuf"] = np.empty(int(counts.sum()), np.uint8)
+            st["displs"] = displs
+            st["preq"] = w.Iallgatherv(
+                [st["sbuf"], MPI.BYTE],
+                [st["rbuf"], counts.tolist(), displs.tolist(), MPI.BYTE])
+            self._iag_fifo.pop(0)
+
+    def _mpi_iag_complete(self, st) -> dict[int, bytes]:
+        MPI = self._MPI
+        if "preq" not in st:
+            MPI.Request.Waitall([st["hreq"]])
+            self._mpi_iag_drain()
+            assert "preq" in st, "iallgather waited out of posting order"
+        MPI.Request.Waitall([st["preq"]])
+        d, c, buf = st["displs"], st["counts"], st["rbuf"]
+        return {p: buf[int(d[p]):int(d[p]) + int(c[p])].tobytes()
+                for p in range(self.size)}
+
+    def _mpi_iag_test(self, st) -> bool:
+        self._mpi_iag_drain()
+        return ("preq" in st
+                and bool(self._MPI.Request.Testall([st["preq"]])))
+
     # -- collectives -------------------------------------------------------
     def barrier(self) -> None:
         if self._mpi is not None:
@@ -688,6 +747,21 @@ class DistComm(Comm):
         x = per_local[0]
         blob = encode_payload(x)
         outbox = {q: blob for q in range(self.size) if q != self.rank}
+        if self._mpi is not None:
+            # native collective path: O(log P) fan-out instead of P-1 p2p
+            # pairs per rank, over the SAME per-peer logical blobs — the
+            # digest folds them exactly as the KV binding does, so
+            # `wire_digest()` parity across bindings is preserved.
+            self._wire_update(outbox)
+            st = self._mpi_iag_post(blob)
+
+            def deliver():
+                parts = self._mpi_iag_complete(st)
+                out = [decode_payload(parts[p]) for p in range(self.size)]
+                out[self.rank] = x
+                return out
+
+            return CommHandle(deliver, poll=lambda: self._mpi_iag_test(st))
         complete, poll = self._post(outbox, "ag")
 
         def deliver():

@@ -24,6 +24,7 @@ import numpy as np
 
 __all__ = [
     "target_ranks",
+    "target_ranks_np",
     "partition_offsets",
     "expert_placement",
     "document_partition",
@@ -45,6 +46,31 @@ def target_ranks(weights: jax.Array, num_ranks: int) -> jax.Array:
     t = jnp.clip(t, 0, num_ranks - 1)
     # cumulative max keeps assignment contiguous under zero-weight runs
     return jax.lax.associative_scan(jnp.maximum, t)
+
+
+def target_ranks_np(cum_mid: np.ndarray, num_ranks: int,
+                    total: float) -> np.ndarray:
+    """The same Partition rule in its SPMD host-numpy form, over *global*
+    midpoint prefix sums: `cum_mid[i] = W_{<i} + w_i/2` where `W_{<i}`
+    counts every element before i on ANY rank (the caller adds its rank's
+    global weight prefix) and `total` is the world weight sum.
+
+    Every rank evaluating its own slice of `cum_mid` against the same
+    `total` reproduces exactly the assignment a single rank would compute
+    over the concatenated weights — this is what `forest.repartition` and
+    the weighted checkpoint restore route through.  float64, and the
+    trailing cumulative max keeps targets monotone so each destination
+    rank's elements form one contiguous run.  A rank whose weight share
+    rounds to zero elements simply never appears in the output (the
+    empty-rank case `forest.partition_markers` fills in).
+
+    Returns int64 (n,) ascending target ranks in [0, num_ranks).
+    """
+    cum = np.asarray(cum_mid, np.float64)
+    t = np.minimum((cum * num_ranks / max(total, 1e-300)).astype(np.int64),
+                   num_ranks - 1)
+    t = np.maximum(t, 0)
+    return np.maximum.accumulate(t)
 
 
 def partition_offsets(weights: jax.Array, num_ranks: int) -> jax.Array:

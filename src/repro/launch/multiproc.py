@@ -16,7 +16,7 @@ import subprocess
 import sys
 from pathlib import Path
 
-__all__ = ["WEAK_BRICK_SETUP", "free_port", "run_ranks"]
+__all__ = ["SKEW_BRICK_SETUP", "WEAK_BRICK_SETUP", "free_port", "run_ranks"]
 
 _ROOT = Path(__file__).resolve().parents[3]
 
@@ -39,6 +39,25 @@ def corner(tree, elems, cap=level + 2):
 cm = C.cmesh_brick(2, (P, 1))   # one Kuhn cell column per rank
 fs0 = F.new_uniform(2, cm.num_trees, level, comm_ov, cmesh=cm)
 fs0 = [F.adapt(fs0[0], corner, recursive=True)]
+"""
+
+# The shared skewed-adapt scenario of the dynamic-repartition runs (the
+# P=4 substrate acceptance test, the --suite repartition benchmark ranks,
+# and the rank-0 single-rank oracle): the same Kuhn brick, but only the
+# FIRST cube cell (trees 0 and 1) refines — to level 4 from a level-2
+# uniform start — so the initial SFC split leaves almost all elements on
+# the low ranks and `repartition` has real migration to do.  `exec` it
+# with `np`, `C`, `F`, `P` (the brick width, == world size in subprocess
+# runs), and `comm_ov` bound; it defines `skew`, `cm`, and the adapted
+# forest list `fs0` (one entry per local rank).
+SKEW_BRICK_SETUP = r"""
+def skew(tree, elems, cap=4):
+    l = np.asarray(elems.level)
+    return ((np.asarray(tree) < 2) & (l < cap)).astype(np.int32)
+
+cm = C.cmesh_brick(2, (P, 1))   # one Kuhn cell column per rank
+fs0 = F.new_uniform(2, cm.num_trees, 2, comm_ov, cmesh=cm)
+fs0 = [F.adapt(f, skew, recursive=True) for f in fs0]
 """
 
 

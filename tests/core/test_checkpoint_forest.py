@@ -77,6 +77,61 @@ def test_restore_with_empty_ranks_reproduces_markers(tmp_path):
         np.testing.assert_array_equal(a.keys, b.keys)
 
 
+@pytest.mark.parametrize("p_save,p_load", [(4, 2), (2, 4), (4, 4)])
+def test_restore_then_repartition_round_trip(tmp_path, p_save, p_load):
+    """The elasticity loop behind a rank-count change in a long-running
+    service: save at P, restore at P', `repartition` on measured weights —
+    the global leaf sequence survives every hop, the final layout is
+    weight-balanced, and the forest keeps working."""
+    comm = F.SimComm(p_save)
+    fs = _adapted_forest(comm)
+    save_forest(tmp_path, fs, comm, step=0)
+    comm2 = F.SimComm(p_load)
+    out = load_forest(tmp_path, comm2)
+    ws = [1.0 + (f.keys % np.uint64(5)).astype(np.float64) for f in out]
+    out = F.repartition(out, comm2, weights=ws)
+    assert F.count_global(out) == F.count_global(fs)
+    assert F.validate(out)
+    np.testing.assert_array_equal(
+        np.concatenate([f.keys for f in out]),
+        np.concatenate([f.keys for f in fs]))
+    np.testing.assert_array_equal(
+        np.concatenate([f.tree for f in out]),
+        np.concatenate([f.tree for f in fs]))
+    loads = [float(w.sum()) for w in
+             [1.0 + (f.keys % np.uint64(5)).astype(np.float64) for f in out]]
+    assert max(loads) / (sum(loads) / p_load) < 1.5
+    out = F.balance(out, comm2)
+    gh = F.ghost(out, comm2)
+    assert F.validate(out, gh)
+
+
+def test_weighted_restore_matches_repartition(tmp_path):
+    """`load_forest(weights=...)` lands directly on the layout that a plain
+    restore followed by `repartition` reaches: identical per-rank slices
+    (both routes split via `placement.target_ranks_np` over the same
+    global prefix sums)."""
+    comm = F.SimComm(4)
+    fs = _adapted_forest(comm)
+    save_forest(tmp_path, fs, comm, step=0)
+    comm2 = F.SimComm(2)
+    plain = load_forest(tmp_path, comm2)
+    w_global = 1.0 + (np.concatenate([f.keys for f in plain])
+                      % np.uint64(7)).astype(np.float64)
+    direct = load_forest(tmp_path, F.SimComm(2), weights=w_global)
+    bounds = np.cumsum([0] + [f.num_local for f in plain])
+    via_repart = F.repartition(
+        plain, comm2,
+        weights=[w_global[a:b] for a, b in zip(bounds[:-1], bounds[1:])])
+    for a, b in zip(direct, via_repart):
+        assert a.num_local == b.num_local
+        np.testing.assert_array_equal(a.keys, b.keys)
+        np.testing.assert_array_equal(a.anchor, b.anchor)
+        np.testing.assert_array_equal(a.stype, b.stype)
+        np.testing.assert_array_equal(a.tree, b.tree)
+    assert F.validate(direct)
+
+
 def test_restore_carries_cmesh(tmp_path):
     """The coarse mesh is a derived structure: the loader re-attaches it and
     cross-tree ghost works on the restored forest."""

@@ -37,33 +37,41 @@ class FakeKVClient:
     Single-threaded harness contract: every rank posts before any rank
     waits, so blocking gets always find their key (a miss is a protocol
     bug, surfaced as KeyError — which is also what the `_kv_ready` poll
-    catches to report not-ready).  The real pre-cleanup barrier cannot
-    block here, so deletes tombstone instead of destroy: the value stays
-    readable for the rank that has not caught up yet (exactly what the
-    barrier guarantees two real processes), while `store` emptying still
-    proves every owner cleaned up its generation."""
+    catches to report not-ready).  Deletes tombstone instead of destroy
+    (the graveyard), so a late reader of an already-cleaned key is a
+    visible protocol bug rather than silent data loss — with the
+    reader-side cleanup each payload key has exactly ONE reader, so the
+    graveyard must never actually be read from.  `calls` counts every
+    client round-trip, which is what the wait-after-done regression test
+    measures."""
 
     def __init__(self):
         self.store: dict = {}
         self.graveyard: dict = {}
         self.barriers: list[str] = []
+        self.calls = 0
 
     def key_value_set(self, k, v):
+        self.calls += 1
         self.store[k] = v
 
     def key_value_set_bytes(self, k, v):
+        self.calls += 1
         self.store[k] = bytes(v)
 
     def blocking_key_value_get(self, k, timeout_ms):
+        self.calls += 1
         return self.store[k] if k in self.store else self.graveyard[k]
 
     blocking_key_value_get_bytes = blocking_key_value_get
 
     def key_value_delete(self, k):
+        self.calls += 1
         if k in self.store:
             self.graveyard[k] = self.store.pop(k)
 
     def wait_at_barrier(self, name, timeout_ms):
+        self.calls += 1
         self.barriers.append(name)
 
 
@@ -104,11 +112,16 @@ class FakeMPIModule:
 
 
 class FakeMPIComm:
-    """Mailbox-backed mpi4py communicator fake: messages keyed by
-    (dst, src, tag), FIFO per key, buffers copied at send time."""
+    """Mailbox-backed mpi4py communicator fake: p2p messages keyed by
+    (dst, src, tag), FIFO per key, buffers copied at send time; native
+    nonblocking collectives as shared slots keyed by each rank's posting
+    counter (MPI matches collectives by posting order), completing once
+    every rank has contributed.  A Wait on a collective some rank has not
+    joined raises — the single-threaded analogue of a deadlock."""
 
     def __init__(self, rank, size, mailbox):
         self._rank, self._size, self._box = rank, size, mailbox
+        self._ncoll = 0
 
     def Get_rank(self):
         return self._rank
@@ -134,6 +147,40 @@ class FakeMPIComm:
             buf[: len(msg)] = msg
 
         return _FakeReq(deliver, test=lambda: bool(self._box.get(key)))
+
+    def _collective(self, sendbuf, deliver_all):
+        slot = self._box.setdefault(("coll", self._ncoll), {})
+        self._ncoll += 1
+        slot[self._rank] = np.array(sendbuf, copy=True)
+
+        def deliver():
+            if len(slot) < self._size:
+                raise RuntimeError(
+                    "collective waited before every rank posted it "
+                    "(single-threaded fake: drive the peers' polls first)")
+            deliver_all(slot)
+
+        return _FakeReq(deliver, test=lambda: len(slot) == self._size)
+
+    def Iallgather(self, sendspec, recvspec):
+        sbuf, rbuf = sendspec[0], recvspec[0]
+        n = len(sbuf)
+
+        def deliver_all(slot):
+            for r, part in slot.items():
+                rbuf[r * n:(r + 1) * n] = part
+
+        return self._collective(sbuf, deliver_all)
+
+    def Iallgatherv(self, sendspec, recvspec):
+        sbuf = sendspec[0]
+        rbuf, counts, displs, _ = recvspec
+
+        def deliver_all(slot):
+            for r, part in slot.items():
+                rbuf[displs[r]:displs[r] + counts[r]] = part
+
+        return self._collective(sbuf, deliver_all)
 
 
 def _mpi_pair():
@@ -175,6 +222,12 @@ def test_distcomm_transport_collectives(pair_fn):
     sim = SimComm(2)
     xs = [PAYLOAD[0], PAYLOAD[1]]
     hs = [comms[r].iallgather([xs[r]]) for r in range(2)]
+    # the MPI allgather is a two-phase native collective (sizes, then
+    # payload): each rank's poll posts its payload contribution once the
+    # size collective is in, so drive both polls before waiting either —
+    # the single-threaded fake cannot block for a peer's progress
+    for h in hs:
+        h.done()
     want = sim.allgather(list(xs))
     for r in range(2):
         got = hs[r].wait()
@@ -221,35 +274,78 @@ def test_distcomm_wire_parity_between_bindings():
 
 def test_distcomm_mpi_poll_drives_progress():
     """`done()` on the MPI binding is a real progress driver: False before
-    the peer posts, True once headers AND payloads are deliverable — and a
-    True poll means `wait()` will not block (payload receives are already
-    posted and complete)."""
+    the peer posts, and for the native-collective allgather each rank's
+    poll posts its payload Iallgatherv once the size collective is in —
+    after one poll round on both ranks the exchange is complete and
+    `wait()` does not block."""
     comms = _mpi_pair()
     h0 = comms[0].iallgather([7])
-    assert not h0.done()  # peer's header not sent yet
+    assert not h0.done()  # peer's size contribution not posted yet
     h1 = comms[1].iallgather([8])
+    h0.done(), h1.done()  # each poll posts its rank's payload contribution
     assert h0.done() and h1.done()
     assert h0.wait() == [7, 8] and h1.wait() == [7, 8]
 
 
+def test_distcomm_mpi_allgather_uses_native_collectives():
+    """The O(P^2) bugfix pinned: an allgather posts NO point-to-point
+    messages — everything rides the two native collectives (size
+    Iallgather + payload Iallgatherv) — while alltoallv still uses the
+    sparse p2p path."""
+    box: dict = {}
+    comms = [DistComm._testing_instance(
+        r, 2, mpi=FakeMPIComm(r, 2, box), MPI=FakeMPIModule)
+        for r in range(2)]
+    hs = [comms[r].iallgather([r]) for r in range(2)]
+    for h in hs:
+        h.done()
+    assert [h.wait() for h in hs] == [[0, 1], [0, 1]]
+    assert all(k[0] == "coll" for k in box), f"p2p keys leaked: {sorted(box)}"
+    rows = [[None, "x"], ["y", None]]
+    hs = [comms[r].ialltoallv([rows[r]]) for r in range(2)]
+    for h in hs:
+        h.wait()
+    assert any(k[0] != "coll" for k in box), "alltoallv should stay p2p"
+
+
 def test_distcomm_kv_poll_and_cleanup():
     """`done()` is a real poll on the KV binding (false before the peer
-    posts, true after), and completed generations delete their keys."""
+    posts, true after), completed generations delete their keys — each key
+    removed by its single reader right after the fetch — and NO barrier is
+    ever taken (the old pre-cleanup barrier sat on the wait critical
+    path)."""
     client = FakeKVClient()
     c0, c1 = (DistComm._testing_instance(r, 2, client=client)
               for r in range(2))
     h0 = c0.iallgather([1])
-    assert not h0.done()  # rank 1 has not posted its targets index yet
+    assert not h0.done()  # rank 1 has not posted its payload key yet
     h1 = c1.iallgather([2])
     assert h0.done() and h1.done()
     assert h0.wait() == [1, 2] and h1.wait() == [1, 2]
     assert not client.store, f"leaked KV keys: {sorted(client.store)}"
-    assert len(client.barriers) == 2  # one per rank for the one generation
+    assert client.barriers == [], "cleanup must not synchronize on a barrier"
+
+
+def test_distcomm_kv_wait_after_done_is_free():
+    """The hot-path regression pinned: once a handle polls `done() ==
+    True`, its `wait()` performs ZERO KV round-trips — the poll already
+    fetched, cached, and cleaned every peer payload."""
+    client = FakeKVClient()
+    c0, c1 = (DistComm._testing_instance(r, 2, client=client)
+              for r in range(2))
+    h0 = c0.iallgather([10])
+    h1 = c1.iallgather([20])
+    assert h0.done() and h1.done()
+    snapshot = client.calls
+    assert h0.wait() == [10, 20] and h1.wait() == [10, 20]
+    assert client.calls == snapshot, (
+        f"wait() after done() hit the KV store {client.calls - snapshot} "
+        "times")
 
 
 def test_distcomm_namespace_isolates_keys():
     """Two DistComm instances over one coordinator (overlapped + serialized
-    benchmark runs) must not collide: namespaces split keys and barriers."""
+    benchmark runs) must not collide: namespaces split the KV keyspace."""
     client = FakeKVClient()
     a = [DistComm._testing_instance(r, 2, client=client, namespace="a.")
          for r in range(2)]
@@ -260,7 +356,8 @@ def test_distcomm_namespace_isolates_keys():
     assert ha[0].wait() == [("A", 0), ("A", 1)]
     assert hb[0].wait() == [("B", 0), ("B", 1)]
     ha[1].wait(), hb[1].wait()
-    assert {n.split("_")[2] for n in client.barriers} == {"a.0", "b.0"}
+    assert not client.store
+    assert {k.split("/")[1] for k in client.graveyard} == {"a.0", "b.0"}
 
 
 # ------------------------------------------- completion-order determinism

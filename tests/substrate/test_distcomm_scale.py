@@ -16,6 +16,12 @@ Pinned here, per rank:
     wait);
 and on rank 0: the gathered world equals the in-process `SimComm(4)` run of
 the same pipeline, element for element.
+
+The second test is the dynamic-repartition acceptance run on the same
+world size: a skewed adapt (only the first cube cell refines) followed by
+`Forest.repartition` must end with max/mean element imbalance <= 1.1,
+overlapped == serialized with wire-digest parity, and the gathered world
+element-for-element identical to the single-rank oracle.
 """
 
 import pytest
@@ -100,3 +106,72 @@ def test_distcomm_four_process_pipeline():
         assert f"rank {pid}: overlap == serialized" in out
         assert f"rank {pid}: pipeline OK" in out
     assert "rank 0: DistComm(P=4) == SimComm(4)" in outs[0][0]
+
+
+REPART_SCRIPT = r"""
+import sys
+import numpy as np
+import jax
+
+port, pid = sys.argv[1], int(sys.argv[2])
+P = 4
+jax.distributed.initialize(
+    coordinator_address=f"localhost:{port}", num_processes=P, process_id=pid)
+
+from repro.core import cmesh as C
+from repro.core import forest as F
+from repro.core.comm import DistComm
+from repro.launch.multiproc import SKEW_BRICK_SETUP
+
+comm_ov = DistComm(timeout_s=240, namespace="rp.ov.")
+comm_ser = DistComm(timeout_s=240, namespace="rp.ser.")
+comm_h = DistComm(timeout_s=240, namespace="rp.h.")  # keeps digests pure
+exec(SKEW_BRICK_SETUP)  # the skewed-adapt domain: skew, cm, fs0
+
+imb_before = F.load_imbalance(fs0, comm_h)
+assert imb_before > 1.5, f"fixture must be skewed, got {imb_before}"
+
+out = fs0[0].repartition(comm_ov)
+out_ser = fs0[0].repartition(comm_ser, overlap=False)
+np.testing.assert_array_equal(out.keys, out_ser.keys)
+np.testing.assert_array_equal(out.level, out_ser.level)
+np.testing.assert_array_equal(out.tree, out_ser.tree)
+assert comm_ov.wire_digest() == comm_ser.wire_digest(), \
+    "overlap changed the migration bytes"
+print(f"rank {pid}: overlap == serialized", flush=True)
+
+imb_after = F.load_imbalance([out], comm_h)
+assert imb_after <= 1.1, f"imbalance {imb_after} > 1.1 after repartition"
+bal = F.balance([out], comm_ov)
+gh = F.ghost(bal, comm_ov)
+
+blob = (out.tree, out.keys, out.level, out.anchor, out.stype)
+world = comm_h.allgather([blob])
+if pid == 0:
+    # single-rank oracle: same domain + skewed adapt under LocalComm,
+    # where repartition is the identity on the global leaf sequence
+    ns = {"np": np, "C": C, "F": F, "P": P, "comm_ov": F.LocalComm()}
+    exec(SKEW_BRICK_SETUP, ns)
+    ref = F.repartition(ns["fs0"], ns["comm_ov"])
+    for i, name in enumerate(("tree", "keys", "level", "anchor", "stype")):
+        np.testing.assert_array_equal(
+            np.concatenate([w[i] for w in world]),
+            np.concatenate([getattr(f, name) for f in ref]))
+    print("rank 0: repartition == single-rank oracle", flush=True)
+comm_h.barrier()
+print(f"rank {pid}: repartition OK", flush=True)
+"""
+
+
+@pytest.mark.slow
+def test_distcomm_four_process_repartition():
+    """The tentpole's acceptance run as a pinned test: P=4 real processes,
+    skewed adapt, `Forest.repartition` (the one-rank-per-process form) —
+    post-migration element imbalance <= 1.1, overlap == serialized with
+    wire-digest parity, and the gathered world element-for-element equal
+    to the single-rank oracle."""
+    outs = run_ranks(REPART_SCRIPT, 4)
+    for pid, (out, _err) in enumerate(outs):
+        assert f"rank {pid}: overlap == serialized" in out
+        assert f"rank {pid}: repartition OK" in out
+    assert "rank 0: repartition == single-rank oracle" in outs[0][0]
