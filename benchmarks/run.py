@@ -34,6 +34,14 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
                          weak scaling (P = 1/2/4, per-rank wire volume and
                          wall times; merges "overlap" and "scale" sections
                          into BENCH_forest.json)
+  device_eval            device-resident fused Balance eval (sweep ->
+                         need-mask -> query-build on device) vs the PR-4
+                         host-eval baseline at the 8k acceptance mesh;
+                         asserts the >=2x gate (full run), the O(1)
+                         dispatch / <=2 host-materializations-per-round
+                         budget, and zero jit retraces at warm buckets;
+                         merges a "device_eval" section into
+                         BENCH_forest.json
   repartition            dynamic repartition on the skewed-adapt Kuhn
                          brick: imbalance before/after, migrated wire
                          bytes, overlapped vs serialized wall time under
@@ -318,7 +326,8 @@ def forest_backends(tiny: bool = False):
     out_path = Path(__file__).resolve().parents[1] / name
     if out_path.exists():  # keep sibling suites' sections
         prev = json.loads(out_path.read_text())
-        for key in ("face_sweep", "overlap", "scale", "repartition"):
+        for key in ("face_sweep", "overlap", "scale", "repartition",
+                    "device_eval"):
             if key in prev:
                 report[key] = prev[key]
     out_path.write_text(json.dumps(report, indent=2))
@@ -413,6 +422,87 @@ def face_sweep(tiny: bool = False):
     data["face_sweep"] = report
     out_path.write_text(json.dumps(data, indent=2))
     row("face_sweep_json", 0.0, str(out_path))
+
+
+def device_eval(tiny: bool = False):
+    """Device-resident fused Balance eval vs the PR-4 host-eval baseline.
+
+    Times the jnp-backend balance at the acceptance mesh (d=3, 2 trees,
+    level 4 -> 8k elements, corner refinement, SimComm(4)) against the
+    pinned PR-4 baseline, where the same mesh ran the 2:1 eval host-side
+    after materializing every sweep field to numpy.  A no-op round over the
+    balanced forest then pins the budget that makes the fusion a speedup:
+    one face_sweep + one eval_route + one eval_2to1 dispatch per non-empty
+    rank, exactly two host materializations per rank per round (compacted
+    routing rows + fused need/boundary masks), zero per-face fallback
+    dispatches, and ZERO jit retraces once the padding buckets are warm.
+    Tiny runs shrink to level 2 and skip the wall-time gate (CI machines
+    vary) but enforce every counter invariant.  Merges a "device_eval"
+    section into BENCH_forest.json."""
+    from repro.core import batch
+    from repro.core import forest as F
+
+    d = 3
+    level = 2 if tiny else 4
+    baseline_us = 94897.0  # PR-4 jnp balance_us at this mesh (BENCH history)
+    comm = F.SimComm(4)
+    base = F.new_uniform(d, 2, level, comm)
+
+    def corner_cb(tree, elems, cap=level + 2):
+        a = np.asarray(elems.anchor)
+        l = np.asarray(elems.level)
+        return ((a.sum(1) == 0) & (l < cap)).astype(np.int32)
+
+    report = {"d": d, "level": level, "tiny": tiny,
+              "baseline_pr4_jnp_us": baseline_us}
+    with batch.use_backend("jnp"):
+        fs = [F.adapt(f, corner_cb, recursive=True) for f in base]
+        us_bal = _time(lambda: F.balance(fs, comm), n=5)
+        out = F.balance(fs, comm)
+        nonempty = sum(1 for f in out if f.num_local)
+        # counters over one already-balanced (single) round, buckets warm
+        batch.reset_dispatch_counts()
+        batch.reset_host_fetch_counts()
+        batch.reset_trace_counts()
+        F.balance(out, comm)
+        disp = batch.dispatch_counts()
+        fetch = batch.host_fetch_counts()
+        traces = batch.trace_counts()
+        batch.reset_dispatch_counts()
+        batch.reset_host_fetch_counts()
+        batch.reset_trace_counts()
+    assert disp.get("face_sweep", 0) == nonempty, disp
+    assert disp.get("eval_2to1", 0) == nonempty, disp
+    assert disp.get("eval_route", 0) == nonempty, disp
+    for banned in ("face_neighbor", "is_inside_root", "owner_rank"):
+        assert disp.get(banned, 0) == 0, disp
+    assert fetch.get("eval_2to1", 0) == nonempty, fetch
+    assert fetch.get("eval_route", 0) == nonempty, fetch
+    assert fetch.get("eval_cache", 0) == 0, fetch
+    assert all(v == 0 for v in traces.values()), traces  # jit-retrace guard
+    fetches_per_rank = sum(fetch.values()) // max(nonempty, 1)
+    assert fetches_per_rank <= 2, fetch
+    report.update(
+        elements=F.count_global(out), balance_us=us_bal,
+        speedup_vs_pr4=baseline_us / us_bal,
+        noop_round_dispatches=disp, noop_round_host_fetches=fetch,
+        host_fetches_per_rank_per_round=fetches_per_rank,
+        retraces_after_warm=sum(traces.values()),
+    )
+    row("device_eval_jnp_balance", us_bal,
+        f"{baseline_us / us_bal:.2f}x_vs_pr4_host_eval"
+        f":fetches_per_round={fetches_per_rank}:retraces=0")
+    if not tiny:
+        assert us_bal <= baseline_us / 2, (
+            f"device-resident balance {us_bal:.0f}us did not reach 2x vs "
+            f"the PR-4 host-eval baseline {baseline_us:.0f}us")
+
+    name = "BENCH_forest_tiny.json" if tiny else "BENCH_forest.json"
+    out_path = Path(__file__).resolve().parents[1] / name
+    data = json.loads(out_path.read_text()) if out_path.exists() else {}
+    data["device_eval"] = report
+    out_path.write_text(json.dumps(data, indent=2))
+    row("device_eval_json", 0.0, str(out_path))
 
 
 def multitree(tiny: bool = False):
@@ -858,6 +948,7 @@ SUITES = {
     "moe_placement": lambda tiny: moe_placement(),
     "forest_backends": forest_backends,
     "face_sweep": face_sweep,
+    "device_eval": device_eval,
     "multitree": multitree,
     "scale": scale,
     "repartition": repartition,

@@ -45,8 +45,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from . import u64 as u64m
-from .batch import BatchedOps, get_batch_ops
-from .cmesh import Cmesh
+from .batch import BatchedOps, count_dispatch as batch_count_dispatch, get_batch_ops
+from .cmesh import Cmesh, wrap_i32
 from .comm import Comm, CommHandle, DistComm, LatencyComm, LocalComm, SimComm
 from .ops import SimplexOps, get_ops
 from .placement import target_ranks_np
@@ -121,7 +121,14 @@ class Forest:
         return len(self.level)
 
     def simplices(self) -> Simplex:
-        return Simplex(jnp.asarray(self.anchor), jnp.asarray(self.level), jnp.asarray(self.stype))
+        # memoized device view: element arrays are immutable (adapt &c.
+        # return NEW Forests), so the upload happens once per Forest
+        s = self.__dict__.get("_simplices_cache")
+        if s is None:
+            s = Simplex(jnp.asarray(self.anchor), jnp.asarray(self.level),
+                        jnp.asarray(self.stype))
+            self.__dict__["_simplices_cache"] = s
+        return s
 
     def replace_elements(self, anchor, level, stype, tree) -> "Forest":
         s = Simplex(jnp.asarray(anchor), jnp.asarray(level), jnp.asarray(stype))
@@ -654,9 +661,9 @@ def face_sweep_layer(f: Forest, tree_ids: np.ndarray, s: Simplex) -> FaceSweepLa
     One batched `face_sweep` dispatch computes every face's same-level
     neighbor, inside-root mask, and morton key; the results are materialized
     to the host once.  Faces that leave the root are then re-expressed in the
-    neighbor tree's frame via `f.cmesh`: the crossings are lexsort-grouped by
-    connection (source tree, root face) and each group gets one batched
-    `transform_across_face` + key recompute — no per-element Python loop.
+    neighbor tree's frame via `f.cmesh`: every crossing gathers its
+    connection's (M, c, type/face maps) rows and ALL crossings get one
+    batched transform + key recompute — no per-connection Python loop.
 
     This is the single seam where the old is_root_boundary notion splits
     into "interior", "inter-tree face" (followed through `f.cmesh`), and
@@ -693,36 +700,33 @@ def face_sweep_layer(f: Forest, tree_ids: np.ndarray, s: Simplex) -> FaceSweepLa
         conn = (rf >= 0) & (cm.face_tree[t1, np.maximum(rf, 0)] >= 0)
         keep = np.nonzero(conn)[0]
         if len(keep):
-            # vectorized grouping by connection: lexsort the crossings on
-            # (source tree, root face), then walk the contiguous runs
+            # ONE batched transform for ALL crossings, whatever connection
+            # they use: gather each crossing's per-connection (M, c, maps)
+            # rows and apply anchor' = M @ anchor + c (+ the reflected-axis
+            # -h shift) in int64, wrapping to int32 once at the end — int32
+            # ring arithmetic wraps mod 2^32, so the single final wrap is
+            # bit-identical to the per-connection int32 path.
             fk, ek, rfk, t1k = fidx[keep], eidx[keep], rf[keep], t1[keep]
-            order = np.lexsort((rfk, t1k))
-            fo, eo, rfo, t1o = fk[order], ek[order], rfk[order], t1k[order]
-            starts = np.nonzero(
-                np.r_[True, (t1o[1:] != t1o[:-1]) | (rfo[1:] != rfo[:-1])])[0]
-            ends = np.r_[starts[1:], len(order)]
-            for a, b in zip(starts, ends):
-                fi, ei = fo[a:b], eo[a:b]
-                t1v, rfv = int(t1o[a]), int(rfo[a])
-                sub = Simplex(
-                    jnp.asarray(anchor[fi, ei]), jnp.asarray(level[ei]),
-                    jnp.asarray(stype[fi, ei]),
-                )
-                s2, t2 = cm.transform_across_face(sub, t1v, rfv, bops=bops)
-                old_stype = stype[fi, ei]
-                anchor[fi, ei] = np.asarray(s2.anchor)
-                stype[fi, ei] = np.asarray(s2.stype)
-                dual[fi, ei] = cm.face_facemap[t1v, rfv][old_stype, dual[fi, ei]]
-                tgt[fi, ei] = t2
-                valid[fi, ei] = True
-                kind[fi, ei] = FACE_INTER_TREE
+            Mv = cm.face_M[t1k, rfk].astype(np.int64)      # (c, d, d)
+            cv = cm.face_c[t1k, rfk].astype(np.int64)      # (c, d)
+            av = anchor[fk, ek].astype(np.int64)           # (c, d)
+            h = np.int64(1) << (np.int64(cm.L) - level[ek].astype(np.int64))
+            neg = np.minimum(Mv.sum(axis=-1), 0)           # -1 on reflected rows
+            a2 = (av[:, None, :] * Mv).sum(axis=-1) + cv + h[:, None] * neg
+            old_stype = stype[fk, ek]
+            anchor[fk, ek] = wrap_i32(a2)
+            stype[fk, ek] = cm.face_typemap[t1k, rfk, old_stype]
+            dual[fk, ek] = cm.face_facemap[t1k, rfk, old_stype, dual[fk, ek]]
+            tgt[fk, ek] = cm.face_tree[t1k, rfk]
+            valid[fk, ek] = True
+            kind[fk, ek] = FACE_INTER_TREE
             # only the crossed entries changed anchors: recompute just their
             # keys, in one batched call (the sweep's keys stand elsewhere)
             crossed = Simplex(
-                jnp.asarray(anchor[fo, eo]), jnp.asarray(level[eo]),
-                jnp.asarray(stype[fo, eo]),
+                jnp.asarray(anchor[fk, ek]), jnp.asarray(level[ek]),
+                jnp.asarray(stype[fk, ek]),
             )
-            nkey[fo, eo] = bops.morton_key_np(crossed)
+            nkey[fk, ek] = bops.morton_key_np(crossed)
     return FaceSweepLayer(tgt, nkey, valid, anchor, level, stype, dual, kind)
 
 
@@ -784,16 +788,41 @@ def _range_max(values: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> np.ndarray
     return out
 
 
+def _resident_sweep(f: Forest, bops: BatchedOps):
+    """The resident face sweep of ALL of a rank's local elements, memoized
+    per (Forest object, backend): leaf arrays are immutable, so repeated
+    Balance rounds over an unchanged rank — and a Ghost following a Balance
+    — reuse the device-resident sweep instead of re-padding and
+    re-dispatching it.  A cache hit still charges one `face_sweep` dispatch
+    so the meters keep their evals-per-round semantics."""
+    if f.num_local == 0:
+        return None
+    cache = f.__dict__.setdefault("_sweep_cache", {})
+    h = cache.get(bops.backend)
+    if h is not None:
+        batch_count_dispatch("face_sweep")
+        return h
+    if f.cmesh is None:
+        h = bops.sweep_full(f.simplices(), f.tree)
+    else:
+        sw = face_sweep_layer(f, f.tree, f.simplices())
+        h = bops.sweep_from_host(sw.tgt, sw.nkey, sw.valid, sw.dual, sw.level)
+    cache[bops.backend] = h
+    return h
+
+
 def _pack_triples(triples) -> np.ndarray:
-    """(tree, key, level) triples -> deterministic 13-byte/entry wire buffer."""
-    tl = sorted(triples)
+    """(tree, key, level) triples -> deterministic 13-byte/entry wire buffer,
+    lex-ordered by (tree, key, level) via np.lexsort over the column arrays
+    (bit-identical to sorting the Python tuples, without the tuple churn)."""
+    tl = list(triples)
     if not tl:
         return np.zeros(0, np.uint8)
-    return pack_wire(
-        np.array([x[0] for x in tl], np.int32),
-        np.array([x[1] for x in tl], np.uint64),
-        np.array([x[2] for x in tl], np.int32),
-    )
+    t = np.array([x[0] for x in tl], np.int32)
+    k = np.array([x[1] for x in tl], np.uint64)
+    lv = np.array([x[2] for x in tl], np.int32)
+    order = np.lexsort((lv, k, t))
+    return pack_wire(t[order], k[order], lv[order])
 
 
 def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64,
@@ -806,8 +835,8 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64,
     more than one level finer; neighbor regions behind a glued tree face are
     queried in the neighbor tree's frame.  No rank ever materializes the
     global leaf table: routing uses only the allgathered P partition markers
-    (`partition_markers` + the batched `owner_rank` searchsorted), and the
-    wire carries
+    (`partition_markers` + the fused `eval_route` owner-range program), and
+    the wire carries
 
       * key-range queries — packed (tree, key, level) triples an element
         sends to every remote owner rank of its neighbor interval (issued
@@ -822,6 +851,17 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64,
     Received witnesses/notifications accumulate in a per-rank cache of
     remote leaves, so each round's refine decision is a purely local sweep
     (local sorted arrays + cache).
+
+    The per-round evaluation is *device resident* on the jnp/pallas
+    backends: the face sweep stays on device as a `SweepHandle`, the local
+    leaves and the remote cache upload as `LeafTable`s, and three fused
+    programs (`BatchedOps.eval_2to1` / `eval_cache` / `eval_route`) compute
+    the 2:1 need-masks, the boundary-adjacent mask, and the compacted query
+    candidates without materializing sweep fields to numpy — the host only
+    slices the compacted routing rows to build wire triples.  All buffers
+    are padded to power-of-two buckets so jit never retraces across rounds
+    at a fixed bucket (`batch.trace_counts()`); the reference backend runs
+    the same algorithms eagerly and is the bit-identical oracle.
 
     The round loop is *double buffered* (p4est-style overlap): round r's
     queries and notifications are posted nonblocking (`Comm.ialltoallv`) as
@@ -863,154 +903,111 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64,
         mt = mk = None  # assigned at the marker merge point below
         # answering side: (tree, span_exp) -> {k0: (min queried level, ranks)}
         registries: list[dict] = [{} for _ in range(nloc)]
-        # requesting side: remote leaves learned from replies/notifications
+        # requesting side: remote leaves learned from replies/notifications,
+        # recompiled into a lex-sorted LeafTable for the fused cache eval
         cache_entries: list[set] = [set() for _ in range(nloc)]
-        cache_sorted: list[dict] = [{} for _ in range(nloc)]
+        cache_tables: list = [None] * nloc
 
         def recompile_cache(i: int) -> None:
-            per_tree: dict[int, list] = {}
-            for (t, k, l) in cache_entries[i]:
-                per_tree.setdefault(t, []).append((k, l))
-            cs = {}
-            for t, kl in per_tree.items():
-                kl.sort()
-                cs[t] = (np.array([k for k, _ in kl], np.uint64),
-                         np.array([l for _, l in kl], np.int32))
-            cache_sorted[i] = cs
+            ents = cache_entries[i]
+            if not ents:
+                cache_tables[i] = None
+                return
+            t = np.fromiter((e[0] for e in ents), np.int32, len(ents))
+            k = np.fromiter((e[1] for e in ents), np.uint64, len(ents))
+            lv = np.fromiter((e[2] for e in ents), np.int32, len(ents))
+            order = np.lexsort((lv, k, t))
+            cache_tables[i] = bops.upload_table(t[order], k[order], lv[order])
 
-        def route_queries(i: int, sw: FaceSweepLayer, lev, span) -> dict:
-            """Key-range queries for the swept elements of local rank i whose
-            neighbor intervals reach beyond this rank: dest -> {(t, k0, l)}.
-            Two owner_rank dispatches for ALL (face, element) pairs."""
+        def sweep_handle(i: int, sel: np.ndarray | None = None):
+            """The round's resident face sweep of rank i's elements (or the
+            `sel` subset): ONE batched dispatch whose results stay where the
+            backend computes — the fused eval programs consume the handle
+            and only compacted routing rows return to the host.  The cmesh
+            cross-tree path sweeps through `face_sweep_layer` (one host
+            fixup) and re-uploads.  Full layers memoize on the Forest
+            (`_resident_sweep`); subset layers are round-specific."""
+            f = forests[i]
+            if sel is None:
+                return _resident_sweep(f, bops)
+            if len(sel) == 0:
+                return None
+            s = Simplex(jnp.asarray(f.anchor[sel]), jnp.asarray(f.level[sel]),
+                        jnp.asarray(f.stype[sel]))
+            tree_ids = f.tree[sel]
+            if f.cmesh is None:
+                return bops.sweep_full(s, tree_ids)
+            sw = face_sweep_layer(f, tree_ids, s)
+            return bops.sweep_from_host(sw.tgt, sw.nkey, sw.valid, sw.dual,
+                                        sw.level)
+
+        def upload_tables() -> list:
+            # leaf arrays are immutable per Forest: upload once per
+            # (forest, backend) and reuse across rounds / repeated balances
+            out = []
+            for f in forests:
+                if not f.num_local:
+                    out.append(None)
+                    continue
+                cache = f.__dict__.setdefault("_leaf_table_cache", {})
+                tbl = cache.get(bops.backend)
+                if tbl is None:
+                    tbl = bops.upload_table(f.tree, f.keys, f.level)
+                    cache[bops.backend] = tbl
+                out.append(tbl)
+            return out
+
+        def route_to_dests(i: int, rp) -> dict:
+            """RoutePairs rows -> dest rank -> {(t, k0, l)} query sets."""
             g = comm.local_ranks[i]
             dest: dict[int, set] = {}
-            fi, ei = np.nonzero(sw.valid)
-            if len(ei) == 0:
-                return dest
-            tgt_v, nkey_v = sw.tgt[fi, ei], sw.nkey[fi, ei]
-            lev_v, span_v = lev[ei], span[ei]
-            first = bops.owner_rank(tgt_v, nkey_v, mt, mk)
-            last = bops.owner_rank(tgt_v, nkey_v + span_v - np.uint64(1), mt, mk)
-            for j in np.nonzero((first != g) | (last != g))[0]:
-                q = (int(tgt_v[j]), int(nkey_v[j]), int(lev_v[j]))
-                for r in range(int(first[j]), int(last[j]) + 1):
+            for j in range(len(rp.tree)):
+                q = (int(rp.tree[j]), int(rp.key[j]), int(rp.level[j]))
+                for r in range(int(rp.first[j]), int(rp.last[j]) + 1):
                     if r != g:
                         dest.setdefault(r, set()).add(q)
             return dest
 
         def build_queries(i: int, sel: np.ndarray) -> dict:
             """Queries for an element subset (the per-round child layers):
-            one fused sweep of the subset + the owner-rank routing."""
-            f = forests[i]
-            if len(sel) == 0:
+            one fused sweep + the fused routing eval."""
+            h = sweep_handle(i, sel)
+            if h is None:
                 return {}
-            sub = Simplex(jnp.asarray(f.anchor[sel]), jnp.asarray(f.level[sel]),
-                          jnp.asarray(f.stype[sel]))
-            lev = f.level[sel]
-            span = _elem_spans(d, L, lev)
-            sw = face_sweep_layer(f, f.tree[sel], sub)
-            return route_queries(i, sw, lev, span)
+            return route_to_dests(
+                i, bops.eval_route(h, mt, mk, comm.local_ranks[i]))
 
         def answer(i: int, src: int, buf: np.ndarray) -> set:
             """Register one rank's queries and answer them from the local
             sorted arrays: witness triples for every query whose local slice
-            holds a leaf finer than the querier tolerates."""
+            holds a leaf finer than the querier tolerates.  The interval
+            search is vectorized (grouped by target tree + one reduceat for
+            the slice maxima); only the dict-shaped registry update and the
+            few actual witnesses stay per entry."""
             f = forests[i]
             qt, qk, ql = unpack_wire(buf)
             reply: set = set()
             reg = registries[i]
             for t, k0, l in zip(qt.tolist(), qk.tolist(), ql.tolist()):
-                se = d * (L - l)
-                ent = reg.setdefault((t, se), {})
+                ent = reg.setdefault((t, d * (L - l)), {})
                 prev = ent.get(k0)
                 ent[k0] = ((l, {src}) if prev is None
                            else (min(prev[0], l), prev[1] | {src}))
-                gsel = np.searchsorted(f.tree, [t, t + 1])
-                keys_t = f.keys[gsel[0]:gsel[1]]
-                level_t = f.level[gsel[0]:gsel[1]]
-                a = int(np.searchsorted(keys_t, np.uint64(k0)))
-                b = int(np.searchsorted(
-                    keys_t, np.uint64(k0) + (np.uint64(1) << np.uint64(se))))
-                if b > a:
-                    mx = int(level_t[a:b].max())
-                    if mx > l + 1:
-                        j = a + int(np.argmax(level_t[a:b]))
-                        reply.add((t, int(keys_t[j]), mx))
+            span = _elem_spans(d, L, ql)
+            starts = np.zeros(len(qt), np.int64)
+            ends = np.zeros(len(qt), np.int64)
+            for t in np.unique(qt):
+                m = qt == t
+                a0, b0 = np.searchsorted(f.tree, [t, t + 1])
+                keys_t = f.keys[a0:b0]
+                starts[m] = a0 + np.searchsorted(keys_t, qk[m])
+                ends[m] = a0 + np.searchsorted(keys_t, qk[m] + span[m])
+            mx = _range_max(f.level, starts, ends)
+            for q in np.nonzero(mx > ql + 1)[0].tolist():
+                a = int(starts[q])
+                j = a + int(np.argmax(f.level[a:int(ends[q])]))
+                reply.add((int(qt[q]), int(f.keys[j]), int(mx[q])))
             return reply
-
-        def sweep_only(i: int):
-            """The round's fused face sweep over ALL local elements of rank
-            i (+ key-interval spans) — communication free, so it runs while
-            the previous round's exchange (or the marker allgather) is on
-            the wire.  Reused by the interior/boundary evals AND (in the
-            initial round) the query builder, so each round sweeps once."""
-            f = forests[i]
-            if f.num_local == 0:
-                return None, None
-            sw = face_sweep_layer(f, f.tree, f.simplices())
-            return sw, _elem_spans(d, L, f.level)
-
-        def eval_local(i: int, sw, span) -> np.ndarray:
-            """The 2:1 condition against the LOCAL sorted arrays: per
-            element, max leaf level in every face interval.  Complete for
-            interior elements; the local half of the OR for boundary ones.
-            Communication free — this is the work that hides the in-flight
-            exchange."""
-            f = forests[i]
-            need = np.zeros(f.num_local, bool)
-            if sw is None:
-                return need
-            for t in np.unique(sw.tgt[sw.valid]):
-                fi, ei = np.nonzero(sw.valid & (sw.tgt == t))
-                ks, sp = sw.nkey[fi, ei], span[ei]
-                gsel = np.searchsorted(f.tree, [t, t + 1])
-                keys_t = f.keys[gsel[0]:gsel[1]]
-                level_t = f.level[gsel[0]:gsel[1]]
-                lo = np.searchsorted(keys_t, ks)
-                hi = np.searchsorted(keys_t, ks + sp)
-                upd = _range_max(level_t, lo, hi) > f.level[ei] + 1
-                need[ei[upd]] = True
-            return need
-
-        def eval_cache(i: int, sw, span) -> np.ndarray:
-            """The remote-leaf-cache half of the 2:1 condition, boundary-
-            adjacent elements only: an interior interval lies wholly inside
-            this rank's marker range [marker_g, marker_{g+1}), where remote
-            leaves (always owned by other ranks, hence outside that range)
-            can never fall — so skipping interior elements here is exact,
-            not approximate.  The boundary split is pure host lex compares
-            against the marker table, no extra batched dispatch."""
-            f = forests[i]
-            need = np.zeros(f.num_local, bool)
-            cs = cache_sorted[i]
-            if sw is None or not cs:
-                return need
-            g = comm.local_ranks[i]
-            fi, ei = np.nonzero(sw.valid)
-            t_v = sw.tgt[fi, ei]
-            k_lo = sw.nkey[fi, ei]
-            k_hi = k_lo + span[ei] - np.uint64(1)
-            off = np.zeros(len(ei), bool)
-            if g > 0:  # keys below the global first element clamp to rank 0
-                off |= (t_v < mt[g]) | ((t_v == mt[g]) & (k_lo < mk[g]))
-            if g + 1 < P:
-                off |= (t_v > mt[g + 1]) | ((t_v == mt[g + 1]) & (k_hi >= mk[g + 1]))
-            bmask = np.zeros(f.num_local, bool)
-            bmask[ei[off]] = True
-            if not bmask.any():
-                return need
-            valid_b = sw.valid & bmask[None, :]
-            for t in np.unique(sw.tgt[valid_b]):
-                if t not in cs:
-                    continue
-                fi, ei = np.nonzero(valid_b & (sw.tgt == t))
-                ks, sp = sw.nkey[fi, ei], span[ei]
-                ck, cl = cs[t]
-                clo = np.searchsorted(ck, ks)
-                chi = np.searchsorted(ck, ks + sp)
-                upd = _range_max(cl, clo, chi) > f.level[ei] + 1
-                need[ei[upd]] = True
-            return need
 
         def post_exchange(dests: list[dict], notifs: list[dict] | None) -> CommHandle:
             """Ship (notifications, queries) per destination — nonblocking;
@@ -1025,22 +1022,29 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64,
                 send.append(row)
             return comm.ialltoallv(send)
 
-        def eval_round(pending: CommHandle, sweeps=None) -> list[np.ndarray]:
+        def eval_round(pending: CommHandle, pre=None) -> list[np.ndarray]:
             """One double-buffered round evaluation.  Timeline:
 
-              sweep faces            <- hides the in-flight `pending`
-                                        queries/notifications (posted at
-                                        the END of the previous round)
+              sweep faces + upload   <- the device sweep programs and the
+                local leaf tables       round's leaf tables dispatch here
+                                        and compute while the in-flight
+                                        `pending` queries/notifications
+                                        (posted at the END of the previous
+                                        round) are on the wire
               merge 1: wait pending; answer queries; POST replies
-              fold notifications; eval interior (local sorted arrays only)
-                                     <- hides the in-flight replies
+              fold notifications; fused interior 2:1 eval (`eval_2to1`,
+                local leaf table only) <- hides the in-flight replies
               merge 2: wait replies; fold; recompile caches
-              eval boundary elements against the refreshed cache
+              fused boundary eval (`eval_cache`) against the refreshed
+                remote-leaf cache
 
-            The initial round passes the sweeps it already computed (they
+            The initial round passes the handles it already computed (they
             hid the marker allgather and built the first queries)."""
-            if sweeps is None:
-                sweeps = [sweep_only(i) for i in range(nloc)]
+            if pre is None:
+                handles = [sweep_handle(i) for i in range(nloc)]
+                tables = upload_tables()
+            else:
+                handles, tables = pre
             recv = pending.wait()
             reply_rows, notif_bufs = [], []
             for i in range(nloc):
@@ -1065,8 +1069,14 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64,
                     t_, k_, l_ = unpack_wire(nbuf)
                     cache_entries[i].update(
                         zip(t_.tolist(), k_.tolist(), l_.tolist()))
-            needs = [eval_local(i, sw, span) for i, (sw, span) in
-                     zip(range(nloc), sweeps)]
+            needs = []
+            for i in range(nloc):
+                if handles[i] is None:
+                    needs.append(np.zeros(forests[i].num_local, bool))
+                else:
+                    nd, _bm = bops.eval_2to1(
+                        handles[i], tables[i], mt, mk, comm.local_ranks[i])
+                    needs.append(nd)
             rrecv = hr.wait()
             for i in range(nloc):
                 g = comm.local_ranks[i]
@@ -1077,8 +1087,10 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64,
                     t_, k_, l_ = unpack_wire(buf)
                     cache_entries[i].update(zip(t_.tolist(), k_.tolist(), l_.tolist()))
                 recompile_cache(i)
-            for i, (sw, span) in enumerate(sweeps):
-                needs[i] |= eval_cache(i, sw, span)
+            for i in range(nloc):
+                if handles[i] is not None and cache_tables[i] is not None:
+                    needs[i] |= bops.eval_cache(
+                        handles[i], cache_tables[i], mt, mk, comm.local_ranks[i])
             return needs
 
         def refine_and_build(needs: list[np.ndarray]):
@@ -1124,17 +1136,20 @@ def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64,
                                     new_notifs[i].setdefault(r, set()).add((t, k, l))
             return new_dests, new_notifs
 
-        # initial round: the sweeps run while the marker allgather flies,
-        # then double-duty as both the first query builder and the first
-        # eval layer; the initial halo (every element registers + queries
-        # its remote intervals) is itself posted nonblocking
-        sweeps0 = [sweep_only(i) for i in range(nloc)]
+        # initial round: the device sweeps + table uploads dispatch while
+        # the marker allgather flies, then double-duty as both the first
+        # query builder and the first eval layer; the initial halo (every
+        # element registers + queries its remote intervals) is itself
+        # posted nonblocking
+        handles0 = [sweep_handle(i) for i in range(nloc)]
+        tables0 = upload_tables()
         mt, mk = _markers_from_pairs(K, P, h_mk.wait())
         pending = post(post_exchange(
-            [route_queries(i, sw, forests[i].level, span)
-             if sw is not None else {}
-             for i, (sw, span) in zip(range(nloc), sweeps0)], None))
-        needs = eval_round(pending, sweeps0)
+            [route_to_dests(i, bops.eval_route(handles0[i], mt, mk,
+                                               comm.local_ranks[i]))
+             if handles0[i] is not None else {}
+             for i in range(nloc)], None))
+        needs = eval_round(pending, (handles0, tables0))
         for _ in range(max_rounds):
             # post the convergence vote, then refine + build the next
             # round's messages while it is on the wire (a no-op when the
@@ -1235,7 +1250,7 @@ def _ghost_from_candidates(d: int, bops: BatchedOps, cand: set) -> dict:
             "stype": np.asarray(gs.stype), "tree": trees, "owner": owners}
 
 
-def ghost(forests: list[Forest], comm: Comm) -> list[dict]:
+def ghost(forests: list[Forest], comm: Comm, overlap: bool = True) -> list[dict]:
     """Face-ghost layer: for each rank, the remote leaves touching its
     elements across faces — following glued tree faces through the Cmesh
     when the forest carries one.  Returns per-local-rank dicts with ghost
@@ -1248,38 +1263,55 @@ def ghost(forests: list[Forest], comm: Comm) -> list[dict]:
     reconstructs the neighbor simplex by decoding the queried key (the wire
     stays 14 bytes per query, Remark 20) — and reply with the matching leaf
     triples.  No global leaf table is ever built (`ghost_oracle` keeps the
-    old one for the tests)."""
+    old one for the tests).
+
+    The routing pass is *device resident*: one fused face sweep per
+    non-empty rank stays on the backend as a `SweepHandle` and the fused
+    `BatchedOps.eval_route` program compacts the remote-reaching (face,
+    element) pairs with their [first, last] owner-rank ranges — the host
+    slices exactly ONE (count, rows) materialization per rank and packs
+    wire quads from it.
+
+    Both alltoallv stages are double buffered (`overlap=False` completes
+    every collective at its post site — the serialized baseline): the
+    marker allgather hides behind the device sweeps, and the query flight
+    behind the answering-side prep (per-tree offsets into the local sorted
+    arrays).  The reply flight has no independent work left to hide —
+    assembly needs the payload — so it is waited where it is posted in
+    both modes.  Scheduling only: payload bytes and the resulting ghost
+    layers are bit-identical across overlap modes."""
     d = forests[0].d
     o = get_ops(d)
     L = o.L
     bops = get_batch_ops(d)
     P = comm.size
     nloc = len(forests)
+
+    def post(h: CommHandle) -> CommHandle:
+        # serialized mode: complete every collective where it was posted
+        return h if overlap else CommHandle.ready(h.wait())
+
     with comm.phase("ghost"):
-        mt, mk = partition_markers(forests, comm)
-        # ---- route queries: per element x face, the remote interval owners
+        # markers fly while the device routing sweeps dispatch
+        K = forests[0].num_trees
+        h_mk = post(comm.iallgather(_marker_pairs(forests)))
+        handles = [_resident_sweep(f, bops) for f in forests]
+        mt, mk = _markers_from_pairs(K, P, h_mk.wait())
+
+        # ---- route queries: the fused eval compacts the remote-reaching
+        # (face, element) pairs; the host only packs wire quads from them
         send = []
-        for i, f in enumerate(forests):
+        for i in range(nloc):
             g = comm.local_ranks[i]
             dest: dict[int, set] = {}
-            if f.num_local:
-                s = f.simplices()
-                span = _elem_spans(d, L, f.level)
-                # one fused sweep + two owner_rank dispatches for ALL faces
-                sw = face_sweep_layer(f, f.tree, s)
-                fi, ei = np.nonzero(sw.valid)
-                if len(ei):
-                    tgt_v, nkey_v = sw.tgt[fi, ei], sw.nkey[fi, ei]
-                    dual_v, lev_v, span_v = sw.dual[fi, ei], f.level[ei], span[ei]
-                    first = bops.owner_rank(tgt_v, nkey_v, mt, mk)
-                    last = bops.owner_rank(
-                        tgt_v, nkey_v + span_v - np.uint64(1), mt, mk)
-                    for j in np.nonzero((first != g) | (last != g))[0]:
-                        q = (int(tgt_v[j]), int(nkey_v[j]), int(lev_v[j]),
-                             int(dual_v[j]))
-                        for r in range(int(first[j]), int(last[j]) + 1):
-                            if r != g:
-                                dest.setdefault(r, set()).add(q)
+            if handles[i] is not None:
+                rp = bops.eval_route(handles[i], mt, mk, g)
+                for j in range(len(rp.tree)):
+                    q = (int(rp.tree[j]), int(rp.key[j]), int(rp.level[j]),
+                         int(rp.dual[j]))
+                    for r in range(int(rp.first[j]), int(rp.last[j]) + 1):
+                        if r != g:
+                            dest.setdefault(r, set()).add(q)
             row = []
             for q in range(P):
                 qs = sorted(dest.get(q, ()))
@@ -1290,7 +1322,12 @@ def ghost(forests: list[Forest], comm: Comm) -> list[dict]:
                     extra=np.array([x[3] for x in qs], np.int32),
                 ) if qs else np.zeros(0, np.uint8))
             send.append(row)
-        recv = comm.alltoallv(send)
+        h_q = post(comm.ialltoallv(send))
+        # answering-side prep hides the query flight: per-tree offsets into
+        # each rank's sorted leaf arrays replace per-query searchsorted
+        tree_offs = [np.searchsorted(f.tree, np.arange(K + 1))
+                     for f in forests]
+        recv = h_q.wait()
 
         # ---- answer from the local sorted arrays
         reply_rows = []
@@ -1308,24 +1345,25 @@ def ghost(forests: list[Forest], comm: Comm) -> list[dict]:
                     zip(qt.tolist(), qk.tolist(), ql.tolist(), qd.tolist()))
             replies: dict[int, set] = {}
             if entries and f.num_local:
+                offs = tree_offs[i]
                 pend = []       # (entry idx, local leaf idx) same-or-finer
                 pred_hits = []  # (entry idx, local leaf idx) coarser containing
                 for ei, (p, t, k0, l, du) in enumerate(entries):
-                    gsel = np.searchsorted(f.tree, [t, t + 1])
-                    keys_t = f.keys[gsel[0]:gsel[1]]
+                    t0 = int(offs[t])
+                    keys_t = f.keys[t0:int(offs[t + 1])]
                     span_q = np.uint64(1) << np.uint64(d * (L - l))
                     a = int(np.searchsorted(keys_t, np.uint64(k0)))
                     b = int(np.searchsorted(keys_t, np.uint64(k0) + span_q))
                     if b > a:
-                        pend.extend((ei, gsel[0] + j) for j in range(a, b))
+                        pend.extend((ei, t0 + j) for j in range(a, b))
                     elif a > 0:
                         # coarser containing leaf: dyadic nesting makes the
                         # interval globally empty, and the leaf lives on the
-                        # owner rank of k0 — answer only there
-                        own = int(bops.owner_rank(
-                            np.array([t], np.int32), np.array([k0], np.uint64),
-                            mt, mk)[0])
-                        jj = gsel[0] + a - 1
+                        # owner rank of k0 — answer only there (owner via one
+                        # numpy compare-sum on the marker table, no dispatch)
+                        own = max(int(((mt < t) | ((mt == t) & (
+                            mk <= np.uint64(k0)))).sum()) - 1, 0)
+                        jj = t0 + a - 1
                         span_p = np.uint64(1) << np.uint64(d * (L - int(f.level[jj])))
                         if own == g and np.uint64(f.keys[jj]) + span_p > np.uint64(k0):
                             pred_hits.append((ei, jj))
@@ -1361,7 +1399,7 @@ def ghost(forests: list[Forest], comm: Comm) -> list[dict]:
             for p, rs in replies.items():
                 row[p] = _pack_triples(rs)
             reply_rows.append(row)
-        rrecv = comm.alltoallv(reply_rows)
+        rrecv = post(comm.ialltoallv(reply_rows)).wait()
 
         # ---- assemble: replies from rank p are leaves owned by p
         out = []

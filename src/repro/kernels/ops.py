@@ -152,6 +152,19 @@ def owner_rank(key_u64: u64m.U64, tree, markers, block: int = sfc.DEFAULT_BLOCK)
     return out[:n]
 
 
+@functools.partial(jax.jit, static_argnums=(0, 8))
+def eval_route(d: int, tgt, khi, klo, lev, mt, mhi, mlo,
+               block: int = sfc.DEFAULT_BLOCK):
+    """Fused routing eval via the Pallas kernel: inputs are face-major
+    (d+1, n) tiles (n a multiple of `block`) plus the sentinel-padded marker
+    arrays; returns (khi64_hi, khi64_lo, first, last) in the same (d+1, n)
+    layout.  The kernel runs element-major, so transpose in and out."""
+    outs = sfc.eval_route_kernel(
+        d, tgt.T, khi.T, klo.T, lev.T, mt, mhi, mlo,
+        block=block, interpret=_interpret())
+    return tuple(o.T for o in outs)
+
+
 @functools.partial(jax.jit, static_argnums=(0, 2))
 def is_inside_root(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK):
     n = s.level.shape[0]

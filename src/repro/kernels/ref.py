@@ -103,6 +103,28 @@ def owner_rank_ref(t, hi, lo, mt, mhi, mlo):
     return owner_rank_lex(t, hi, lo, mt, mhi, mlo)
 
 
+def eval_route_ref(d, t, hi, lo, lvl, mt, mhi, mlo):
+    """Oracle of the fused routing eval: interval-end key words (key |
+    span-1 over the (hi, lo) uint32 pair) and the [first, last] owner-rank
+    range, elementwise over (n, d+1) tiles — same math as the kernel body
+    but through the shared `owner_rank_lex` compare chain."""
+    from repro.core.batch import owner_rank_lex
+
+    L = get_ops(d).L
+    sb = d * (L - lvl)
+    one = u64m.U64(jnp.zeros_like(hi), jnp.full_like(lo, 1))
+    mask = u64m.dec(u64m.select_shl(one, sb, 63))
+    kh = u64m.or_(u64m.U64(hi, lo), mask)
+    shp = t.shape
+    first = owner_rank_lex(
+        t.reshape(-1), hi.reshape(-1), lo.reshape(-1), mt, mhi, mlo
+    ).reshape(shp)
+    last = owner_rank_lex(
+        t.reshape(-1), kh.hi.reshape(-1), kh.lo.reshape(-1), mt, mhi, mlo
+    ).reshape(shp)
+    return kh.hi, kh.lo, first, last
+
+
 def successor_ref(d, *arrays):
     o = get_ops(d)
     s = _simplex(d, *arrays)

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.core import u64 as u64m
 from repro.core.tables import MAXLEVEL, get_tables
 
 DEFAULT_BLOCK = 1024
@@ -392,13 +393,39 @@ def _owner_rank_body(num_markers: int, refs):
     t_ref, hi_ref, lo_ref, mt_ref, mhi_ref, mlo_ref, o_ref = refs
     t, hi, lo = t_ref[...], hi_ref[...], lo_ref[...]
     mt, mhi, mlo = mt_ref[...], mhi_ref[...], mlo_ref[...]
+    o_ref[...] = _owner_count_expr(num_markers, t, hi, lo, mt, mhi, mlo)
+
+
+def _owner_count_expr(num_markers: int, t, hi, lo, mt, mhi, mlo):
+    """The unrolled marker-scan expression shared by `owner_rank_kernel` and
+    the fused `eval_route_kernel` (single-op and fused paths cannot drift)."""
     count = jnp.zeros(t.shape, jnp.int32)
     for k in range(num_markers):
         le = (mt[k] < t) | (
             (mt[k] == t) & ((mhi[k] < hi) | ((mhi[k] == hi) & (mlo[k] <= lo)))
         )
         count = count + le.astype(jnp.int32)
-    o_ref[...] = jnp.maximum(count - 1, 0)
+    return jnp.maximum(count - 1, 0)
+
+
+def _eval_route_body(d: int, num_markers: int, refs):
+    """Fused Balance/Ghost routing eval over a (block, d+1) face tile: the
+    neighbor interval's last key (key | span-1, uint64 as two uint32 words
+    via an O(log) select mask — keys are span-aligned) and the [first, last]
+    owner-rank range of the interval against the marker table."""
+    L = MAXLEVEL[d]
+    (t_ref, hi_ref, lo_ref, lvl_ref, mt_ref, mhi_ref, mlo_ref,
+     ohhi_ref, ohlo_ref, ofirst_ref, olast_ref) = refs
+    t, hi, lo, lvl = t_ref[...], hi_ref[...], lo_ref[...], lvl_ref[...]
+    mt, mhi, mlo = mt_ref[...], mhi_ref[...], mlo_ref[...]
+    sb = d * (L - lvl)
+    one = u64m.U64(jnp.zeros_like(hi), jnp.full_like(lo, 1))
+    mask = u64m.dec(u64m.select_shl(one, sb, 63))
+    kh = u64m.or_(u64m.U64(hi, lo), mask)
+    ohhi_ref[...] = kh.hi
+    ohlo_ref[...] = kh.lo
+    ofirst_ref[...] = _owner_count_expr(num_markers, t, hi, lo, mt, mhi, mlo)
+    olast_ref[...] = _owner_count_expr(num_markers, t, kh.hi, kh.lo, mt, mhi, mlo)
 
 
 def _inside_body(d: int, refs):
@@ -567,6 +594,29 @@ def owner_rank_kernel(t, hi, lo, mt, mhi, mlo,
         out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32)],
         interpret=interpret,
     )(t, hi, lo, mt, mhi, mlo)[0]
+
+
+def eval_route_kernel(d: int, t, hi, lo, lvl, mt, mhi, mlo,
+                      block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """t/hi/lo/lvl: per-(element, face) target tree, neighbor key words and
+    element level, each a (N, d+1) tile with N % block == 0.  mt/mhi/mlo:
+    sentinel-padded partition markers (P,).  Returns (khi64_hi, khi64_lo,
+    first, last): the interval-end key words (uint32) and the owner-rank
+    range (int32) per pair, each (N, d+1)."""
+    n = t.shape[0]
+    nf = d + 1
+    num_markers = mt.shape[0]
+    spec = pl.BlockSpec((block, nf), lambda i: (i, 0))
+    mspec = pl.BlockSpec((num_markers,), lambda i: (0,))
+    return pl.pallas_call(
+        lambda *refs: _eval_route_body(d, num_markers, refs),
+        grid=(n // block,),
+        in_specs=[spec] * 4 + [mspec] * 3,
+        out_specs=[spec] * 4,
+        out_shape=[jax.ShapeDtypeStruct((n, nf), jnp.uint32)] * 2
+        + [jax.ShapeDtypeStruct((n, nf), jnp.int32)] * 2,
+        interpret=interpret,
+    )(t, hi, lo, lvl, mt, mhi, mlo)
 
 
 def successor_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True):

@@ -430,6 +430,22 @@ def test_balance_completion_order_invariant(seed):
         np.testing.assert_array_equal(a.tree, b.tree)
 
 
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_ghost_completion_order_invariant(seed):
+    """Property: the double-buffered ghost is bit-identical to the
+    serialized baseline — ghost layers, owners, AND payload bytes — under
+    randomized handle-completion interleavings."""
+    fs = F.balance(_jitter_fixture(), SimComm(2))
+    cj, cs = JitterComm(2, seed), SimComm(2)
+    out_j = F.ghost(fs, cj, overlap=True)
+    out_s = F.ghost(fs, cs, overlap=False)
+    for a, b in zip(out_j, out_s):
+        for k in ("anchor", "level", "stype", "tree", "owner"):
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    assert cj.bytes_for("ghost") == cs.bytes_for("ghost")
+
+
 def test_balance_latencycomm_matches_simcomm():
     """LatencyComm changes timing only: balance over it is bit-identical to
     SimComm, overlapped and serialized."""

@@ -243,3 +243,29 @@ def test_partition_single_element_forest():
     assert F.count_global(bal) == 1
     gh = F.ghost(bal, comm)
     assert all(len(g["level"]) == 0 for g in gh)
+
+
+def test_pack_triples_wire_digest():
+    """`_pack_triples` lexsorts column arrays instead of sorting Python
+    tuples; the wire bytes must be bit-identical to the tuple-sort
+    reimplementation AND to the pinned digest (any byte drift would break
+    cross-version wire compatibility silently)."""
+    import hashlib
+
+    from repro.core.types import pack_wire
+
+    rng = np.random.default_rng(42)
+    t = rng.integers(0, 5, 200)
+    k = rng.integers(0, 1 << 60, 200, dtype=np.uint64)
+    l = rng.integers(0, 21, 200)
+    triples = {(int(a), int(b), int(c)) for a, b, c in zip(t, k, l)}
+    buf = F._pack_triples(triples)
+    uniq = sorted(triples)
+    want = pack_wire(np.array([x[0] for x in uniq], np.int32),
+                     np.array([x[1] for x in uniq], np.uint64),
+                     np.array([x[2] for x in uniq], np.int32))
+    np.testing.assert_array_equal(buf, want)
+    assert hashlib.sha256(buf.tobytes()).hexdigest() == (
+        "f3abf7c3cc47ecbfa21ac0b48b95efddba23d7ef7acfdd42464ecc58893636cd")
+    assert F._pack_triples(()).size == 0
+    assert F._pack_triples(iter(triples)).tobytes() == buf.tobytes()
