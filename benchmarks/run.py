@@ -50,6 +50,15 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
                          imbalance <= 1.1 and element-for-element identity
                          with the single-rank oracle; merges a
                          "repartition" section into BENCH_forest.json
+  chaos                  seeded fault injection on the resilience brick
+                         (ChaosComm over SimComm(4)): per-fault-kind runs
+                         must stay bit-identical to the clean run with
+                         every injection detected and retries bounded; a
+                         stalled rank must surface as a phase-named
+                         CommTimeoutError; crash + Autosaver + recover at
+                         P=3 must match the fresh P=3 run (merges a
+                         "chaos" section into BENCH_forest.json; derived =
+                         injected/detected counts and chaos overhead)
   roofline_summary       reads results/dryrun/*.json (derived = roofline
                          fraction); run `python -m repro.launch.dryrun --all`
                          first
@@ -327,7 +336,7 @@ def forest_backends(tiny: bool = False):
     if out_path.exists():  # keep sibling suites' sections
         prev = json.loads(out_path.read_text())
         for key in ("face_sweep", "overlap", "scale", "repartition",
-                    "device_eval"):
+                    "device_eval", "chaos"):
             if key in prev:
                 report[key] = prev[key]
     out_path.write_text(json.dumps(report, indent=2))
@@ -923,6 +932,140 @@ def repartition(tiny: bool = False):
     row("repartition_json", 0.0, str(out_path))
 
 
+def chaos(tiny: bool = False):
+    """Seeded fault injection on the resilience brick (2x1 Kuhn brick,
+    corner adapt, balance, `ChaosComm` over `SimComm(4)`).
+
+    The robustness acceptance gates, run as benchmark rows so CI smoke
+    exercises them on every push:
+
+      * per fault kind (corrupt / truncate / duplicate / mixed+delay) the
+        chaos run must end bit-identical to the clean run — every injected
+        fault detected by the production unframe/decode path, retries
+        bounded by the per-payload budget — and the row reports the
+        injected/detected counts plus the wall-clock overhead vs clean;
+      * a stalled rank under a wait deadline must surface as a
+        `CommTimeoutError` naming the phase and collective;
+      * crash-at-collective + `Autosaver` + `recover` onto a 3-rank world
+        must match the fresh 3-rank run element for element.
+
+    Merges a "chaos" section into BENCH_forest.json.
+    """
+    import tempfile
+
+    from repro.core import cmesh as Cm
+    from repro.core import forest as F
+    from repro.core.errors import CommTimeoutError, InjectedCrash
+    from repro.core.resilience import Autosaver, ChaosComm, recover
+
+    P = 4
+    cap = 3 if tiny else 4
+    cm = Cm.cmesh_brick(2, (2, 1))
+
+    def corner(tree, elems):
+        a = np.asarray(elems.anchor)
+        l = np.asarray(elems.level)
+        return ((a.sum(1) == 0) & (l < cap)).astype(np.int32)
+
+    def adapted(comm):
+        fs = F.new_uniform(2, cm.num_trees, 2, comm, cmesh=cm)
+        return [F.adapt(f, corner, recursive=True) for f in fs]
+
+    def pipeline(comm):
+        return F.balance(adapted(comm), comm)
+
+    def world(fs):
+        return {k: np.concatenate([np.asarray(getattr(f, k)) for f in fs])
+                for k in ("tree", "anchor", "level", "stype")}
+
+    t0 = time.perf_counter()
+    ref = world(pipeline(F.SimComm(P)))
+    us_clean = (time.perf_counter() - t0) * 1e6
+    n = len(ref["level"])
+    report = {"d": 2, "ranks": P, "elements": n, "seed": 7,
+              "clean_us": us_clean, "faults": {}}
+    row("chaos_clean_baseline", us_clean, f"n={n}")
+
+    kinds = [
+        ("corrupt", dict(p_corrupt=0.3)),
+        ("truncate", dict(p_truncate=0.3)),
+        ("duplicate", dict(p_duplicate=0.3)),
+        ("mixed", dict(p_corrupt=0.15, p_truncate=0.1, p_duplicate=0.05,
+                       p_delay=0.05)),
+    ]
+    for kind, rates in kinds:
+        ch = ChaosComm(F.SimComm(P), seed=7, **rates)
+        t0 = time.perf_counter()
+        got = world(pipeline(ch))
+        us = (time.perf_counter() - t0) * 1e6
+        identical = all(np.array_equal(got[k], ref[k]) for k in ref)
+        inj, det = ch.injected(), ch.fault_counts["detected"]
+        assert identical, f"chaos[{kind}] produced a different forest"
+        assert inj > 0, f"chaos[{kind}] injected nothing at these rates"
+        assert det == inj, (kind, ch.fault_counts)
+        assert ch.fault_counts["retries"] <= inj * ch.cfg.max_retries
+        report["faults"][kind] = {
+            "rates": rates, "injected": inj, "detected": det,
+            "retries": ch.fault_counts["retries"], "us": us,
+            "overhead_vs_clean": us / us_clean, "identical": identical,
+        }
+        row(f"chaos_{kind}", us,
+            f"identical={int(identical)}:injected={inj}:detected={det}"
+            f":retries={ch.fault_counts['retries']}")
+
+    # a stalled rank surfaces as a phase-named timeout, not a hang
+    ch = ChaosComm(F.SimComm(P), stall_after=2, phases=("balance",))
+    ch.set_deadline(0.05 if tiny else 0.2)
+    try:
+        pipeline(ch)
+        raise AssertionError("stalled collective did not time out")
+    except CommTimeoutError as e:
+        assert e.phase == "balance", e
+        report["stall"] = {"phase": e.phase, "seq": e.seq,
+                           "elapsed_s": e.elapsed_s, "polls": e.retries}
+        row("chaos_stall_deadline", e.elapsed_s * 1e6,
+            f"timeout_phase={e.phase}:seq={e.seq}")
+
+    # crash mid-balance -> Autosaver checkpoint -> elastic recover at P-1
+    with tempfile.TemporaryDirectory() as td:
+        ckpt = Path(td) / "autosave"
+        ch = ChaosComm(F.SimComm(P), crash_at=3, crash_ranks=(3,),
+                       phases=("balance",))
+        saver = Autosaver(ckpt).install()
+        try:
+            fs = adapted(ch)
+            try:
+                F.balance(fs, ch)
+                raise AssertionError("injected crash did not fire")
+            except InjectedCrash:
+                pass
+        finally:
+            saver.uninstall()
+        c3 = F.SimComm(P - 1)
+        t0 = time.perf_counter()
+        done = F.balance(recover(ckpt, c3, cmesh=cm), c3)
+        us_rec = (time.perf_counter() - t0) * 1e6
+        got = world(done)
+        fresh = world(pipeline(F.SimComm(P - 1)))
+        identical = all(np.array_equal(got[k], fresh[k]) for k in fresh)
+        assert identical, "recovered P=3 diverged from fresh P=3"
+        report["crash_recover"] = {
+            "crash_at": 3, "victim_rank": 3, "survivor_ranks": P - 1,
+            "recover_and_balance_us": us_rec, "elements": len(got["level"]),
+            "identical_to_fresh": identical,
+        }
+        row("chaos_crash_recover", us_rec,
+            f"P={P}->{P - 1}:identical={int(identical)}"
+            f":elements={len(got['level'])}")
+
+    name = "BENCH_forest_tiny.json" if tiny else "BENCH_forest.json"
+    out_path = Path(__file__).resolve().parents[1] / name
+    data = json.loads(out_path.read_text()) if out_path.exists() else {}
+    data["chaos"] = report
+    out_path.write_text(json.dumps(data, indent=2))
+    row("chaos_json", 0.0, str(out_path))
+
+
 def roofline_summary():
     d = Path(__file__).resolve().parents[1] / "results" / "dryrun"
     if not d.exists():
@@ -952,6 +1095,7 @@ SUITES = {
     "multitree": multitree,
     "scale": scale,
     "repartition": repartition,
+    "chaos": chaos,
     "roofline_summary": lambda tiny: roofline_summary(),
 }
 

@@ -10,17 +10,28 @@ re-splits the global SFC sequence into equal contiguous runs — the same
 invariant `new_uniform` establishes — so a 4-rank run restores onto 2
 ranks (or 2 onto 4) and passes `validate()` unchanged.
 
+Integrity is end to end: `save_forest` records a CRC32 per payload column
+in the manifest, and `load_forest` re-hashes every restored column,
+cross-checks the element count, and runs the global `forest.validate`
+oracle on the restored sequence before slicing — a corrupted, truncated,
+or bit-flipped checkpoint raises `CheckpointIntegrityError`, never a
+silently wrong forest.  This is what makes the checkpoint a safe
+`recover()` target after a rank failure.
+
 Storage goes through `repro.checkpoint.store` (atomic rename, manifest,
 optional async) so forest checkpoints live next to model checkpoints.
 """
 
 from __future__ import annotations
 
+import zlib
+
 import numpy as np
 
 from repro.core import forest as forest_mod
 from repro.core.cmesh import Cmesh
 from repro.core.comm import Comm
+from repro.core.errors import CheckpointIntegrityError
 from repro.core.forest import Forest, partition_markers
 from repro.core.placement import target_ranks_np
 from repro.core.types import Simplex, pack
@@ -28,6 +39,10 @@ from repro.core.types import Simplex, pack
 from .store import restore_checkpoint, save_checkpoint
 
 __all__ = ["save_forest", "load_forest"]
+
+
+def _column_crc(arr) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
 
 
 def _gather_global(forests: list[Forest], comm: Comm):
@@ -51,7 +66,9 @@ def save_forest(path, forests: list[Forest], comm: Comm, *, step: int = 0):
     """Persist the forest as packed blobs + partition markers.
 
     Collective: every rank participates in the gather; the process hosting
-    global rank 0 writes (under `SimComm` that is the only process)."""
+    global rank 0 writes (under `SimComm` that is the only process).  The
+    manifest carries a CRC32 per payload column so `load_forest` can prove
+    the blobs it reads back are the blobs that were written."""
     f0 = forests[0]
     with comm.phase("checkpoint"):
         anchor, level, stype, tree = _gather_global(forests, comm)
@@ -74,6 +91,7 @@ def save_forest(path, forests: list[Forest], comm: Comm, *, step: int = 0):
         "num_trees": int(f0.num_trees),
         "num_ranks": int(comm.size),
         "count": int(len(level)),
+        "crc32": {k: _column_crc(v) for k, v in tree_payload.items()},
     }
     if 0 in comm.local_ranks:
         out = save_checkpoint(path, tree_payload, step=step, extra_meta=meta)
@@ -85,7 +103,8 @@ def save_forest(path, forests: list[Forest], comm: Comm, *, step: int = 0):
 
 def load_forest(path, comm: Comm, *, step: int | None = None,
                 cmesh: Cmesh | None = None,
-                weights: np.ndarray | None = None) -> list[Forest]:
+                weights: np.ndarray | None = None,
+                verify: bool = True) -> list[Forest]:
     """Restore a forest checkpoint onto `comm` — elastically.
 
     Same rank count as the writer: the saved markers reproduce the original
@@ -97,19 +116,69 @@ def load_forest(path, comm: Comm, *, step: int | None = None,
     land directly on the rebalanced layout `forest.repartition` would reach
     (identical boundaries: both routes go through
     `placement.target_ranks_np` over the same prefix sums).  Returns one
-    `Forest` per local rank (all of them under `SimComm`)."""
+    `Forest` per local rank (all of them under `SimComm`).
+
+    With `verify` (the default) every restored column is CRC32-checked
+    against the manifest, the element count is cross-checked, and the
+    restored GLOBAL sequence must pass `forest.validate` (strict SFC
+    order, inside-root anchors, exact coverage) before it is sliced onto
+    the ranks; any mismatch — including an unreadable or truncated blob —
+    raises `CheckpointIntegrityError`."""
     like = {k: np.zeros(0, np.uint8) for k in
             ("anchor", "level", "stype", "tree", "marker_tree",
              "marker_key_hi", "marker_key_lo")}
-    tree_payload, manifest = restore_checkpoint(path, like, step=step)
-    meta = manifest["meta"]
-    assert meta.get("kind") == "forest", "not a forest checkpoint"
+    try:
+        tree_payload, manifest = restore_checkpoint(path, like, step=step)
+    except CheckpointIntegrityError:
+        raise
+    except FileNotFoundError:
+        raise
+    except Exception as e:
+        raise CheckpointIntegrityError(
+            f"unreadable forest checkpoint at {path!s}: {e}") from e
+    meta = manifest.get("meta", {})
+    if meta.get("kind") != "forest":
+        raise CheckpointIntegrityError(
+            f"not a forest checkpoint: kind={meta.get('kind')!r}")
+    if verify:
+        stored = meta.get("crc32")
+        if stored is not None:
+            for k, v in tree_payload.items():
+                want = stored.get(k)
+                got = _column_crc(v)
+                if want is None or int(want) != got:
+                    raise CheckpointIntegrityError(
+                        f"checkpoint column {k!r} failed its integrity "
+                        f"check: stored crc32={want}, recomputed {got} — "
+                        f"the blob was corrupted or truncated at rest")
     d, num_trees = int(meta["d"]), int(meta["num_trees"])
     anchor = np.asarray(tree_payload["anchor"], np.int32).reshape(-1, d)
     level = np.asarray(tree_payload["level"], np.int32).reshape(-1)
     stype = np.asarray(tree_payload["stype"], np.int32).reshape(-1)
     tree = np.asarray(tree_payload["tree"], np.int32).reshape(-1)
     N = len(level)
+    if verify:
+        want_n = int(meta.get("count", N))
+        if not (len(anchor) == len(stype) == len(tree) == N == want_n):
+            raise CheckpointIntegrityError(
+                f"checkpoint element counts disagree: manifest says "
+                f"{want_n}, columns hold "
+                f"{(len(anchor), N, len(stype), len(tree))}")
+        # the restored GLOBAL sequence must be a valid forest before any
+        # rank-local slicing — hosting-independent, catches reordered or
+        # semantically corrupted (but checksum-consistent) payloads too
+        gf = forest_mod._empty(d, num_trees, 0, 1, cmesh).replace_elements(
+            anchor, level, stype, tree)
+        try:
+            ok = forest_mod.validate([gf])
+        except Exception as e:
+            raise CheckpointIntegrityError(
+                f"restored forest failed validate(): {e}") from e
+        if not ok:
+            raise CheckpointIntegrityError(
+                "restored forest failed validate(): the checkpoint decodes "
+                "but is not a well-formed global SFC sequence (order, "
+                "overlap, root containment, or coverage violated)")
     P = comm.size
     if weights is not None:
         w = np.asarray(weights, np.float64).reshape(-1)

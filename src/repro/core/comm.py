@@ -41,11 +41,15 @@ from __future__ import annotations
 
 import contextlib
 import hashlib
+import random
 import struct
 import time
+import zlib
 from typing import Callable, Sequence
 
 import numpy as np
+
+from .errors import CommTimeoutError, WireFormatError, WireIntegrityError
 
 __all__ = [
     "Comm",
@@ -57,6 +61,11 @@ __all__ = [
     "payload_nbytes",
     "encode_payload",
     "decode_payload",
+    "frame_blob",
+    "unframe_blob",
+    "CommTimeoutError",
+    "WireFormatError",
+    "WireIntegrityError",
 ]
 
 
@@ -136,7 +145,18 @@ def encode_payload(obj) -> bytes:
     return b"".join(out)
 
 
+def _need(buf: bytes, off: int, n: int, what: str) -> None:
+    """Bounds check: the next `n` bytes must exist, else the buffer is
+    truncated — a structured `WireFormatError`, never an IndexError or a
+    short `struct.error` read."""
+    if n < 0 or off + n > len(buf):
+        raise WireFormatError(
+            f"truncated wire payload: need {n} byte(s) for {what} at "
+            f"offset {off}, have {len(buf) - off}")
+
+
 def _dec(buf: bytes, off: int):
+    _need(buf, off, 1, "tag")
     tag = buf[off:off + 1]
     off += 1
     if tag == b"N":
@@ -146,57 +166,166 @@ def _dec(buf: bytes, off: int):
     if tag == b"F":
         return False, off
     if tag == b"u":
+        _need(buf, off, 8, "u64")
         return struct.unpack_from("<Q", buf, off)[0], off + 8
     if tag == b"i":
+        _need(buf, off, 8, "i64")
         return struct.unpack_from("<q", buf, off)[0], off + 8
     if tag == b"I":
+        _need(buf, off, 4, "bigint length")
         n = struct.unpack_from("<I", buf, off)[0]
-        return int(buf[off + 4:off + 4 + n].decode()), off + 4 + n
+        _need(buf, off + 4, n, "bigint digits")
+        try:
+            v = int(buf[off + 4:off + 4 + n].decode())
+        except (UnicodeDecodeError, ValueError) as e:
+            raise WireFormatError(
+                f"malformed bigint in wire payload at offset {off}: {e}"
+            ) from e
+        return v, off + 4 + n
     if tag == b"f":
+        _need(buf, off, 8, "f64")
         return struct.unpack_from("<d", buf, off)[0], off + 8
     if tag == b"s":
+        _need(buf, off, 4, "string length")
         n = struct.unpack_from("<I", buf, off)[0]
-        return buf[off + 4:off + 4 + n].decode(), off + 4 + n
+        _need(buf, off + 4, n, "string bytes")
+        try:
+            s = buf[off + 4:off + 4 + n].decode()
+        except UnicodeDecodeError as e:
+            raise WireFormatError(
+                f"malformed utf-8 string in wire payload at offset {off}: {e}"
+            ) from e
+        return s, off + 4 + n
     if tag == b"y":
+        _need(buf, off, 4, "bytes length")
         n = struct.unpack_from("<I", buf, off)[0]
+        _need(buf, off + 4, n, "bytes body")
         return buf[off + 4:off + 4 + n], off + 4 + n
     if tag == b"a":
+        _need(buf, off, 1, "dtype length")
         dl = struct.unpack_from("<B", buf, off)[0]
         off += 1
-        dt = np.dtype(buf[off:off + dl].decode())
+        _need(buf, off, dl, "dtype string")
+        try:
+            dt = np.dtype(buf[off:off + dl].decode())
+        except (UnicodeDecodeError, TypeError, ValueError) as e:
+            raise WireFormatError(
+                f"bad array dtype in wire payload at offset {off}: {e}"
+            ) from e
+        if dt.hasobject:
+            raise WireFormatError(
+                f"object dtype {dt!r} is not a wire type (offset {off})")
         off += dl
+        _need(buf, off, 1, "ndim")
         ndim = struct.unpack_from("<B", buf, off)[0]
         off += 1
+        _need(buf, off, 4 * ndim, "shape")
         shape = struct.unpack_from(f"<{ndim}I", buf, off)
         off += 4 * ndim
-        n = int(np.prod(shape)) if ndim else 1
+        n = 1
+        for s in shape:
+            n *= int(s)
+        if not ndim:
+            n = 1
         nb = n * dt.itemsize
-        arr = np.frombuffer(buf[off:off + nb], dt).reshape(shape).copy()
+        _need(buf, off, nb, f"array body {dt.str}{tuple(shape)}")
+        try:
+            arr = np.frombuffer(buf[off:off + nb], dt).reshape(shape).copy()
+        except (ValueError, TypeError) as e:
+            raise WireFormatError(
+                f"malformed array in wire payload at offset {off}: {e}"
+            ) from e
         return arr, off + nb
     if tag in (b"l", b"t"):
+        _need(buf, off, 4, "sequence count")
         n = struct.unpack_from("<I", buf, off)[0]
         off += 4
+        # every element takes >= 1 byte, so a count beyond the remaining
+        # bytes is garbage — reject before allocating or looping on it
+        _need(buf, off, n, f"{n} sequence element(s)")
         items = []
         for _ in range(n):
             v, off = _dec(buf, off)
             items.append(v)
         return (items if tag == b"l" else tuple(items)), off
     if tag == b"d":
+        _need(buf, off, 4, "dict count")
         n = struct.unpack_from("<I", buf, off)[0]
         off += 4
+        _need(buf, off, 2 * n, f"{n} dict item(s)")
         d = {}
         for _ in range(n):
             k, off = _dec(buf, off)
             v, off = _dec(buf, off)
-            d[k] = v
+            try:
+                d[k] = v
+            except TypeError as e:  # unhashable decoded key
+                raise WireFormatError(
+                    f"unhashable dict key in wire payload at offset {off}: {e}"
+                ) from e
         return d, off
-    raise ValueError(f"bad wire tag {tag!r} at offset {off - 1}")
+    raise WireFormatError(f"bad wire tag {tag!r} at offset {off - 1}")
 
 
 def decode_payload(buf: bytes):
-    obj, off = _dec(bytes(buf), 0)
-    assert off == len(buf), "trailing bytes in wire payload"
+    """Decode one `encode_payload` buffer.  Malformed input of ANY shape —
+    truncation, trailing garbage, bad tags, bogus counts/dtypes — raises a
+    structured `WireFormatError` (a ValueError subclass); it never leaks a
+    bare `struct.error`, never returns silently wrong columns."""
+    buf = bytes(buf)
+    try:
+        obj, off = _dec(buf, 0)
+    except WireFormatError:
+        raise
+    except (struct.error, ValueError, TypeError, OverflowError,
+            MemoryError, RecursionError) as e:
+        raise WireFormatError(f"malformed wire payload: {e}") from e
+    if off != len(buf):
+        raise WireFormatError(
+            f"trailing bytes in wire payload: decoded {off} of {len(buf)}")
     return obj
+
+
+# ------------------------------------------------------- integrity framing
+# Every blob a DistComm transport moves travels inside a 16-byte integrity
+# frame: magic, u64 body length, CRC32 of the body.  `unframe_blob` turns
+# corruption, truncation, and duplication into a typed `WireIntegrityError`
+# instead of a downstream mis-decode — and because the smallest frame is 16
+# bytes, no transport value can ever be the 1-byte blob that segfaults
+# jaxlib's `blocking_key_value_get_bytes` (`encode_payload(None)` is b"N").
+# Framing lives strictly BETWEEN the codec and the transport: byte meters
+# and `wire_digest()` both see the unframed payload blobs, so digests stay
+# comparable across bindings and with the in-process simulators.
+_FRAME = struct.Struct("<4sQI")
+_FRAME_MAGIC = b"RW01"
+
+
+def frame_blob(blob: bytes) -> bytes:
+    """Wrap a payload blob for the wire: magic + length + CRC32 header."""
+    blob = bytes(blob)
+    return _FRAME.pack(_FRAME_MAGIC, len(blob), zlib.crc32(blob)) + blob
+
+
+def unframe_blob(buf: bytes, *, where: str = "") -> bytes:
+    """Verify and strip a `frame_blob` header; raises `WireIntegrityError`
+    (tagged with `where`: phase/generation/peer) on any mismatch."""
+    buf = bytes(buf)
+    if len(buf) < _FRAME.size:
+        raise WireIntegrityError("frame shorter than header", where=where,
+                                 expected=_FRAME.size, actual=len(buf))
+    magic, length, crc = _FRAME.unpack_from(buf, 0)
+    if magic != _FRAME_MAGIC:
+        raise WireIntegrityError("bad frame magic", where=where,
+                                 expected=_FRAME_MAGIC, actual=magic)
+    body = buf[_FRAME.size:]
+    if len(body) != length:
+        raise WireIntegrityError("frame length mismatch", where=where,
+                                 expected=int(length), actual=len(body))
+    got = zlib.crc32(body)
+    if got != crc:
+        raise WireIntegrityError("frame checksum mismatch", where=where,
+                                 expected=int(crc), actual=int(got))
+    return body
 
 
 # ------------------------------------------------------------------ handles
@@ -211,9 +340,19 @@ class CommHandle:
     round-trips.  Handles must be waited in posting order, identically on
     every rank (MPI tag and collective matching rely on it); the SPMD
     forest code always does.
+
+    Every handle is stamped by the posting `Comm` with the `phase` active
+    at post time and a monotonically increasing `seq`, and — when the comm
+    has a deadline (`comm.set_deadline(s)`, off by default) — a wall-clock
+    deadline.  A deadlined `wait()` drives the transport's poll in an
+    exponential-backoff + jitter loop and raises a structured
+    `CommTimeoutError` (phase, seq, elapsed, retries, pending peers,
+    liveness detail) instead of hanging; without a deadline, `wait()` is
+    the exact single blocking transport call it always was.
     """
 
-    __slots__ = ("_complete", "_poll", "_result", "_done")
+    __slots__ = ("_complete", "_poll", "_result", "_done",
+                 "phase", "seq", "_deadline", "_pending", "_diagnose")
 
     def __init__(self, complete: Callable | None = None,
                  poll: Callable[[], bool] | None = None,
@@ -222,6 +361,11 @@ class CommHandle:
         self._poll = poll
         self._result = result
         self._done = done
+        self.phase = "default"
+        self.seq = -1
+        self._deadline = None    # absolute time.monotonic() bound, or None
+        self._pending = None     # () -> [peer ranks not yet delivered]
+        self._diagnose = None    # () -> detail dict for CommTimeoutError
 
     @classmethod
     def ready(cls, result) -> "CommHandle":
@@ -239,12 +383,37 @@ class CommHandle:
             return self._poll()
         return False
 
-    def wait(self):
-        """Deliver the result, blocking if the exchange is still in flight."""
-        if not self._done:
-            self._result = self._complete()
-            self._complete = self._poll = None
-            self._done = True
+    def wait(self, timeout: float | None = None):
+        """Deliver the result, blocking if the exchange is still in flight.
+
+        With a deadline (stamped at post time, or the tighter of that and
+        an explicit `timeout`), completion is driven through the poll with
+        exponential backoff + jitter and expiry raises `CommTimeoutError`;
+        with none (the default), this is one blocking transport call."""
+        if self._done:
+            return self._result
+        deadline = self._deadline
+        if timeout is not None:
+            t = time.monotonic() + timeout
+            deadline = t if deadline is None else min(deadline, t)
+        if deadline is not None and self._poll is not None:
+            start = time.monotonic()
+            retries = 0
+            delay = 0.0005
+            while not self._poll():
+                now = time.monotonic()
+                if now >= deadline:
+                    raise CommTimeoutError(
+                        phase=self.phase, seq=self.seq,
+                        elapsed_s=now - start, retries=retries,
+                        pending=self._pending() if self._pending else None,
+                        detail=self._diagnose() if self._diagnose else None)
+                retries += 1
+                time.sleep(min(delay, deadline - now) * (0.5 + random.random()))
+                delay = min(delay * 2.0, 0.05)
+        self._result = self._complete()
+        self._complete = self._poll = None
+        self._done = True
         return self._result
 
 
@@ -267,10 +436,28 @@ class Comm:
     size: int
     rank: int            # first (usually only) local rank
     local_ranks: range
+    deadline_s: float | None = None   # per-collective wait budget (opt-in)
 
     def __init__(self):
         self.counters: dict = {}
         self._phases: list[str] = []
+        self._hseq = 0
+
+    def set_deadline(self, seconds: float | None) -> None:
+        """Give every subsequently posted collective a wall-clock wait
+        budget: `wait()` past it raises `CommTimeoutError` naming the
+        phase, seq, and (where the transport knows) the pending peers.
+        `None` (the default) restores plain blocking waits."""
+        self.deadline_s = seconds
+
+    def _stamp(self, h: CommHandle) -> CommHandle:
+        """Tag a freshly posted handle with phase/seq/deadline context."""
+        self._hseq += 1
+        h.seq = self._hseq
+        h.phase = self._phases[-1] if self._phases else "default"
+        if self.deadline_s is not None and not h._done:
+            h._deadline = time.monotonic() + self.deadline_s
+        return h
 
     # -- metering ----------------------------------------------------------
     @contextlib.contextmanager
@@ -322,7 +509,7 @@ class Comm:
         b["allgather_calls"] += 1
         b["allgather_bytes"] += sum(
             payload_nbytes(x) * (self.size - 1) for x in per_local)
-        return self._iallgather(list(per_local))
+        return self._stamp(self._iallgather(list(per_local)))
 
     def ialltoallv(self, send: Sequence[Sequence]) -> CommHandle:
         """Nonblocking `alltoallv`: posts, meters at post time, returns a
@@ -334,7 +521,7 @@ class Comm:
             assert len(send[i]) == self.size
             b["alltoallv_bytes"] += sum(
                 payload_nbytes(x) for q, x in enumerate(send[i]) if q != g)
-        return self._ialltoallv([list(row) for row in send])
+        return self._stamp(self._ialltoallv([list(row) for row in send]))
 
     def barrier(self) -> None:  # pragma: no cover - trivial default
         pass
@@ -456,7 +643,8 @@ class DistComm(Comm):
     cannot cross-match by tag or collective order.
     """
 
-    def __init__(self, timeout_s: float = 120.0, namespace: str = ""):
+    def __init__(self, timeout_s: float = 120.0, namespace: str = "",
+                 beacon: bool = False):
         super().__init__()
         self._timeout_ms = int(timeout_s * 1000)
         self._ns = namespace
@@ -465,6 +653,7 @@ class DistComm(Comm):
         self._MPI = None
         self._client = None
         self._wire = hashlib.sha256()
+        self.retry_counts: dict[str, int] = {}
         mpi = self._try_mpi()
         if mpi is not None:
             from mpi4py import MPI  # noqa: PLC0415
@@ -493,12 +682,17 @@ class DistComm(Comm):
             self._client = client
             self.rank = jax.process_index()
             self.size = jax.process_count()
+        # the liveness beacon is KV-only and OPT-IN: each posted generation
+        # leaves a breadcrumb key so survivors can report a dead peer's
+        # last-alive generation in CommTimeoutError diagnostics
+        self._beacon = bool(beacon) and self._client is not None
         self.local_ranks = range(self.rank, self.rank + 1)
 
     @classmethod
     def _testing_instance(cls, rank: int, size: int, *, mpi=None, MPI=None,
                           client=None, timeout_s: float = 5.0,
-                          namespace: str = "") -> "DistComm":
+                          namespace: str = "",
+                          beacon: bool = False) -> "DistComm":
         """Build a DistComm over injected transports (fake MPI module / fake
         KV client) without a real runtime — the offline transport tests."""
         self = cls.__new__(cls)
@@ -510,6 +704,8 @@ class DistComm(Comm):
         self._MPI = MPI
         self._client = client
         self._wire = hashlib.sha256()
+        self.retry_counts = {}
+        self._beacon = bool(beacon) and client is not None
         self.rank = rank
         self.size = size
         self.local_ranks = range(rank, rank + 1)
@@ -566,6 +762,9 @@ class DistComm(Comm):
     def _key(self, gen: int, tag: str, rest: str) -> str:
         return f"repro_comm/{self._ns}{gen}/{tag}/{rest}"
 
+    def _bkey(self, rank: int, gen: int) -> str:
+        return f"repro_beacon/{self._ns}/{rank}/{gen}"
+
     def _kv_post(self, outbox: dict[int, bytes], tag: str):
         """Publish outbox[q] for each rank q; the exchange state carries the
         inbox cache that the poll and the wait fill cooperatively."""
@@ -575,7 +774,11 @@ class DistComm(Comm):
         me = self.rank
         for q, blob in outbox.items():
             c.key_value_set_bytes(self._key(gen, tag, f"{me}>{q}"), blob)
-        return {"gen": gen, "tag": tag, "inbox": {}}
+        if self._beacon:
+            c.key_value_set_bytes(self._bkey(me, gen),
+                                  frame_blob(struct.pack("<Q", gen)))
+        return {"gen": gen, "tag": tag, "inbox": {},
+                "phase": self._phases[-1] if self._phases else "default"}
 
     def _kv_fetch(self, st, p: int, timeout_ms: int) -> None:
         """Fetch-and-delete peer p's payload into the inbox cache (raises on
@@ -587,12 +790,65 @@ class DistComm(Comm):
 
     def _kv_complete(self, st) -> dict[int, bytes]:
         """Blocking receive side: fetch whatever the poll has not already
-        cached.  Returns {p: payload_from_p} — no barrier, no KV traffic at
-        all when the handle already polled done."""
-        for p in range(self.size):
-            if p != self.rank and p not in st["inbox"]:
-                self._kv_fetch(st, p, self._timeout_ms)
-        return st["inbox"]
+        cached — short probes in a bounded exponential-backoff + jitter
+        loop instead of one flat transport-timeout RPC per peer, so a dead
+        peer surfaces as a `CommTimeoutError` carrying the phase, the
+        generation, the pending peers, and (with the beacon on) each one's
+        last-alive generation.  Returns {p: payload_from_p}; no barrier,
+        and no KV traffic at all when the handle already polled done."""
+        missing = [p for p in range(self.size)
+                   if p != self.rank and p not in st["inbox"]]
+        if not missing:
+            return st["inbox"]
+        start = time.monotonic()
+        deadline = start + self._timeout_ms / 1000.0
+        probe_ms = max(1, min(50, self._timeout_ms))
+        retries = 0
+        delay = 0.0005
+        while True:
+            for p in list(missing):
+                try:
+                    self._kv_fetch(st, p, probe_ms)
+                    missing.remove(p)
+                except Exception:  # noqa: BLE001 - not posted yet
+                    pass
+            if not missing:
+                if retries:
+                    ph = st["phase"]
+                    self.retry_counts[ph] = self.retry_counts.get(ph, 0) + retries
+                return st["inbox"]
+            now = time.monotonic()
+            if now >= deadline:
+                ph = st["phase"]
+                self.retry_counts[ph] = self.retry_counts.get(ph, 0) + retries
+                raise CommTimeoutError(
+                    phase=ph, seq=st["gen"], elapsed_s=now - start,
+                    retries=retries, rank=self.rank, size=self.size,
+                    pending=missing, detail=self._beacon_probe(missing))
+            retries += 1
+            time.sleep(min(delay, deadline - now) * (0.5 + random.random()))
+            delay = min(delay * 2.0, 0.05)
+
+    def _beacon_probe(self, peers) -> dict:
+        """Last-alive generation per stalled peer (or -1 if none seen in
+        the probe window).  Beacon keys are write-only breadcrumbs, never
+        deleted while the run lives, so this is a read-only diagnosis."""
+        if not self._beacon:
+            return {}
+        out = {}
+        lo = max(0, self._gen - 16)
+        for p in peers:
+            last = -1
+            for g in range(self._gen, lo - 1, -1):
+                try:
+                    self._client.blocking_key_value_get_bytes(
+                        self._bkey(p, g), 1)
+                    last = g
+                    break
+                except Exception:  # noqa: BLE001 - no beacon at this gen
+                    continue
+            out[int(p)] = last
+        return {"last_alive_gen": out}
 
     def _kv_ready(self, st) -> bool:
         """Poll-as-progress-driver: probe missing peers with a zero-ish
@@ -609,8 +865,8 @@ class DistComm(Comm):
 
     # -- mpi4py transport --------------------------------------------------
     # Point-to-point packed exchange (alltoallv): each peer gets an 8-byte
-    # length header then the `encode_payload` blob, both as MPI.BYTE-class
-    # buffers (no pickle anywhere).  Sends and header receives post
+    # length header then the integrity-framed `encode_payload` blob, both
+    # as MPI.BYTE-class buffers (no pickle anywhere).  Sends and header receives post
     # immediately; payload receives post once the headers have sized their
     # buffers (in wait() or the poll).  Allgather does NOT use this path:
     # replicating one blob to P-1 peers as point-to-point pairs is O(P^2)
@@ -735,13 +991,37 @@ class DistComm(Comm):
 
     def _post(self, outbox: dict[int, bytes], tag: str):
         """Post one packed exchange on whichever transport is bound; returns
-        (complete, poll) closures delivering/probing {p: blob_from_p}."""
+        (complete, poll, pending, diagnose) — closures delivering/probing
+        {p: blob_from_p}, naming the undelivered peers, and (beacon on)
+        reporting their last-alive generations.  The digest and the byte
+        meters see the raw codec blobs; each transport value travels inside
+        an integrity frame that `complete` verifies and strips, so a
+        corrupted/truncated/duplicated wire byte surfaces as a
+        `WireIntegrityError` naming the phase, generation, and peer."""
         self._wire_update(outbox)
+        phase = self._phases[-1] if self._phases else "default"
+        gen = self._gen
+        framed = {q: frame_blob(b) for q, b in outbox.items()}
         if self._mpi is not None:
-            st = self._mpi_post(outbox)
-            return (lambda: self._mpi_complete(st)), (lambda: self._mpi_test(st))
-        st = self._kv_post(outbox, tag)
-        return (lambda: self._kv_complete(st)), (lambda: self._kv_ready(st))
+            st = self._mpi_post(framed)
+            raw, poll = (lambda: self._mpi_complete(st)), \
+                        (lambda: self._mpi_test(st))
+            pending = None
+        else:
+            st = self._kv_post(framed, tag)
+            raw, poll = (lambda: self._kv_complete(st)), \
+                        (lambda: self._kv_ready(st))
+            pending = lambda: [p for p in range(self.size)
+                               if p != self.rank and p not in st["inbox"]]
+
+        def complete():
+            return {p: unframe_blob(
+                        b, where=f"{phase}:{tag}:gen{gen}:{p}->{self.rank}")
+                    for p, b in raw().items()}
+
+        diagnose = ((lambda: self._beacon_probe(pending()))
+                    if (pending is not None and self._beacon) else None)
+        return complete, poll, pending, diagnose
 
     def _iallgather(self, per_local: list) -> CommHandle:
         x = per_local[0]
@@ -751,18 +1031,25 @@ class DistComm(Comm):
             # native collective path: O(log P) fan-out instead of P-1 p2p
             # pairs per rank, over the SAME per-peer logical blobs — the
             # digest folds them exactly as the KV binding does, so
-            # `wire_digest()` parity across bindings is preserved.
+            # `wire_digest()` parity across bindings is preserved.  The
+            # collective moves the framed blob; every rank's slice is
+            # integrity-checked on delivery.
             self._wire_update(outbox)
-            st = self._mpi_iag_post(blob)
+            phase = self._phases[-1] if self._phases else "default"
+            gen = self._gen
+            st = self._mpi_iag_post(frame_blob(blob))
 
             def deliver():
                 parts = self._mpi_iag_complete(st)
-                out = [decode_payload(parts[p]) for p in range(self.size)]
+                out = [decode_payload(unframe_blob(
+                           parts[p],
+                           where=f"{phase}:iag:gen{gen}:{p}->{self.rank}"))
+                       for p in range(self.size)]
                 out[self.rank] = x
                 return out
 
             return CommHandle(deliver, poll=lambda: self._mpi_iag_test(st))
-        complete, poll = self._post(outbox, "ag")
+        complete, poll, pending, diagnose = self._post(outbox, "ag")
 
         def deliver():
             out = [None] * self.size
@@ -771,13 +1058,16 @@ class DistComm(Comm):
                 out[p] = decode_payload(b)
             return out
 
-        return CommHandle(deliver, poll=poll)
+        h = CommHandle(deliver, poll=poll)
+        h._pending = pending
+        h._diagnose = diagnose
+        return h
 
     def _ialltoallv(self, send: list) -> CommHandle:
         row = send[0]
         outbox = {q: encode_payload(row[q])
                   for q in range(self.size) if q != self.rank}
-        complete, poll = self._post(outbox, "a2a")
+        complete, poll, pending, diagnose = self._post(outbox, "a2a")
 
         def deliver():
             recv = [None] * self.size
@@ -786,4 +1076,7 @@ class DistComm(Comm):
                 recv[p] = decode_payload(b)
             return [recv]
 
-        return CommHandle(deliver, poll=poll)
+        h = CommHandle(deliver, poll=poll)
+        h._pending = pending
+        h._diagnose = diagnose
+        return h

@@ -413,6 +413,22 @@ def adapt(f: Forest, callback: AdaptCallback, recursive: bool = False,
 
 
 # ---------------------------------------------------------------- partition
+# Resilience hooks: callables `hook(event, forests, comm)` fired at the
+# entry and exit of the phase-changing drivers — events "balance:begin"/
+# "balance:end", "repartition:begin"/"repartition:end" (and "partition:*"
+# via the construction-time wrapper).  `repro.core.resilience.Autosaver`
+# installs here to checkpoint the pre-phase state, so a rank crash inside
+# a collective always has a consistent snapshot behind it.  Hooks fire
+# OUTSIDE the phase's comm context: checkpoint traffic meters under its
+# own phase, never polluting balance/repartition byte attribution.
+RESILIENCE_HOOKS: list = []
+
+
+def _fire_hooks(event: str, forests: list, comm: Comm) -> None:
+    for hook in list(RESILIENCE_HOOKS):
+        hook(event, forests, comm)
+
+
 def partition(forests: list[Forest], comm: Comm,
               weights: list[np.ndarray] | None = None) -> list[Forest]:
     """Paper Section 5 (Partition): weighted SFC repartitioning, linear time.
@@ -426,6 +442,20 @@ def partition(forests: list[Forest], comm: Comm,
 def repartition(forests: list[Forest], comm: Comm,
                 weights: list[np.ndarray] | None = None,
                 overlap: bool = True, _phase: str = "repartition") -> list[Forest]:
+    """Dynamic repartition with element migration (see `_repartition_impl`
+    for the algorithm); fires the `RESILIENCE_HOOKS` begin/end events
+    around the migration."""
+    _fire_hooks(f"{_phase}:begin", forests, comm)
+    out = _repartition_impl(forests, comm, weights=weights,
+                            overlap=overlap, _phase=_phase)
+    _fire_hooks(f"{_phase}:end", out, comm)
+    return out
+
+
+def _repartition_impl(forests: list[Forest], comm: Comm,
+                      weights: list[np.ndarray] | None = None,
+                      overlap: bool = True,
+                      _phase: str = "repartition") -> list[Forest]:
     """Dynamic repartition with element migration — the post-adapt rebalance
     step (Holke's dissertation; p4est's `p4est_partition` between refine and
     balance).
@@ -827,6 +857,16 @@ def _pack_triples(triples) -> np.ndarray:
 
 def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64,
             overlap: bool = True) -> list[Forest]:
+    """2:1 balance across faces (see `_balance_impl` for the full ripple
+    algorithm); fires the `RESILIENCE_HOOKS` begin/end events around it."""
+    _fire_hooks("balance:begin", forests, comm)
+    out = _balance_impl(forests, comm, max_rounds=max_rounds, overlap=overlap)
+    _fire_hooks("balance:end", out, comm)
+    return out
+
+
+def _balance_impl(forests: list[Forest], comm: Comm, max_rounds: int = 64,
+                  overlap: bool = True) -> list[Forest]:
     """2:1 balance across faces (ripple algorithm), across tree faces when
     the forest carries a Cmesh (intra-tree otherwise) — message based, with
     the boundary exchange overlapped behind interior compute.

@@ -119,13 +119,36 @@ def pack_wire(tree, key, level, extra=None) -> np.ndarray:
 
 
 def unpack_wire(buf: np.ndarray, with_extra: bool = False):
-    """Inverse of `pack_wire`: returns (tree, key, level[, extra]) columns."""
+    """Inverse of `pack_wire`: returns (tree, key, level[, extra]) columns.
+
+    Malformed input — a buffer that is not a whole number of entries, a
+    non-byte dtype, or entries with out-of-domain tree/level fields (a
+    truncation that happens to land on an entry boundary decodes to
+    garbage columns otherwise) — raises `WireFormatError`, never a bare
+    assert or a silently misaligned view."""
+    from .errors import WireFormatError  # noqa: PLC0415
+
+    try:
+        buf = np.asarray(buf, np.uint8).reshape(-1)
+    except (ValueError, TypeError) as e:
+        raise WireFormatError(f"wire buffer is not a byte array: {e}") from e
     dt = _wire_dtype(with_extra)
-    buf = np.asarray(buf, np.uint8).reshape(-1)
-    assert buf.size % dt.itemsize == 0, "wire buffer is not a whole number of entries"
+    if buf.size % dt.itemsize != 0:
+        raise WireFormatError(
+            f"wire buffer of {buf.size} byte(s) is not a whole number of "
+            f"{dt.itemsize}-byte entries")
     rec = buf.view(dt)
-    out = (rec["tree"].astype(np.int32), rec["key"].astype(np.uint64),
-           rec["level"].astype(np.int32))
+    tree = rec["tree"].astype(np.int32)
+    level = rec["level"].astype(np.int32)
+    if rec.size:
+        if int(tree.min()) < 0:
+            raise WireFormatError(
+                f"wire entries carry negative tree ids (min {int(tree.min())})")
+        if int(level.max()) > 63:
+            raise WireFormatError(
+                f"wire entries carry implausible levels "
+                f"(max {int(level.max())} > 63)")
+    out = (tree, rec["key"].astype(np.uint64), level)
     if with_extra:
         out = out + (rec["extra"].astype(np.int32),)
     return out

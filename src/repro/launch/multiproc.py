@@ -14,7 +14,10 @@ from __future__ import annotations
 import socket
 import subprocess
 import sys
+import time
 from pathlib import Path
+
+from repro.core.errors import RankTimeoutError
 
 __all__ = ["SKEW_BRICK_SETUP", "WEAK_BRICK_SETUP", "free_port", "run_ranks"]
 
@@ -68,18 +71,31 @@ def free_port() -> int:
 
 
 def run_ranks(script: str, num_ranks: int, extra_args: tuple = (),
-              timeout: float = 600.0) -> list[tuple[str, str]]:
+              timeout: float = 600.0, check: bool = True):
     """Run `script` in `num_ranks` concurrent subprocesses.
 
     Each subprocess receives argv = [coordinator_port, rank, *extra_args]
     and a minimal CPU-only environment with the repo's `src` on
-    PYTHONPATH.  Returns the per-rank (stdout, stderr) list; raises
-    RuntimeError naming the first failing rank (with its stderr tail) and
-    TimeoutExpired — after killing every rank — if any rank hangs.
+    PYTHONPATH.
+
+    `timeout` is one HARD wall clock for the whole fleet (not a per-rank
+    budget that stacks to P*timeout when every rank hangs): the deadline
+    starts at launch, every rank's `communicate` gets only the remaining
+    slice, and on expiry ALL stragglers are killed and a
+    `RankTimeoutError` reports each rank's state with its captured stderr
+    tail — so a hung subprocess suite fails fast with a diagnosis instead
+    of stalling the tier.
+
+    With `check` (the default) a nonzero rank raises RuntimeError naming
+    it with its stderr tail; `check=False` instead returns the per-rank
+    `(stdout, stderr, returncode)` triples — the recovery tests use this
+    to run fleets where a crash is the expected outcome.  With `check`
+    the return value stays the historical `(stdout, stderr)` pair list.
     """
     port = free_port()
     env = {"PYTHONPATH": str(_ROOT / "src"), "PATH": "/usr/bin:/bin",
            "JAX_PLATFORMS": "cpu"}
+    deadline = time.monotonic() + timeout
     procs = [
         subprocess.Popen(
             [sys.executable, "-c", script, str(port), str(pid),
@@ -88,16 +104,43 @@ def run_ranks(script: str, num_ranks: int, extra_args: tuple = (),
         )
         for pid in range(num_ranks)
     ]
-    outs = []
-    for pr in procs:
+    outs: list = [None] * num_ranks
+    timed_out = False
+    for pid, pr in enumerate(procs):
         try:
-            outs.append(pr.communicate(timeout=timeout))
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise subprocess.TimeoutExpired(pr.args, timeout)
+            outs[pid] = pr.communicate(timeout=remaining)
         except subprocess.TimeoutExpired:
-            for p2 in procs:
-                p2.kill()
-            for p2 in procs:  # reap: no zombies/undrained pipes left behind
-                p2.wait()
-            raise
+            timed_out = True
+            break
+    if timed_out:
+        for p2 in procs:
+            p2.kill()
+        per_rank = {}
+        for pid, p2 in enumerate(procs):  # reap: no zombies/undrained pipes
+            if outs[pid] is None:
+                try:
+                    out, err = p2.communicate(timeout=5.0)
+                except Exception:  # noqa: BLE001 - double-kill raced the reap
+                    p2.wait()
+                    out, err = "", ""
+                outs[pid] = (out, err)
+                state = "killed after wall-clock timeout"
+            else:
+                state = f"exited {p2.returncode}"
+            per_rank[pid] = (state, outs[pid][1][-2000:])
+        lines = "\n".join(f"  rank {pid}: {st}\n    stderr: {tail!r}"
+                          for pid, (st, tail) in per_rank.items())
+        raise RankTimeoutError(
+            f"run_ranks hit its {timeout:.1f}s wall clock with "
+            f"{sum(1 for s, _ in per_rank.values() if 'killed' in s)} of "
+            f"{num_ranks} rank(s) still running:\n{lines}",
+            per_rank=per_rank)
+    if not check:
+        return [(out, err, procs[pid].returncode)
+                for pid, (out, err) in enumerate(outs)]
     for pid, (out, err) in enumerate(outs):
         if procs[pid].returncode != 0:
             raise RuntimeError(

@@ -1,0 +1,80 @@
+"""`run_ranks` hard wall-clock timeout + expected-failure fleets.
+
+Fast (no jax.distributed): the scripts are plain Python, so these tests
+exercise exactly the harness logic — one shared deadline for the whole
+fleet, straggler kill + reap, per-rank state/stderr in the raised
+`RankTimeoutError`, and the `check=False` triple contract the recovery
+tests rely on when a crash is the expected outcome.
+"""
+
+import time
+
+import pytest
+
+from repro.core.errors import RankTimeoutError
+from repro.launch.multiproc import run_ranks
+
+# argv = [coordinator_port, rank, *extra] — these scripts ignore the port.
+HANG_ODD = r"""
+import sys, time
+rank = int(sys.argv[2])
+if rank % 2:
+    print("hanging", rank, flush=True)
+    sys.stderr.write(f"rank {rank} entering infinite wait\n")
+    sys.stderr.flush()
+    time.sleep(3600)
+print("done", rank, flush=True)
+"""
+
+EXIT_RANK = r"""
+import sys
+rank = int(sys.argv[2])
+sys.stderr.write(f"rank {rank} failing on purpose\n")
+print("ran", rank, flush=True)
+sys.exit(rank)
+"""
+
+
+def test_wall_clock_timeout_kills_stragglers_and_diagnoses():
+    t0 = time.monotonic()
+    with pytest.raises(RankTimeoutError) as ei:
+        run_ranks(HANG_ODD, 2, timeout=3.0)
+    wall = time.monotonic() - t0
+    # one HARD deadline for the fleet, not per-rank budgets that stack
+    assert wall < 30.0
+    e = ei.value
+    assert set(e.per_rank) == {0, 1}
+    state0, _ = e.per_rank[0]
+    state1, tail1 = e.per_rank[1]
+    assert state0 == "exited 0"
+    assert state1 == "killed after wall-clock timeout"
+    assert "entering infinite wait" in tail1  # stderr captured, not lost
+    msg = str(e)
+    assert "1 of 2 rank(s) still running" in msg
+    assert "rank 1: killed after wall-clock timeout" in msg
+
+
+def test_timeout_with_all_ranks_hung():
+    with pytest.raises(RankTimeoutError) as ei:
+        run_ranks("import time\ntime.sleep(3600)\n", 2, timeout=2.0)
+    assert all(st == "killed after wall-clock timeout"
+               for st, _ in ei.value.per_rank.values())
+
+
+def test_check_false_returns_per_rank_triples():
+    res = run_ranks(EXIT_RANK, 3, timeout=60.0, check=False)
+    assert [rc for _, _, rc in res] == [0, 1, 2]
+    for pid, (out, err, _rc) in enumerate(res):
+        assert f"ran {pid}" in out
+        assert f"rank {pid} failing on purpose" in err
+
+
+def test_check_true_raises_naming_failed_rank():
+    with pytest.raises(RuntimeError, match=r"rank 1 exited 1"):
+        run_ranks(EXIT_RANK, 2, timeout=60.0)
+
+
+def test_fast_fleet_returns_pairs_under_check():
+    outs = run_ranks("import sys\nprint('ok', sys.argv[2])\n", 2, timeout=60.0)
+    assert [len(o) for o in outs] == [2, 2]  # historical (stdout, stderr)
+    assert "ok 0" in outs[0][0] and "ok 1" in outs[1][0]

@@ -1,0 +1,243 @@
+"""Chaos injection, deadline/timeout, crash recovery — in-process.
+
+The seeded-fault contract, proved on the reference brick pipeline
+(2x1 Kuhn brick, corner adapt to level 4, balance):
+
+  * byte faults (corrupt/truncate/duplicate) at real rates are ALWAYS
+    detected by the production unframe/decode path and retried — the
+    chaos run ends bit-identical to the fault-free run, never silently
+    wrong, with every injection counted and every retry metered;
+  * a persistently bad link exhausts the bounded retry budget and
+    raises the typed detection error — no unbounded loop;
+  * a stalled rank surfaces through the deadline machinery as a
+    `CommTimeoutError` naming the phase;
+  * `BalanceNonConvergence` carries the round budget and per-rank
+    still-dirty counts;
+  * crash mid-balance + `Autosaver` checkpoint + `recover` at reduced P
+    completes element-for-element identical to a fresh small-world run;
+  * a corrupted checkpoint blob is rejected (`CheckpointIntegrityError`),
+    never restored.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import cmesh as C
+from repro.core import forest as F
+from repro.core.errors import (
+    CheckpointIntegrityError,
+    CommTimeoutError,
+    InjectedCrash,
+    WireIntegrityError,
+)
+from repro.core.resilience import Autosaver, ChaosComm, ChaosConfig, recover
+from repro.checkpoint.forest_io import save_forest
+
+CHAOS_RATES = dict(p_corrupt=0.2, p_truncate=0.1, p_duplicate=0.1,
+                   p_delay=0.05)
+
+
+def _corner(tree, elems, cap=4):
+    a = np.asarray(elems.anchor)
+    l = np.asarray(elems.level)
+    return ((a.sum(1) == 0) & (l < cap)).astype(np.int32)
+
+
+def _adapted(comm, cm):
+    fs = F.new_uniform(2, cm.num_trees, 2, comm, cmesh=cm)
+    return [F.adapt(f, _corner, recursive=True) for f in fs]
+
+
+def _world(fs):
+    """Global (rank-major == SFC-order) concatenation: partition-layout
+    independent, so elastic restores compare against fresh runs."""
+    return {k: np.concatenate([np.asarray(getattr(f, k)) for f in fs])
+            for k in ("tree", "anchor", "level", "stype")}
+
+
+def _assert_world_equal(a, b):
+    for k in ("tree", "anchor", "level", "stype"):
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+def test_chaos_byte_faults_always_detected_and_bit_identical():
+    cm = C.cmesh_brick(2, (2, 1))
+    cc = F.SimComm(4)
+    clean = F.balance(_adapted(cc, cm), cc)
+
+    ch = ChaosComm(F.SimComm(4), seed=7, **CHAOS_RATES)
+    noisy = F.balance(_adapted(ch, cm), ch)
+
+    _assert_world_equal(_world(noisy), _world(clean))
+    inj = ch.injected()
+    assert inj > 0, "rates this high must inject on this pipeline"
+    # NEVER a silently wrong forest: every injected byte fault was caught
+    # by the production unframe/decode path, and each transient fault cost
+    # exactly one bounded redelivery
+    assert ch.fault_counts["detected"] == inj
+    assert ch.fault_counts["retries"] == inj
+    assert ch.fault_counts["delay"] > 0  # reordering was exercised too
+
+
+def test_chaos_shares_meters_with_inner_comm():
+    """Wrapping must not perturb byte attribution: the chaos run's phase
+    meters equal the fault-free run's (faults mutate copies AFTER the
+    inner comm metered the pristine post)."""
+    cm = C.cmesh_brick(2, (2, 1))
+    cc = F.SimComm(4)
+    F.balance(_adapted(cc, cm), cc)
+
+    inner = F.SimComm(4)
+    ch = ChaosComm(inner, seed=7, **CHAOS_RATES)
+    F.balance(_adapted(ch, cm), ch)
+
+    assert ch.counters is inner.counters  # one table, not a fork
+    assert set(ch.counters) == set(cc.counters)
+    assert ch.counters == cc.counters
+    assert ch.size == 4 and ch.P == 4 and len(ch.local_ranks) == 4
+    assert isinstance(ch.wire_digest(), str) and ch.wire_digest()
+
+
+def test_chaos_seed_reproducibility():
+    cm = C.cmesh_brick(2, (2, 1))
+    counts = []
+    for _ in range(2):
+        ch = ChaosComm(F.SimComm(4), seed=7, **CHAOS_RATES)
+        F.balance(_adapted(ch, cm), ch)
+        counts.append(dict(ch.fault_counts))
+    assert counts[0] == counts[1]
+    ch2 = ChaosComm(F.SimComm(4), seed=8, **CHAOS_RATES)
+    F.balance(_adapted(ch2, cm), ch2)
+    assert dict(ch2.fault_counts) != counts[0]  # the seed IS the scenario
+
+
+def test_chaos_persistent_fault_exhausts_bounded_retries():
+    """A rotten link (fault re-rolled on every redelivery at rate 1.0)
+    must exhaust `max_retries` and re-raise the detection error — the
+    retry loop is bounded, and the meters show exactly the budget."""
+    ch = ChaosComm(F.SimComm(2), config=ChaosConfig(
+        seed=0, p_corrupt=1.0, persistent_faults=True, max_retries=3))
+    with pytest.raises(WireIntegrityError):
+        ch.allgather([np.arange(4, dtype=np.int64), "payload"])
+    assert ch.fault_counts["corrupt"] == ch.cfg.max_retries + 1
+    assert ch.fault_counts["detected"] == ch.cfg.max_retries + 1
+    assert ch.fault_counts["retries"] == ch.cfg.max_retries
+
+
+def test_chaos_stall_surfaces_as_phase_named_timeout():
+    cm = C.cmesh_brick(2, (2, 1))
+    ch = ChaosComm(F.SimComm(4), stall_after=2, phases=("balance",))
+    ch.set_deadline(0.3)
+    fs = _adapted(ch, cm)
+    with pytest.raises(CommTimeoutError) as ei:
+        F.balance(fs, ch)
+    e = ei.value
+    assert e.phase == "balance"
+    assert e.seq > 2  # the stalled collective, past the stall_after budget
+    assert e.elapsed_s > 0
+    assert e.retries > 0  # the backoff loop actually polled
+    assert "balance" in str(e) and "timed out" in str(e)
+    assert ch.fault_counts["stall"] >= 1
+
+
+def test_chaos_crash_at_collective():
+    cm = C.cmesh_brick(2, (2, 1))
+    ch = ChaosComm(F.SimComm(4), crash_at=3, crash_ranks=(3,),
+                   phases=("balance",))
+    fs = _adapted(ch, cm)  # partition/adapt phases are not eligible
+    with pytest.raises(InjectedCrash) as ei:
+        F.balance(fs, ch)
+    assert ei.value.phase == "balance"
+    assert ei.value.seq == 3
+    assert ei.value.rank == 3
+    assert ch.fault_counts["crash"] == 1
+
+
+def test_balance_nonconvergence_diagnostics():
+    cm = C.cmesh_brick(2, (2, 1))
+    comm = F.SimComm(4)
+    # a deeper corner (level-2 -> level-5 gap) needs 3 ripple rounds, so a
+    # 1-round budget must fail with the diagnostic payload
+    fs = F.new_uniform(2, cm.num_trees, 2, comm, cmesh=cm)
+    fs = [F.adapt(f, lambda t, e: _corner(t, e, cap=5), recursive=True)
+          for f in fs]
+    with pytest.raises(F.BalanceNonConvergence) as ei:
+        F.balance(fs, comm, max_rounds=1)
+    e = ei.value
+    assert e.rounds == 1
+    assert len(e.dirty_per_rank) == 4
+    assert sum(e.dirty_per_rank) > 0
+    assert "did not converge after 1 rounds" in str(e)
+    assert str(e.dirty_per_rank) in str(e)  # per-rank counts in the message
+
+
+def test_crash_autosave_recover_matches_fresh_small_world(tmp_path):
+    """The in-process twin of the subprocess kill-one-rank acceptance run:
+    crash rank 3 mid-balance at P=4, recover the Autosaver checkpoint on a
+    fresh P=3 world, finish the balance — the result must equal a from-
+    scratch P=3 run element for element (the global SFC sequence is
+    partition-independent, so worlds are compared globally)."""
+    cm = C.cmesh_brick(2, (2, 1))
+    ckpt = tmp_path / "autosave"
+
+    ch = ChaosComm(F.SimComm(4), crash_at=3, crash_ranks=(3,),
+                   phases=("balance",))
+    saver = Autosaver(ckpt).install()
+    try:
+        fs = _adapted(ch, cm)
+        with pytest.raises(InjectedCrash):
+            F.balance(fs, ch)
+    finally:
+        saver.uninstall()
+    assert saver.saved_steps == [0]  # balance:begin snapshot landed pre-crash
+
+    c3 = F.SimComm(3)
+    rec = recover(ckpt, c3, cmesh=cm)  # elastic: 4-rank save -> 3-rank world
+    assert len(rec) == 3
+    done = F.balance(rec, c3)
+
+    c3f = F.SimComm(3)
+    fresh = F.balance(_adapted(c3f, cm), c3f)
+    _assert_world_equal(_world(done), _world(fresh))
+    assert len(_world(done)["level"]) == len(_world(fresh)["level"])
+
+
+def test_autosaver_every_and_events(tmp_path):
+    cm = C.cmesh_brick(2, (2, 1))
+    comm = F.SimComm(2)
+    saver = Autosaver(tmp_path / "ck", every=2).install()
+    try:
+        fs = _adapted(comm, cm)
+        fs = F.balance(fs, comm)     # count 1 -> saves step 0
+        fs = F.balance(fs, comm)     # count 2 -> skipped (every=2)
+        fs = F.balance(fs, comm)     # count 3 -> saves step 1
+    finally:
+        saver.uninstall()
+    assert saver.saved_steps == [0, 1]
+    assert not F.RESILIENCE_HOOKS  # uninstall really removed it
+
+
+def test_corrupted_checkpoint_blob_is_rejected(tmp_path):
+    cm = C.cmesh_brick(2, (2, 1))
+    comm = F.SimComm(2)
+    fs = F.balance(_adapted(comm, cm), comm)
+    save_forest(tmp_path / "ck", fs, comm, step=0)
+
+    blobs = sorted((tmp_path / "ck" / "step_0").glob("arr_*.npy"),
+                   key=lambda p: p.stat().st_size)
+    victim = blobs[-1]  # the largest column: certainly real payload bytes
+    raw = bytearray(victim.read_bytes())
+    raw[-1] ^= 0xFF  # flip a data byte (the .npy header is at the front)
+    victim.write_bytes(bytes(raw))
+
+    with pytest.raises(CheckpointIntegrityError, match="integrity|unreadable"):
+        recover(tmp_path / "ck", F.SimComm(2), cmesh=cm)
+    # verify=False skips the CRC pass — the corruption then has to get
+    # past validate(), which is off too; this knob exists for forensics
+    # only, so just prove it is reachable without the typed error
+    try:
+        recover(tmp_path / "ck", F.SimComm(2), cmesh=cm, verify=False)
+    except CheckpointIntegrityError:  # pragma: no cover - depends on byte hit
+        pytest.fail("verify=False must not run integrity checks")
+    except Exception:
+        pass  # a decode crash without verification is acceptable here

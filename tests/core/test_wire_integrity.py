@@ -1,0 +1,208 @@
+"""Wire hardening: integrity framing, codec fuzzing, packed-triple guards.
+
+Three layers, one invariant — malformed bytes NEVER decode silently wrong:
+
+  * `frame_blob`/`unframe_blob`: any single-byte flip, truncation, or
+    duplication of a framed transport blob raises `WireIntegrityError`
+    (CRC32 detects all single-byte errors; the length field catches every
+    size change);
+  * `decode_payload`: random byte mutations of valid `encode_payload`
+    buffers either decode (harmless mutation) or raise the structured
+    `WireFormatError` — never a bare `struct.error`, `IndexError`,
+    `UnicodeDecodeError`, or assert;
+  * `types.unpack_wire`: ragged or garbage packed-triple buffers raise
+    `WireFormatError` instead of asserting or viewing misaligned columns.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.comm import (
+    _FRAME,
+    decode_payload,
+    encode_payload,
+    frame_blob,
+    unframe_blob,
+)
+from repro.core.errors import WireFormatError, WireIntegrityError
+from repro.core.types import pack_wire, unpack_wire
+
+
+def _sample_payloads():
+    rng = np.random.default_rng(7)
+    return [
+        None,
+        True,
+        -17,
+        1 << 70,
+        3.25,
+        "balance:q",
+        b"\x00\x01\x02",
+        np.arange(33, dtype=np.uint64),
+        rng.integers(0, 100, (5, 3)).astype(np.int32),
+        [np.float64(1.5), "x", None, (2, 3)],
+        {"tree": np.arange(4, dtype=np.int32), "lvl": 2,
+         "nested": {"k": [b"ab", False]}},
+    ]
+
+
+@pytest.mark.parametrize("obj", _sample_payloads())
+def test_frame_roundtrip(obj):
+    blob = encode_payload(obj)
+    framed = frame_blob(blob)
+    assert len(framed) == len(blob) + _FRAME.size
+    assert unframe_blob(framed) == blob
+    back = decode_payload(unframe_blob(framed))
+    assert type(back) is type(obj) or isinstance(obj, (list, tuple, dict))
+
+
+def test_frame_detects_every_single_byte_flip():
+    """CRC32 detects all single-byte errors; header flips hit the magic,
+    length, or checksum checks — so every position must raise."""
+    blob = encode_payload({"a": np.arange(9, dtype=np.int32), "b": "xyz"})
+    framed = frame_blob(blob)
+    for idx in range(len(framed)):
+        bad = bytearray(framed)
+        bad[idx] ^= 0x5A
+        with pytest.raises(WireIntegrityError):
+            unframe_blob(bytes(bad), where=f"flip@{idx}")
+
+
+def test_frame_detects_truncation_and_duplication():
+    framed = frame_blob(encode_payload(list(range(50))))
+    for cut in (1, 7, len(framed) - _FRAME.size, len(framed) - 1):
+        with pytest.raises(WireIntegrityError):
+            unframe_blob(framed[:-cut])
+    with pytest.raises(WireIntegrityError):  # shorter than the header
+        unframe_blob(framed[: _FRAME.size - 1])
+    with pytest.raises(WireIntegrityError):  # body doubled
+        unframe_blob(framed + framed[_FRAME.size:])
+    with pytest.raises(WireIntegrityError):  # whole frame doubled
+        unframe_blob(framed + framed)
+    with pytest.raises(WireIntegrityError):  # foreign magic
+        unframe_blob(b"XX99" + framed[4:])
+
+
+def test_frame_where_context_in_message():
+    framed = bytearray(frame_blob(encode_payload(1)))
+    framed[-1] ^= 1
+    with pytest.raises(WireIntegrityError) as ei:
+        unframe_blob(bytes(framed), where="balance:a2a:gen3:1->0")
+    assert "balance:a2a:gen3:1->0" in str(ei.value)
+    assert ei.value.where == "balance:a2a:gen3:1->0"
+
+
+def test_decode_rejects_truncations_structurally():
+    """Every proper prefix of a valid buffer must raise WireFormatError
+    (the decoder runs out of bytes) — no prefix may decode cleanly, since
+    the codec has no padding."""
+    blob = encode_payload({"a": np.arange(6, dtype=np.uint64),
+                           "s": "hello", "n": [1, 2, None]})
+    for cut in range(1, len(blob)):
+        with pytest.raises(WireFormatError):
+            decode_payload(blob[:cut])
+
+
+def test_decode_rejects_trailing_garbage():
+    blob = encode_payload([1, 2, 3])
+    with pytest.raises(WireFormatError, match="trailing"):
+        decode_payload(blob + b"\x00")
+
+
+def test_decode_rejects_bogus_counts_and_tags():
+    with pytest.raises(WireFormatError):
+        decode_payload(b"")                          # empty buffer
+    with pytest.raises(WireFormatError):
+        decode_payload(b"Z")                         # unknown tag
+    with pytest.raises(WireFormatError):
+        decode_payload(b"l\xff\xff\xff\xff")         # 4G-element list
+    with pytest.raises(WireFormatError):
+        decode_payload(b"d\xff\xff\xff\x7f")         # huge dict count
+    with pytest.raises(WireFormatError):
+        decode_payload(b"s\x10\x00\x00\x00ab")       # short string body
+    with pytest.raises(WireFormatError):
+        decode_payload(b"a\x04<u8!")                 # truncated array header
+    with pytest.raises(WireFormatError):
+        # invalid dtype string
+        decode_payload(b"a\x03zzz\x01\x01\x00\x00\x00" + b"\x00" * 8)
+    with pytest.raises(WireFormatError):
+        # object dtype is not a wire type
+        decode_payload(b"a\x02|O\x01\x01\x00\x00\x00" + b"\x00" * 8)
+
+
+def test_decode_fuzz_random_mutations_never_crash_unstructured():
+    """Property fuzz (seeded): mutate valid payload buffers with byte
+    flips, truncations, insertions, and swaps; every outcome is either a
+    clean decode or a `WireFormatError`.  Anything else — struct.error,
+    IndexError, UnicodeDecodeError, SystemError from numpy — is the class
+    of bug this satellite exists to kill."""
+    rng = np.random.default_rng(0xC0FFEE)
+    payloads = [encode_payload(p) for p in _sample_payloads()]
+    outcomes = {"ok": 0, "rejected": 0}
+    for trial in range(400):
+        blob = bytearray(payloads[int(rng.integers(len(payloads)))])
+        for _ in range(1 + int(rng.integers(3))):
+            op = int(rng.integers(4))
+            if op == 0 and blob:                      # flip
+                blob[int(rng.integers(len(blob)))] ^= 1 + int(rng.integers(255))
+            elif op == 1 and len(blob) > 1:           # truncate
+                del blob[int(rng.integers(1, len(blob))):]
+            elif op == 2:                             # insert garbage
+                at = int(rng.integers(len(blob) + 1))
+                blob[at:at] = bytes(rng.integers(0, 256, 1 + int(rng.integers(4)),
+                                                 dtype=np.uint8))
+            elif blob:                                # swap two bytes
+                i, j = rng.integers(0, len(blob), 2)
+                blob[int(i)], blob[int(j)] = blob[int(j)], blob[int(i)]
+        try:
+            decode_payload(bytes(blob))
+            outcomes["ok"] += 1
+        except WireFormatError:
+            outcomes["rejected"] += 1
+    # the fuzz must actually exercise the reject path
+    assert outcomes["rejected"] > 100, outcomes
+
+
+def test_framed_fuzz_mutation_always_detected_or_identical():
+    """The transport-level guarantee behind 'never a silently wrong
+    forest': a mutated FRAMED blob either unframes to the identical body
+    (mutation missed the frame entirely — impossible here since we always
+    change at least one byte) or raises `WireIntegrityError`."""
+    rng = np.random.default_rng(1234)
+    for trial in range(300):
+        obj = _sample_payloads()[trial % len(_sample_payloads())]
+        framed = bytearray(frame_blob(encode_payload(obj)))
+        kind = trial % 3
+        if kind == 0:
+            framed[int(rng.integers(len(framed)))] ^= 1 + int(rng.integers(255))
+        elif kind == 1:
+            del framed[len(framed) - 1 - int(rng.integers(len(framed) - 1)):]
+        else:
+            framed.extend(framed[_FRAME.size:] or b"\x00")
+        with pytest.raises(WireIntegrityError):
+            unframe_blob(bytes(framed), where=f"fuzz:{trial}")
+
+
+def test_unpack_wire_rejects_ragged_buffers():
+    buf = pack_wire([0, 1], [5, 9], [1, 2])
+    t, k, lv = unpack_wire(buf)
+    np.testing.assert_array_equal(t, [0, 1])
+    np.testing.assert_array_equal(k, [5, 9])
+    np.testing.assert_array_equal(lv, [1, 2])
+    for cut in (1, 5, 12):
+        with pytest.raises(WireFormatError):
+            unpack_wire(buf[:-cut])
+    with pytest.raises(WireFormatError):
+        unpack_wire(np.r_[buf, np.zeros(3, np.uint8)])
+    with pytest.raises(WireFormatError):
+        unpack_wire(buf, with_extra=True)  # 26 bytes is not a multiple of 14
+
+
+def test_unpack_wire_rejects_garbage_columns():
+    # entry-aligned garbage: all 0xFF decodes to tree=-1, level=255 — both
+    # out of domain, so the plausibility guards must fire
+    with pytest.raises(WireFormatError):
+        unpack_wire(np.full(13, 0xFF, np.uint8))
+    ok = pack_wire([2], [77], [63])  # level 63 is the domain edge: accepted
+    t, k, lv = unpack_wire(ok)
+    assert int(lv[0]) == 63

@@ -1,0 +1,142 @@
+"""Kill-one-rank recovery at P=4: four REAL processes, one dies mid-balance.
+
+The tentpole acceptance run.  Phase A launches a 4-rank `jax.distributed`
+world where every rank installs an `Autosaver` hook and wraps its
+`DistComm` in a `ChaosComm` whose only fault is crash-at-collective for
+rank 3 with `hard_exit` — so rank 3 dies like a real process
+(`os._exit(2)`, no Python unwind), NOT via a tidy exception.  The
+survivors run with a wait deadline and must surface the death as a
+`CommTimeoutError` that names the phase ("balance") and the missing peer
+(3), then leave.  Rank 0 is never the victim: it hosts the coordinator.
+
+Phase B is a FRESH 3-rank world (new coordinator, new KV namespace) that
+`recover`s the Autosaver checkpoint elastically — written by 4 ranks,
+restored onto 3 — finishes the interrupted balance, and gathers the
+world: it must match a from-scratch in-process `SimComm(3)` run of the
+same pipeline element for element.  Globally: the SFC leaf sequence is
+partition-independent, so the concatenated world arrays are the
+comparison, not per-rank slices.
+"""
+
+import pytest
+
+from repro.launch.multiproc import run_ranks
+
+# Both phases use the reference resilience scenario (same domain as
+# tests/core/test_resilience.py): 2x1 Kuhn brick, corner adapt to level 4.
+CRASH_SCRIPT = r"""
+import os
+import sys
+import numpy as np
+import jax
+
+port, pid = sys.argv[1], int(sys.argv[2])
+ckpt = sys.argv[3]
+P = 4
+jax.distributed.initialize(
+    coordinator_address=f"localhost:{port}", num_processes=P, process_id=pid)
+
+from repro.core import cmesh as C
+from repro.core import forest as F
+from repro.core.comm import DistComm
+from repro.core.errors import CommTimeoutError
+from repro.core.resilience import Autosaver, ChaosComm
+
+comm = DistComm(timeout_s=240, namespace="crash.", beacon=True)
+chaos = ChaosComm(comm, crash_at=3, crash_ranks=(3,), phases=("balance",),
+                  hard_exit=True)   # rank 3 dies like a real process
+chaos.set_deadline(10.0)           # survivors' per-collective wait budget
+
+def corner(tree, elems, cap=4):
+    a = np.asarray(elems.anchor)
+    l = np.asarray(elems.level)
+    return ((a.sum(1) == 0) & (l < cap)).astype(np.int32)
+
+cm = C.cmesh_brick(2, (2, 1))
+fs0 = F.new_uniform(2, cm.num_trees, 2, chaos, cmesh=cm)
+fs0 = [F.adapt(f, corner, recursive=True) for f in fs0]
+
+saver = Autosaver(ckpt).install()
+try:
+    F.balance(fs0, chaos)          # rank 3 never returns from here
+    print(f"rank {pid}: balance finished", flush=True)   # must not happen
+    os._exit(4)
+except CommTimeoutError as e:
+    assert e.phase == "balance", e
+    assert e.pending and 3 in e.pending, e
+    print(f"rank {pid}: timeout phase={e.phase} pending={e.pending} "
+          f"detail={e.detail}", flush=True)
+    # os._exit: a clean interpreter exit would hang in jax.distributed
+    # shutdown waiting for the dead rank
+    os._exit(3)
+"""
+
+RECOVER_SCRIPT = r"""
+import sys
+import numpy as np
+import jax
+
+port, pid = sys.argv[1], int(sys.argv[2])
+ckpt = sys.argv[3]
+P = 3
+jax.distributed.initialize(
+    coordinator_address=f"localhost:{port}", num_processes=P, process_id=pid)
+
+from repro.core import cmesh as C
+from repro.core import forest as F
+from repro.core.comm import DistComm
+from repro.core.resilience import recover
+
+comm = DistComm(timeout_s=240, namespace="recover.")
+cm = C.cmesh_brick(2, (2, 1))
+
+fs = recover(ckpt, comm, cmesh=cm)   # 4-rank checkpoint -> 3-rank world
+assert len(fs) == 1 and fs[0].rank == pid and fs[0].num_ranks == P
+fs = F.balance(fs, comm)
+
+blob = (fs[0].tree, fs[0].anchor, fs[0].level, fs[0].stype)
+world = comm.allgather([blob])
+if pid == 0:
+    def corner(tree, elems, cap=4):
+        a = np.asarray(elems.anchor)
+        l = np.asarray(elems.level)
+        return ((a.sum(1) == 0) & (l < cap)).astype(np.int32)
+
+    sim = F.SimComm(P)
+    sfs = F.new_uniform(2, cm.num_trees, 2, sim, cmesh=cm)
+    sfs = [F.adapt(f, corner, recursive=True) for f in sfs]
+    sfs = F.balance(sfs, sim)
+    for i, name in enumerate(("tree", "anchor", "level", "stype")):
+        np.testing.assert_array_equal(
+            np.concatenate([w[i] for w in world]),
+            np.concatenate([np.asarray(getattr(f, name)) for f in sfs]),
+            err_msg=name)
+    n = sum(len(w[0]) for w in world)
+    print(f"rank 0: recovered P=3 == fresh P=3 ({n} elements)", flush=True)
+comm.barrier()
+print(f"rank {pid}: recovery OK", flush=True)
+"""
+
+
+@pytest.mark.slow
+def test_kill_one_rank_recovery(tmp_path):
+    ckpt = tmp_path / "autosave"
+
+    # Phase A: rank 3 hard-dies at its 3rd balance collective.
+    res = run_ranks(CRASH_SCRIPT, 4, extra_args=(ckpt,), timeout=300.0,
+                    check=False)
+    assert res[3][2] == 2, f"rank 3 must hard-exit(2): {res[3]}"
+    for pid in range(3):
+        out, err, rc = res[pid]
+        assert rc == 3, f"survivor {pid} exited {rc}: {err[-2000:]}"
+        assert f"rank {pid}: timeout phase=balance" in out
+        assert "pending=[3]" in out
+        assert "balance finished" not in out
+    # the pre-phase snapshot landed before the crash
+    assert (ckpt / "step_0" / "manifest.json").exists()
+
+    # Phase B: fresh 3-rank world recovers it and finishes the job.
+    outs = run_ranks(RECOVER_SCRIPT, 3, extra_args=(ckpt,), timeout=300.0)
+    for pid, (out, _err) in enumerate(outs):
+        assert f"rank {pid}: recovery OK" in out
+    assert "recovered P=3 == fresh P=3" in outs[0][0]
