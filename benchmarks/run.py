@@ -28,6 +28,13 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
                          6-tree (3D) cube domains per backend; asserts
                          bit-identity and that refinement ripples across
                          tree faces (derived = cross-tree ghost fraction)
+  hybrid                 element-class seam: per-class batched-op latencies
+                         (simplex vs hex on the same batch size), a
+                         hex-vs-simplex Balance at matched element count,
+                         and the mixed-class fixture pipeline with
+                         per-class oracle parity (merges a "hybrid"
+                         section into BENCH_forest.json; derived =
+                         hex/simplex time ratios)
   scale                  overlapped vs serialized Balance under simulated
                          round-trip latency (8k elements, asserts >= 1.3x
                          in the full run) plus REAL DistComm subprocess
@@ -336,7 +343,7 @@ def forest_backends(tiny: bool = False):
     if out_path.exists():  # keep sibling suites' sections
         prev = json.loads(out_path.read_text())
         for key in ("face_sweep", "overlap", "scale", "repartition",
-                    "device_eval", "chaos"):
+                    "device_eval", "chaos", "hybrid"):
             if key in prev:
                 report[key] = prev[key]
     out_path.write_text(json.dumps(report, indent=2))
@@ -563,6 +570,148 @@ def multitree(tiny: bool = False):
             assert a == b if isinstance(a, list) else np.array_equal(a, b), \
                 f"jnp diverged from reference on multitree d={d}"
     row("multitree_identical", 0.0, "reference==jnp")
+
+
+def hybrid(tiny: bool = False):
+    """Element-class seam costs: hex vs simplex, and the mixed fixture.
+
+    Three parts, merged into BENCH_forest.json under "hybrid":
+
+      ops      per-class batched-op latencies (jnp backend, same batch
+               size): morton_key / decode / children / fused face_sweep
+               for ECLASS_SIMPLEX vs ECLASS_HEX at d=3.  The hex rows
+               lower through the same padded jit pipeline keyed
+               (d, eclass), so the ratio measures algorithmic cost (no
+               type LUTs, 2d faces vs d+1), not dispatch overhead.
+
+      balance  hex brick vs simplex 2-tree mesh at MATCHED element count
+               (same d, level, tree count, corner refinement, SimComm(4)):
+               adapt + balance wall time per class, message wire bytes,
+               and element-for-element parity with the generalized
+               balance_oracle for both classes.
+
+      mixed    the cmesh_hybrid_pair fixture through the full pipeline at
+               P=2 with per-class oracle parity — the acceptance smoke CI
+               runs with --tiny.
+    """
+    import jax
+    from repro.core import batch, u64
+    from repro.core import cmesh as Cm
+    from repro.core import forest as F
+    from repro.core.types import ECLASS_HEX, ECLASS_SIMPLEX
+
+    d = 3
+    report = {"d": d, "tiny": tiny, "ops": {}, "balance": {}, "mixed": {}}
+
+    # ---- part 1: per-class batched-op latencies -------------------------
+    from repro.core import get_ops
+    n = 1024 if tiny else 16384
+    rng = np.random.default_rng(0)
+    per_class = {}
+    for ec, tag in ((ECLASS_SIMPLEX, "simplex"), (ECLASS_HEX, "hex")):
+        o = get_ops(d, ec)
+        lv = rng.integers(1, o.L, size=n)
+        ids = u64.from_int(rng.integers(0, 2 ** 40, size=n).astype(np.uint64))
+        import jax.numpy as jnp
+        s = o.from_linear_id(ids, jnp.asarray(lv, jnp.int32))
+        bops = batch.get_batch_ops(d, "jnp", eclass=ec)
+        fns = {
+            "morton_key": lambda: bops.morton_key(s),
+            "decode": lambda: bops.decode(bops.morton_key(s), s.level),
+            "children": lambda: bops.children(s),
+            "face_sweep": lambda: bops.face_sweep(s),
+        }
+        per_class[tag] = {}
+        for name, fn in fns.items():
+            us = _time(lambda: jax.block_until_ready(fn()), n=3)
+            per_class[tag][name] = us
+            row(f"hybrid_op_{tag}_{name}", us, f"{us * 1000 / n:.1f}ns/elem")
+    report["ops"] = {"batch_size": n, **per_class}
+    for name in per_class["simplex"]:
+        ratio = per_class["hex"][name] / per_class["simplex"][name]
+        report["ops"].setdefault("hex_over_simplex", {})[name] = ratio
+    row("hybrid_op_ratio_face_sweep", 0.0,
+        f"{report['ops']['hex_over_simplex']['face_sweep']:.2f}x_hex_vs_simplex")
+
+    # ---- part 2: hex vs simplex balance at matched element count --------
+    level = 1 if tiny else 3
+    P = 4
+    meshes = {
+        "simplex": (Cm.cmesh_unit_cube(2), 2),   # d=2 Kuhn square: 2 trees
+        "hex": (Cm.cmesh_hex_brick(2, (2, 1)), 2),
+    }
+
+    def corner_cb(tree, elems, cap=level + 2):
+        a = np.asarray(elems.anchor)
+        l = np.asarray(elems.level)
+        return ((a.sum(1) == 0) & (l < cap)).astype(np.int32)
+
+    with batch.use_backend("jnp"):
+        for tag, (cm, trees) in meshes.items():
+            comm = F.SimComm(P)
+            base = F.new_uniform(2, trees, level, comm, cmesh=cm)
+            fs = [F.adapt(f, corner_cb, recursive=True) for f in base]
+            us_adapt = _time(
+                lambda: [F.adapt(f, corner_cb, recursive=True) for f in base], n=2)
+            cmm = F.SimComm(P)
+            us_bal = _time(lambda: F.balance(fs, cmm), n=2)
+            cm_msg = F.SimComm(P)
+            out = F.balance(fs, cm_msg)
+            orc = F.balance_oracle(fs, F.SimComm(P))
+            identical = all(
+                np.array_equal(a.keys, b.keys) and np.array_equal(a.tree, b.tree)
+                for a, b in zip(out, orc))
+            assert identical, f"{tag} balance diverged from its oracle"
+            report["balance"][tag] = {
+                "elements": F.count_global(out),
+                "adapt_us": us_adapt, "balance_us": us_bal,
+                "balance_bytes": cm_msg.bytes_for("balance"),
+                "oracle_identical": identical,
+            }
+            row(f"hybrid_balance_{tag}", us_bal,
+                f"n={F.count_global(out)}:oracle_identical={int(identical)}")
+    rb = report["balance"]
+    row("hybrid_balance_ratio", 0.0,
+        f"{rb['hex']['balance_us'] / rb['simplex']['balance_us']:.2f}"
+        f"x_hex_vs_simplex")
+
+    # ---- part 3: the mixed-class fixture pipeline (CI smoke) ------------
+    cm = Cm.cmesh_hybrid_pair(2)
+    comm = F.SimComm(2)
+    fs = F.new_uniform(2, cm.num_trees, 2, comm, cmesh=cm)
+    fs = [F.adapt(f, corner_cb, recursive=True) for f in fs]
+    t0 = time.perf_counter()
+    out = F.balance(fs, comm)
+    gh = F.ghost(out, comm)
+    us_mixed = (time.perf_counter() - t0) * 1e6
+    assert F.validate(out, gh)
+    orc = F.balance_oracle(fs, F.SimComm(2))
+    assert all(np.array_equal(a.keys, b.keys) and np.array_equal(a.tree, b.tree)
+               for a, b in zip(out, orc)), "mixed balance diverged from oracle"
+    gorc = F.ghost_oracle(out, F.SimComm(2))
+    assert all(
+        all(np.array_equal(a[k], b[k])
+            for k in ("anchor", "level", "stype", "tree", "owner"))
+        for a, b in zip(gh, gorc)), "mixed ghost diverged from oracle"
+    te = cm.tree_eclass
+    n_hex = sum(int((te[f.tree] == ECLASS_HEX).sum()) for f in out)
+    n_simp = sum(int((te[f.tree] == ECLASS_SIMPLEX).sum()) for f in out)
+    report["mixed"] = {
+        "domain": "cmesh_hybrid_pair(2)", "ranks": 2,
+        "pipeline_us": us_mixed, "hex_elements": n_hex,
+        "simplex_elements": n_simp,
+        "ghosts": sum(len(g["level"]) for g in gh),
+        "oracle_identical": True,
+    }
+    row("hybrid_mixed_pipeline", us_mixed,
+        f"hex={n_hex}:simplex={n_simp}:oracle_identical=1")
+
+    name = "BENCH_forest_tiny.json" if tiny else "BENCH_forest.json"
+    out_path = Path(__file__).resolve().parents[1] / name
+    data = json.loads(out_path.read_text()) if out_path.exists() else {}
+    data["hybrid"] = report
+    out_path.write_text(json.dumps(data, indent=2))
+    row("hybrid_json", 0.0, str(out_path))
 
 
 _SCALE_SCRIPT = r"""
@@ -1093,6 +1242,7 @@ SUITES = {
     "face_sweep": face_sweep,
     "device_eval": device_eval,
     "multitree": multitree,
+    "hybrid": hybrid,
     "scale": scale,
     "repartition": repartition,
     "chaos": chaos,

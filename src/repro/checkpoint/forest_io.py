@@ -2,8 +2,14 @@
 
 A forest checkpoint persists the paper's Remark 20 low-memory element
 encoding (`repro.core.types.pack`: int32 coords + int8 level + int8 type =
-10/14 bytes per element) for the *global* leaf sequence in (tree, TM-index)
-order, alongside the partition markers of the rank layout that wrote it.
+10/14 bytes per element for simplices; hex meshes drop the type column —
+9/13 bytes) for the *global* leaf sequence in (tree, TM-index) order,
+alongside the partition markers of the rank layout that wrote it.  The
+manifest records the mesh's element class ("eclass": 0 simplex — implied
+when absent, so pre-eclass checkpoints restore unchanged — 1 hex, or
+"mixed" with a per-tree class column); restoring a non-simplex checkpoint
+requires passing the matching `cmesh`, which carries the per-tree classes
+the keys and validation dispatch on.
 Restore is elastic: loading onto the same rank count reproduces the saved
 partition exactly (marker split); loading onto any other rank count
 re-splits the global SFC sequence into equal contiguous runs — the same
@@ -34,9 +40,9 @@ from repro.core.comm import Comm
 from repro.core.errors import CheckpointIntegrityError
 from repro.core.forest import Forest, partition_markers
 from repro.core.placement import target_ranks_np
-from repro.core.types import Simplex, pack
+from repro.core.types import ECLASS_HEX, ECLASS_SIMPLEX, Simplex, pack
 
-from .store import restore_checkpoint, save_checkpoint
+from .store import latest_step, restore_checkpoint, save_checkpoint
 
 __all__ = ["save_forest", "load_forest"]
 
@@ -70,14 +76,26 @@ def save_forest(path, forests: list[Forest], comm: Comm, *, step: int = 0):
     manifest carries a CRC32 per payload column so `load_forest` can prove
     the blobs it reads back are the blobs that were written."""
     f0 = forests[0]
+    cm = f0.cmesh
+    ecs = (ECLASS_SIMPLEX,) if cm is None else cm.eclasses
     with comm.phase("checkpoint"):
         anchor, level, stype, tree = _gather_global(forests, comm)
         mt, mk = partition_markers(forests, comm)
-    blob = pack(Simplex(anchor, level.astype(np.int32), stype.astype(np.int32)))
+    if ecs == (ECLASS_HEX,):
+        # pure-hex mesh: the at-rest encoding has no type column (Remark 20
+        # analogue: 4d+1 bytes per element)
+        blob = pack(Simplex(anchor, level.astype(np.int32),
+                            stype.astype(np.int32)), eclass=ECLASS_HEX)
+        eclass_meta = ECLASS_HEX
+    else:
+        # simplex (byte-identical to the pre-eclass layout) or mixed (the
+        # type column is only meaningful on simplex rows; hex rows are 0)
+        blob = pack(Simplex(anchor, level.astype(np.int32),
+                            stype.astype(np.int32)))
+        eclass_meta = ECLASS_SIMPLEX if len(ecs) == 1 else "mixed"
     tree_payload = {
         "anchor": blob["anchor"],
         "level": blob["level"],
-        "stype": blob["stype"],
         "tree": tree,
         "marker_tree": mt,
         # uint64 keys at rest as two uint32 words: the checkpoint store
@@ -85,12 +103,18 @@ def save_forest(path, forests: list[Forest], comm: Comm, *, step: int = 0):
         "marker_key_hi": (mk >> np.uint64(32)).astype(np.uint32),
         "marker_key_lo": (mk & np.uint64(0xFFFFFFFF)).astype(np.uint32),
     }
+    if "stype" in blob:
+        tree_payload["stype"] = blob["stype"]
+    if eclass_meta == "mixed":
+        # the per-tree class column lets the loader cross-check the cmesh
+        tree_payload["tree_eclass"] = np.asarray(cm.tree_eclass, np.int32)
     meta = {
         "kind": "forest",
         "d": int(f0.d),
         "num_trees": int(f0.num_trees),
         "num_ranks": int(comm.size),
         "count": int(len(level)),
+        "eclass": eclass_meta,
         "crc32": {k: _column_crc(v) for k, v in tree_payload.items()},
     }
     if 0 in comm.local_ranks:
@@ -124,9 +148,18 @@ def load_forest(path, comm: Comm, *, step: int | None = None,
     order, inside-root anchors, exact coverage) before it is sliced onto
     the ranks; any mismatch — including an unreadable or truncated blob —
     raises `CheckpointIntegrityError`."""
-    like = {k: np.zeros(0, np.uint8) for k in
-            ("anchor", "level", "stype", "tree", "marker_tree",
-             "marker_key_hi", "marker_key_lo")}
+    # peek the manifest for the element-class schema first: a hex
+    # checkpoint has no "stype" column, a mixed one adds "tree_eclass",
+    # and the restore structure must match leaf for leaf.  Pre-eclass
+    # manifests carry no "eclass" key — they are simplex checkpoints.
+    eclass_meta = _peek_eclass(path, step)
+    cols = ["anchor", "level", "tree", "marker_tree",
+            "marker_key_hi", "marker_key_lo"]
+    if eclass_meta != ECLASS_HEX:
+        cols.insert(2, "stype")
+    if eclass_meta == "mixed":
+        cols.append("tree_eclass")
+    like = {k: np.zeros(0, np.uint8) for k in cols}
     try:
         tree_payload, manifest = restore_checkpoint(path, like, step=step)
     except CheckpointIntegrityError:
@@ -154,9 +187,32 @@ def load_forest(path, comm: Comm, *, step: int | None = None,
     d, num_trees = int(meta["d"]), int(meta["num_trees"])
     anchor = np.asarray(tree_payload["anchor"], np.int32).reshape(-1, d)
     level = np.asarray(tree_payload["level"], np.int32).reshape(-1)
-    stype = np.asarray(tree_payload["stype"], np.int32).reshape(-1)
+    if "stype" in tree_payload:
+        stype = np.asarray(tree_payload["stype"], np.int32).reshape(-1)
+    else:  # hex checkpoint: no type column at rest, the lane is all-zero
+        stype = np.zeros(len(level), np.int32)
     tree = np.asarray(tree_payload["tree"], np.int32).reshape(-1)
     N = len(level)
+    if eclass_meta != ECLASS_SIMPLEX:
+        # keys and root-containment validation dispatch on per-tree classes,
+        # which live in the cmesh — a class-less restore would silently run
+        # hex leaves through the simplex curve
+        if cmesh is None:
+            raise CheckpointIntegrityError(
+                f"checkpoint at {path!s} holds a non-simplex mesh "
+                f"(eclass={eclass_meta!r}); pass the matching cmesh to "
+                f"load_forest")
+        if eclass_meta == "mixed":
+            saved_te = np.asarray(
+                tree_payload["tree_eclass"], np.int32).reshape(-1)
+            if not np.array_equal(saved_te, np.asarray(cmesh.tree_eclass)):
+                raise CheckpointIntegrityError(
+                    "checkpoint per-tree element classes disagree with the "
+                    "given cmesh")
+        elif tuple(cmesh.eclasses) != (ECLASS_HEX,):
+            raise CheckpointIntegrityError(
+                f"hex checkpoint restored against a cmesh with classes "
+                f"{cmesh.eclasses}")
     if verify:
         want_n = int(meta.get("count", N))
         if not (len(anchor) == len(stype) == len(tree) == N == want_n):
@@ -193,8 +249,9 @@ def load_forest(path, comm: Comm, *, step: int | None = None,
         mk = (np.asarray(tree_payload["marker_key_hi"], np.uint64).reshape(-1)
               << np.uint64(32)) | np.asarray(
                   tree_payload["marker_key_lo"], np.uint64).reshape(-1)
-        s = Simplex(anchor, level, stype)
-        keys = forest_mod.get_batch_ops(d).morton_key_np(s)
+        # per-class key recompute (replace_elements dispatches per tree class)
+        keys = forest_mod._empty(d, num_trees, 0, 1, cmesh).replace_elements(
+            anchor, level, stype, tree).keys
         # first global index whose (tree, key) lex->= marker_r
         bounds = []
         for r in range(P):
@@ -211,3 +268,25 @@ def load_forest(path, comm: Comm, *, step: int | None = None,
         f = forest_mod._empty(d, num_trees, g, P, cmesh)
         out.append(f.replace_elements(anchor[a:b], level[a:b], stype[a:b], tree[a:b]))
     return out
+
+
+def _peek_eclass(path, step):
+    """The "eclass" meta of the checkpoint's manifest (0 when absent —
+    pre-eclass checkpoints are simplex) without restoring any column."""
+    import json
+    from pathlib import Path
+
+    p = Path(path)
+    if step is None:
+        step = latest_step(p)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    mf = p / f"step_{step}" / "manifest.json"
+    try:
+        meta = json.loads(mf.read_text()).get("meta", {})
+    except FileNotFoundError:
+        raise
+    except Exception as e:
+        raise CheckpointIntegrityError(
+            f"unreadable forest checkpoint manifest at {mf}: {e}") from e
+    return meta.get("eclass", ECLASS_SIMPLEX)

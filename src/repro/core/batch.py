@@ -42,8 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import u64 as u64m
-from .ops import SimplexOps, get_ops
-from .types import Simplex
+from .ops import ElementOps, get_ops
+from .types import ECLASS_SIMPLEX, Simplex
 
 __all__ = [
     "BACKENDS",
@@ -176,13 +176,14 @@ def _bump_fetch(name: str) -> None:
 
 
 class FaceSweep(NamedTuple):
-    """Result of the fused all-faces sweep, leading axis = face (d+1 rows).
+    """Result of the fused all-faces sweep, leading axis = face (nf rows:
+    d+1 for simplices, 2d for hexes).
 
-    neighbor  same-level neighbor per face: anchor (d+1, n, d), level/stype
-              (d+1, n) — possibly outside the root (check `inside`)
-    dual      (d+1, n) int32 neighbor's face index back to us
-    inside    (d+1, n) bool inside-root mask
-    key       (d+1, n) U64 neighbor morton keys (garbage where ~inside on a
+    neighbor  same-level neighbor per face: anchor (nf, n, d), level/stype
+              (nf, n) — possibly outside the root (check `inside`)
+    dual      (nf, n) int32 neighbor's face index back to us
+    inside    (nf, n) bool inside-root mask
+    key       (nf, n) U64 neighbor morton keys (garbage where ~inside on a
               domain boundary — never read them there)
     """
 
@@ -206,24 +207,24 @@ def _pad_simplex(s: Simplex, m: int) -> Simplex:
     return Simplex(_pad1(s.anchor, m), _pad1(s.level, m), _pad1(s.stype, m))
 
 
-def _face_sweep_fused(o: SimplexOps):
-    """One jitted program for the whole face sweep: vmap over the d+1 face
+def _face_sweep_fused(o: ElementOps):
+    """One jitted program for the whole face sweep: vmap over the nf face
     indices of (face_neighbor, is_inside_root, morton_key) — a single XLA
-    dispatch instead of 3 x (d+1)."""
+    dispatch instead of 3 x nf."""
 
     def fn(s: Simplex) -> FaceSweep:
         def one(f):
             nb, dual = o.face_neighbor(s, f)
             return FaceSweep(nb, dual, o.is_inside_root(nb), o.morton_key(nb))
 
-        return jax.vmap(one)(jnp.arange(o.d + 1, dtype=jnp.int32))
+        return jax.vmap(one)(jnp.arange(o.nf, dtype=jnp.int32))
 
     return fn
 
 
 @functools.lru_cache(maxsize=None)
-def _jnp_fns(d: int):
-    o = get_ops(d)
+def _jnp_fns(d: int, eclass: int = ECLASS_SIMPLEX):
+    o = get_ops(d, eclass)
     return {
         "morton_key": jax.jit(o.morton_key),
         "decode": jax.jit(o.decode_key),
@@ -395,16 +396,17 @@ def _owner_np(tree: np.ndarray, key: np.ndarray, mt: np.ndarray, mk: np.ndarray)
 
 
 @functools.lru_cache(maxsize=None)
-def _eval_progs(d: int):
-    """The jitted device programs of the fused eval stage, per dimension.
+def _eval_progs(d: int, eclass: int = ECLASS_SIMPLEX):
+    """The jitted device programs of the fused eval stage, per (dimension,
+    element class).
 
     Every program takes padded buffers only — element buffers quantized to
     `_bucket` sizes, leaf tables and markers to their own power-of-two pads
     — so the set of compiled shapes is O(log n) for the life of the process
     (`trace_counts()` observes it; the device_eval suite asserts it)."""
-    o = get_ops(d)
+    o = get_ops(d, eclass)
     L = o.L
-    nf = d + 1
+    nf = o.nf
 
     def lex_lt(t1, h1, l1, t2, h2, l2):
         return (t1 < t2) | (
@@ -472,7 +474,7 @@ def _eval_progs(d: int):
         from repro.kernels import ops as kops
 
         m = s.level.shape[0]
-        nb, dual, inside, key = kops.face_sweep(d, s, min(1024, m))
+        nb, dual, inside, key = kops.face_sweep(d, s, min(1024, m), eclass)
         valid = inside & (jnp.arange(m) < n)[None, :]
         tgt = jnp.broadcast_to(tree[None, :], (nf, m))
         return tgt, key.hi, key.lo, valid, dual, s.level
@@ -558,25 +560,28 @@ def _eval_progs(d: int):
 
 # ------------------------------------------------------------- pallas backend
 @functools.lru_cache(maxsize=None)
-def _pallas_ok(d: int) -> bool:
+def _pallas_ok(d: int, eclass: int = ECLASS_SIMPLEX) -> bool:
     """One-element self-test; on failure the pallas backend degrades to jnp."""
     try:
         from repro.kernels import ops as kops
 
+        nf = get_ops(d, eclass).nf
         s = Simplex(
             jnp.zeros((1, d), jnp.int32), jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32)
         )
-        kops.morton_key(d, s, 16)
-        kops.face_sweep(d, s, 16)
-        z2 = jnp.zeros((d + 1, 16), jnp.int32)
-        u2 = jnp.zeros((d + 1, 16), jnp.uint32)
+        kops.morton_key(d, s, 16, eclass)
+        kops.face_sweep(d, s, 16, eclass)
+        z2 = jnp.zeros((nf, 16), jnp.int32)
+        u2 = jnp.zeros((nf, 16), jnp.uint32)
         kops.eval_route(
             d, z2, u2, u2, z2,
             jnp.full(8, np.iinfo(np.int32).max, jnp.int32),
             jnp.zeros(8, jnp.uint32), jnp.zeros(8, jnp.uint32), 16)
         return True
     except Exception as e:  # noqa: BLE001 - any lowering failure means fallback
-        warnings.warn(f"pallas backend unavailable for d={d} ({e!r}); using jnp")
+        warnings.warn(
+            f"pallas backend unavailable for d={d}, eclass={eclass} ({e!r}); "
+            f"using jnp")
         return False
 
 
@@ -591,13 +596,15 @@ class BatchedOps:
     this surface.
     """
 
-    def __init__(self, d: int, backend: str):
+    def __init__(self, d: int, backend: str, eclass: int = ECLASS_SIMPLEX):
         backend = _resolve(backend, "get_batch_ops()")
-        if backend == "pallas" and not _pallas_ok(d):
+        if backend == "pallas" and not _pallas_ok(d, eclass):
             backend = "jnp"
         self.d = d
+        self.eclass = eclass
         self.backend = backend
-        self.ops: SimplexOps = get_ops(d)
+        self.ops: ElementOps = get_ops(d, eclass)
+        self.nf = self.ops.nf
 
     # -- helpers -----------------------------------------------------------
     def _which(self, n: int, name: str | None = None) -> str:
@@ -610,7 +617,7 @@ class BatchedOps:
     def _jnp(self, name, s: Simplex, *extra):
         n = s.level.shape[0]
         m = _bucket(n)
-        out = _jnp_fns(self.d)[name](_pad_simplex(s, m), *extra)
+        out = _jnp_fns(self.d, self.eclass)[name](_pad_simplex(s, m), *extra)
         return out, n
 
     @staticmethod
@@ -622,7 +629,8 @@ class BatchedOps:
         shapes as the jnp path), then slice the outputs back."""
         n = s.level.shape[0]
         m = _bucket(n)
-        return self._cut(fn(self.d, _pad_simplex(s, m), *extra, min(1024, m)), n)
+        return self._cut(
+            fn(self.d, _pad_simplex(s, m), *extra, min(1024, m), self.eclass), n)
 
     # -- API ---------------------------------------------------------------
     def morton_key(self, s: Simplex) -> u64m.U64:
@@ -652,14 +660,15 @@ class BatchedOps:
             n = key.hi.shape[0]
             m = _bucket(n)
             padded = u64m.U64(_pad1(key.hi, m), _pad1(key.lo, m))
-            return self._cut(_jnp_fns(self.d)["decode"](padded, _pad1(level, m)), n)
+            return self._cut(
+                _jnp_fns(self.d, self.eclass)["decode"](padded, _pad1(level, m)), n)
         from repro.kernels import ops as kops
 
         n = key.hi.shape[0]
         m = _bucket(n)
         padded = u64m.U64(_pad1(key.hi, m), _pad1(key.lo, m))
         return self._cut(
-            kops.decode(self.d, padded, _pad1(level, m), min(1024, m)), n
+            kops.decode(self.d, padded, _pad1(level, m), min(1024, m), self.eclass), n
         )
 
     def parent(self, s: Simplex) -> Simplex:
@@ -718,7 +727,7 @@ class BatchedOps:
         """Eager per-face compose of (face_neighbor, is_inside_root,
         morton_key) — the oracle the fused paths must match bit for bit."""
         cols = [[] for _ in range(4)]
-        for f in range(self.d + 1):
+        for f in range(self.nf):
             nb, dual = self.ops.face_neighbor(s, jnp.int32(f))
             cols[0].append(nb)
             cols[1].append(dual)
@@ -739,8 +748,8 @@ class BatchedOps:
 
     def face_sweep(self, s: Simplex) -> FaceSweep:
         """Fused all-faces sweep: (face_neighbor, is_inside_root, morton_key)
-        for every face 0..d in ONE backend dispatch — the hot query of the
-        Balance/Ghost eval loops (which previously issued 3 x (d+1) separate
+        for every face 0..nf-1 in ONE backend dispatch — the hot query of the
+        Balance/Ghost eval loops (which previously issued 3 x nf separate
         dispatches per layer).  Results carry a leading face axis; slicing
         row f yields exactly what composing the three per-face ops would."""
         n = s.level.shape[0]
@@ -750,11 +759,11 @@ class BatchedOps:
         m = _bucket(n)
         cut = functools.partial(jax.tree_util.tree_map, lambda a: a[:, :n])
         if which == "jnp":
-            return cut(_jnp_fns(self.d)["face_sweep"](_pad_simplex(s, m)))
+            return cut(_jnp_fns(self.d, self.eclass)["face_sweep"](_pad_simplex(s, m)))
         from repro.kernels import ops as kops
 
         nb, dual, inside, key = kops.face_sweep(
-            self.d, _pad_simplex(s, m), min(1024, m))
+            self.d, _pad_simplex(s, m), min(1024, m), self.eclass)
         return cut(FaceSweep(nb, dual, inside, key))
 
     def successor(self, s: Simplex) -> Simplex:
@@ -840,13 +849,13 @@ class BatchedOps:
         tree_ids = np.asarray(tree_ids, np.int32)
         if which == "reference":
             sw = self._face_sweep_reference(s)
-            tgt = np.broadcast_to(tree_ids, (self.d + 1, n)).copy()
+            tgt = np.broadcast_to(tree_ids, (self.nf, n)).copy()
             host = (tgt, u64m.to_np(sw.key), np.asarray(sw.inside),
                     np.asarray(sw.dual), np.asarray(s.level))
             return SweepHandle(n, host, None)
         m = _bucket(n)
         prog = "sweep" if which == "jnp" else "sweep_pallas"
-        dev = _eval_progs(self.d)[prog](
+        dev = _eval_progs(self.d, self.eclass)[prog](
             _pad_simplex(s, m), _pad1(jnp.asarray(tree_ids), m), jnp.int32(n))
         return SweepHandle(n, None, dev)
 
@@ -986,7 +995,7 @@ class BatchedOps:
             need = self._need_ref(sw, table, sw.host[2])
             return need, bmask
         tgtD, khiD, kloD, validD, _dualD, levD = sw.dev
-        need_d, bm_d = _eval_progs(self.d)["need"](
+        need_d, bm_d = _eval_progs(self.d, self.eclass)["need"](
             tgtD, khiD, kloD, validD, levD, *table.dev,
             *self._boundary_scalars(mt, mk, g, P))
         _bump_fetch("eval_2to1")
@@ -1010,7 +1019,7 @@ class BatchedOps:
                 return np.zeros(sw.n, bool)
             return self._need_ref(sw, cache, sw.host[2] & bmask[None, :])
         tgtD, khiD, kloD, validD, _dualD, levD = sw.dev
-        need_d = _eval_progs(self.d)["cache"](
+        need_d = _eval_progs(self.d, self.eclass)["cache"](
             tgtD, khiD, kloD, validD, levD, *cache.dev,
             *self._boundary_scalars(mt, mk, g, P))
         _bump_fetch("eval_cache")
@@ -1043,7 +1052,7 @@ class BatchedOps:
                 first[sel], last[sel])
         mt_j, mkey = _padded_markers_cached(mt, mk)
         prog = "route" if which == "jnp" else "route_pallas"
-        cnt, packed = _eval_progs(self.d)[prog](
+        cnt, packed = _eval_progs(self.d, self.eclass)[prog](
             *sw.dev, mt_j, mkey.hi, mkey.lo, _rank_scalar(g))
         _bump_fetch("eval_route")
         c = int(cnt)
@@ -1087,14 +1096,16 @@ class BatchedOps:
 
 
 @functools.lru_cache(maxsize=None)
-def _cached(d: int, backend: str) -> BatchedOps:
-    return BatchedOps(d, backend)
+def _cached(d: int, backend: str, eclass: int) -> BatchedOps:
+    return BatchedOps(d, backend, eclass)
 
 
-def get_batch_ops(d: int, backend: str | None = None) -> BatchedOps:
-    """The batched element-ops dispatcher for dimension `d`.
+def get_batch_ops(d: int, backend: str | None = None,
+                  eclass: int = ECLASS_SIMPLEX) -> BatchedOps:
+    """The batched element-ops dispatcher for dimension `d` and element
+    class `eclass`.
 
     With no explicit `backend`, follows the global knob at every call — so
     `use_backend(...)` contexts affect forests that were built earlier.
     """
-    return _cached(d, backend if backend is not None else get_backend())
+    return _cached(d, backend if backend is not None else get_backend(), eclass)

@@ -50,8 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .ops import get_ops
-from .tables import MAXLEVEL, get_tables, root_face_planes
-from .types import Simplex
+from .tables import MAXLEVEL, get_tables, hex_root_face_planes, root_face_planes
+from .types import ECLASS_HEX, ECLASS_SIMPLEX, Simplex
 
 __all__ = [
     "Cmesh",
@@ -60,6 +60,8 @@ __all__ = [
     "cmesh_unit_cube",
     "cmesh_brick",
     "cmesh_rotated_pair",
+    "cmesh_hex_brick",
+    "cmesh_hybrid_pair",
     "signed_perm_maps",
     "wrap_i32",
 ]
@@ -121,6 +123,32 @@ def signed_perm_maps(d: int, M) -> tuple[np.ndarray, np.ndarray]:
     return tm.copy(), vm.copy()
 
 
+def _is_signed_perm(d: int, M: np.ndarray) -> bool:
+    """Signed permutation test (the full symmetry group of the cube lattice
+    — hex trees admit every signed permutation, not just the global-sign
+    family the Kuhn complex requires)."""
+    M = np.asarray(M, np.int64)
+    return (
+        M.shape == (d, d)
+        and np.array_equal(np.abs(M).sum(axis=0), np.ones(d, np.int64))
+        and np.array_equal(np.abs(M).sum(axis=1), np.ones(d, np.int64))
+        and bool(np.isin(M, (-1, 0, 1)).all())
+    )
+
+
+def _hex_face_map(d: int, M: np.ndarray) -> np.ndarray:
+    """Face map of a hex tree under linear part `M`: face f = (axis f//2,
+    dir f%2) maps along the image of its normal axis, with the direction
+    flipped on reflected axes."""
+    M = np.asarray(M, np.int64)
+    fm = np.zeros(2 * d, np.int32)
+    for f in range(2 * d):
+        a, sdir = f // 2, f % 2
+        a2 = int(np.nonzero(M[:, a])[0][0])
+        fm[f] = 2 * a2 + (sdir if int(M[a2, a]) > 0 else 1 - sdir)
+    return fm
+
+
 def _perm_matrix_for_type(d: int, b: int) -> np.ndarray:
     """The unique permutation matrix mapping S_0 onto S_b (brute-forced;
     permutations act simply transitively on the Kuhn simplices of a cube)."""
@@ -151,22 +179,46 @@ class Cmesh:
     face_tree[t, f] is -1 where face f of tree t is a *domain boundary*;
     otherwise the face is an *inter-tree face* and (face_M, face_c) map
     tree-t coordinates into the neighbor tree's frame.
+
+    `tree_eclass[t]` is the element class of tree t (ECLASS_SIMPLEX /
+    ECLASS_HEX).  The per-face tables' second axis is sized for the widest
+    class present (d+1 simplex faces, 2d hex faces) — a pure-simplex mesh
+    keeps the historical (K, d+1, ...) shapes exactly.  Classes are unions
+    of whole trees; a face shared between trees of different classes stays
+    a domain boundary (conforming hex|tet gluing is out of scope), so each
+    class group is independently connected.
     """
 
     d: int
     num_trees: int
-    face_tree: np.ndarray      # (K, d+1) int32, -1 = domain boundary
-    face_face: np.ndarray      # (K, d+1) int32, neighbor's face index
-    face_M: np.ndarray         # (K, d+1, d, d) int32 gluing linear part
-    face_c: np.ndarray         # (K, d+1, d) int64 gluing translation (scale 2^L)
-    face_typemap: np.ndarray   # (K, d+1, d!) int32 type map under face_M
-    face_facemap: np.ndarray   # (K, d+1, d!, d+1) int32 vertex/face map
+    face_tree: np.ndarray      # (K, nf_max) int32, -1 = domain boundary
+    face_face: np.ndarray      # (K, nf_max) int32, neighbor's face index
+    face_M: np.ndarray         # (K, nf_max, d, d) int32 gluing linear part
+    face_c: np.ndarray         # (K, nf_max, d) int64 gluing translation (scale 2^L)
+    face_typemap: np.ndarray   # (K, nf_max, d!) int32 type map under face_M
+    face_facemap: np.ndarray   # (K, nf_max, d!, nf_max) int32 vertex/face map
     tree_embed_M: np.ndarray   # (K, d, d) int32 world embedding linear part
     tree_embed_o: np.ndarray   # (K, d) int64 world cube offset (unit scale)
+    tree_eclass: np.ndarray = None  # (K,) int32 element class per tree
+
+    def __post_init__(self):
+        if self.tree_eclass is None:
+            self.tree_eclass = np.zeros(self.num_trees, np.int32)
+        else:
+            self.tree_eclass = np.asarray(self.tree_eclass, np.int32)
 
     @property
     def L(self) -> int:
         return MAXLEVEL[self.d]
+
+    def eclass_of(self, tree: int) -> int:
+        """Element class of `tree` (every leaf of the tree shares it)."""
+        return int(self.tree_eclass[tree])
+
+    @property
+    def eclasses(self) -> tuple:
+        """Sorted distinct element classes present in the mesh."""
+        return tuple(sorted(int(e) for e in np.unique(self.tree_eclass)))
 
     def is_connected(self, tree: int, root_face: int) -> bool:
         """True where `root_face` of `tree` is an inter-tree face (False =
@@ -187,17 +239,19 @@ class Cmesh:
         )
 
     # ------------------------------------------------------------ geometry
-    def root_face_of(self, s: Simplex, face) -> np.ndarray:
+    def root_face_of(self, s: Simplex, face, eclass: int = ECLASS_SIMPLEX) -> np.ndarray:
         """Which root facet contains face `face` of each element (vectorized
         plane tests against the derived facet equations); -1 when the face
         is interior.  `face` is a scalar or (n,) element-face index."""
-        o = get_ops(self.d)
-        coords = np.asarray(o.coordinates(s), np.int64)  # (n, d+1, d)
+        o = get_ops(self.d, eclass)
+        coords = np.asarray(o.coordinates(s), np.int64)  # (n, num_corners, d)
         face = np.broadcast_to(np.asarray(face, np.int32), coords.shape[:1])
-        keep = np.arange(self.d + 1)[None, :] != face[:, None]  # (n, d+1)
-        V = coords[keep].reshape(coords.shape[0], self.d, self.d)
+        fci = np.asarray(o.face_corner_indices)  # (nf, corners per face)
+        V = coords[np.arange(len(face))[:, None], fci[face]]
+        planes = (hex_root_face_planes(self.d) if eclass == ECLASS_HEX
+                  else root_face_planes(self.d))
         out = np.full(V.shape[0], -1, np.int32)
-        for rf, (n_, r_) in enumerate(root_face_planes(self.d)):
+        for rf, (n_, r_) in enumerate(planes):
             on = (V @ np.asarray(n_, np.int64) == (r_ << self.L)).all(axis=1)
             out[on] = rf
         return out
@@ -220,13 +274,14 @@ class Cmesh:
         tm = self.face_typemap[tree, root_face]
         if bops is not None:
             return bops.tree_transform(s, M, c, tm), t2
-        return get_ops(self.d).tree_transform(s, M, wrap_i32(c), tm), t2
+        o = get_ops(self.d, self.eclass_of(tree))
+        return o.tree_transform(s, M, wrap_i32(c), tm), t2
 
     def world_vertices(self, tree: int, s: Simplex) -> np.ndarray:
         """(n, d+1, d) int64 vertex coordinates in the global world lattice
         (scale 2^L per unit cube) — the frame the brute-force test oracles
         match in."""
-        o = get_ops(self.d)
+        o = get_ops(self.d, self.eclass_of(tree))
         coords = np.asarray(o.coordinates(s), np.int64)
         M = self.tree_embed_M[tree].astype(np.int64)
         off = self.tree_embed_o[tree].astype(np.int64) << self.L
@@ -234,33 +289,59 @@ class Cmesh:
 
 
 # ------------------------------------------------------------- construction
-def _from_embeddings(d: int, embeds, box=None, periodic=None) -> Cmesh:
+def _from_embeddings(d: int, embeds, box=None, periodic=None, eclasses=None) -> Cmesh:
     """Derive the full connectivity from per-tree world embeddings
     ``world = M_t @ local + o_t * 2^L`` (unit-scale integer offsets `o_t`),
     by brute-force face matching in world coordinates — the same
-    derive-don't-transcribe approach as `tables.py`."""
+    derive-don't-transcribe approach as `tables.py`.
+
+    `eclasses` is the per-tree element class (default all-simplex).  A face
+    whose two sides belong to trees of *different* classes is left a domain
+    boundary: classes glue only within themselves, so each class group is an
+    independently conforming sub-mesh (the mixed-class contract)."""
     t = get_tables(d)
     L = MAXLEVEL[d]
     nt = t.num_types
     K = len(embeds)
     periodic = tuple(periodic) if periodic is not None else (False,) * d
+    eclasses = ([ECLASS_SIMPLEX] * K if eclasses is None
+                else [int(e) for e in eclasses])
     rv0 = t.ref_verts[0].astype(np.int64)
+    # hex corner j sits at bit pattern ((j >> k) & 1 along axis k) — the
+    # same numbering as HexOps.CORNERS
+    hex_rv = np.array(
+        [[(j >> k) & 1 for k in range(d)] for j in range(1 << d)], np.int64)
+    nf_of = {ECLASS_SIMPLEX: d + 1, ECLASS_HEX: 2 * d}
+    nf_max = max(nf_of[e] for e in eclasses)
 
     Ms, os_ = [], []
     world = []
-    for M, o in embeds:
+    for (M, o), ec in zip(embeds, eclasses):
         M = np.asarray(M, np.int64)
         o = np.asarray(o, np.int64)
-        signed_perm_maps(d, M)  # validates admissibility
+        if ec == ECLASS_SIMPLEX:
+            signed_perm_maps(d, M)  # validates admissibility
+            rv = rv0
+        else:
+            if not _is_signed_perm(d, M):
+                raise ValueError(
+                    f"hex embedding {M.tolist()} is not a signed permutation")
+            rv = hex_rv
         Ms.append(M)
         os_.append(o)
-        world.append(rv0 @ M.T + o)
+        world.append(rv @ M.T + o)
+
+    def face_verts(tr: int, f: int) -> np.ndarray:
+        if eclasses[tr] == ECLASS_SIMPLEX:
+            return np.delete(world[tr], f, axis=0)
+        sel = (hex_rv[:, f // 2] == f % 2)
+        return world[tr][sel]
 
     # face registry in (wrapped) world coordinates at unit scale
     reg: dict[frozenset, list] = {}
     for tr in range(K):
-        for f in range(d + 1):
-            V = np.delete(world[tr], f, axis=0)
+        for f in range(nf_of[eclasses[tr]]):
+            V = face_verts(tr, f)
             w = np.zeros(d, np.int64)
             if box is not None:
                 for k in range(d):
@@ -269,31 +350,37 @@ def _from_embeddings(d: int, embeds, box=None, periodic=None) -> Cmesh:
             key = frozenset(map(tuple, (V + w).tolist()))
             reg.setdefault(key, []).append((tr, f, w))
 
-    face_tree = np.full((K, d + 1), -1, np.int32)
-    face_face = np.zeros((K, d + 1), np.int32)
-    face_M = np.tile(np.eye(d, dtype=np.int32), (K, d + 1, 1, 1))
-    face_c = np.zeros((K, d + 1, d), np.int64)
-    face_typemap = np.tile(np.arange(nt, dtype=np.int32), (K, d + 1, 1))
-    face_facemap = np.tile(np.arange(d + 1, dtype=np.int32), (K, d + 1, nt, 1))
+    face_tree = np.full((K, nf_max), -1, np.int32)
+    face_face = np.zeros((K, nf_max), np.int32)
+    face_M = np.tile(np.eye(d, dtype=np.int32), (K, nf_max, 1, 1))
+    face_c = np.zeros((K, nf_max, d), np.int64)
+    face_typemap = np.tile(np.arange(nt, dtype=np.int32), (K, nf_max, 1))
+    face_facemap = np.tile(np.arange(nf_max, dtype=np.int32), (K, nf_max, nt, 1))
 
     for key, lst in reg.items():
         if len(lst) == 1:
             continue  # domain boundary
         if len(lst) != 2:
             raise ValueError(f"face {sorted(key)} shared by {len(lst)} trees")
+        if eclasses[lst[0][0]] != eclasses[lst[1][0]]:
+            continue  # cross-class face: stays a domain boundary
         for (t1, f1, w1), (t2, f2, w2) in (lst, lst[::-1]):
             M = Ms[t2].T @ Ms[t1]
             c = (Ms[t2].T @ (os_[t1] - os_[t2] + w1 - w2)) << L
             # adjacent cubes keep |c| <= 2*2^L (the factor 2 needs a
             # reflected embedding, e.g. the rotated pair)
             assert np.abs(c).max(initial=0) <= (2 << L), "non-adjacent gluing"
-            tm, vm = signed_perm_maps(d, M)
             face_tree[t1, f1] = t2
             face_face[t1, f1] = f2
             face_M[t1, f1] = M
             face_c[t1, f1] = c
-            face_typemap[t1, f1] = tm
-            face_facemap[t1, f1] = vm
+            if eclasses[t1] == ECLASS_SIMPLEX:
+                tm, vm = signed_perm_maps(d, M)
+                face_typemap[t1, f1] = tm
+                face_facemap[t1, f1, :, :d + 1] = vm
+            else:
+                face_typemap[t1, f1] = 0
+                face_facemap[t1, f1, :, :2 * d] = _hex_face_map(d, M)[None, :]
 
     cm = Cmesh(
         d=d, num_trees=K,
@@ -302,6 +389,7 @@ def _from_embeddings(d: int, embeds, box=None, periodic=None) -> Cmesh:
         face_typemap=face_typemap, face_facemap=face_facemap,
         tree_embed_M=np.stack(Ms).astype(np.int32),
         tree_embed_o=np.stack(os_),
+        tree_eclass=np.asarray(eclasses, np.int32),
     )
     _check_connectivity(cm)
     return cm
@@ -312,15 +400,16 @@ def _check_connectivity(cm: Cmesh) -> None:
     its reverse to the identity) and maps the level-0 outside neighbor of
     the source root exactly onto the neighbor tree's root."""
     d, L = cm.d, cm.L
-    o = get_ops(d)
     root = Simplex(
         jnp.zeros((1, d), jnp.int32), jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32)
     )
     for t1 in range(cm.num_trees):
-        for f1 in range(d + 1):
+        o = get_ops(d, cm.eclass_of(t1))
+        for f1 in range(o.nf):
             t2 = int(cm.face_tree[t1, f1])
             if t2 < 0:
                 continue
+            assert cm.eclass_of(t2) == cm.eclass_of(t1), "cross-class gluing"
             f2 = int(cm.face_face[t1, f1])
             assert int(cm.face_tree[t2, f2]) == t1 and int(cm.face_face[t2, f2]) == f1
             M12, c12 = cm.face_M[t1, f1].astype(np.int64), cm.face_c[t1, f1]
@@ -376,6 +465,36 @@ def cmesh_brick(d: int, shape, periodic=None) -> Cmesh:
 def cmesh_unit_cube(d: int, periodic=None) -> Cmesh:
     """The Kuhn decomposition of one cube: 2 trees in 2D, 6 in 3D."""
     return cmesh_brick(d, (1,) * d, periodic=periodic)
+
+
+def cmesh_hex_brick(d: int, shape, periodic=None) -> Cmesh:
+    """An array of ``prod(shape)`` hex trees (one tree per cell, identity
+    embeddings) on the plain Morton curve; interior and (optionally,
+    per-axis) periodic faces glue, outer faces are domain boundary.
+    Cell order is C order (np.ndindex)."""
+    shape = tuple(int(s) for s in shape)
+    assert len(shape) == d and all(s >= 1 for s in shape)
+    embeds = [(np.eye(d, dtype=np.int64), np.asarray(cell, np.int64))
+              for cell in np.ndindex(shape)]
+    return _from_embeddings(d, embeds, box=shape, periodic=periodic,
+                            eclasses=[ECLASS_HEX] * len(embeds))
+
+
+def cmesh_hybrid_pair(d: int) -> Cmesh:
+    """The mixed-class fixture: one hex tree at the origin cell next to a
+    Kuhn-decomposed simplex cube in the adjacent cell (+1 along axis 0).
+    The shared cube face is a cross-class face and therefore stays a domain
+    boundary; each class group is a (trivially) conforming sub-mesh.  Tree
+    order: tree 0 is the hex, trees 1..d! the simplices."""
+    nt = math.factorial(d)
+    e0 = np.zeros(d, np.int64)
+    e0[0] = 1
+    embeds = [(np.eye(d, dtype=np.int64), np.zeros(d, np.int64))]
+    eclasses = [ECLASS_HEX]
+    for b in range(nt):
+        embeds.append((_perm_matrix_for_type(d, b), e0.copy()))
+        eclasses.append(ECLASS_SIMPLEX)
+    return _from_embeddings(d, embeds, eclasses=eclasses)
 
 
 def cmesh_rotated_pair() -> Cmesh:

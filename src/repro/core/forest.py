@@ -48,10 +48,10 @@ from . import u64 as u64m
 from .batch import BatchedOps, count_dispatch as batch_count_dispatch, get_batch_ops
 from .cmesh import Cmesh, wrap_i32
 from .comm import Comm, CommHandle, DistComm, LatencyComm, LocalComm, SimComm
-from .ops import SimplexOps, get_ops
+from .ops import ElementOps, get_ops
 from .placement import target_ranks_np
 from .tables import face_plane
-from .types import Simplex, pack_wire, unpack_wire
+from .types import ECLASS_SIMPLEX, Simplex, pack_wire, unpack_wire
 
 __all__ = [
     "Forest",
@@ -108,13 +108,36 @@ class Forest:
     cmesh: Cmesh | None = None
 
     @property
-    def ops(self) -> SimplexOps:
-        return get_ops(self.d)
+    def eclasses(self) -> tuple:
+        """Element classes present in the coarse mesh (every leaf of a tree
+        shares the tree's class; no cmesh means the paper's simplex-only
+        setting)."""
+        return (ECLASS_SIMPLEX,) if self.cmesh is None else self.cmesh.eclasses
+
+    @property
+    def eclass(self) -> int:
+        """The single element class of this forest's leaves.  For a forest
+        over a mixed-class cmesh this is the class of the locally present
+        trees; a rank holding leaves of MORE than one class has no single
+        class — group by class first (`_class_groups`)."""
+        ecs = self.eclasses
+        if len(ecs) == 1:
+            return ecs[0]
+        present = np.unique(self.cmesh.tree_eclass[self.tree])
+        if len(present) > 1:
+            raise ValueError(
+                "forest holds leaves of multiple element classes; "
+                "group by class before using per-class ops")
+        return int(present[0]) if len(present) else ECLASS_SIMPLEX
+
+    @property
+    def ops(self) -> ElementOps:
+        return get_ops(self.d, self.eclass)
 
     @property
     def bops(self) -> BatchedOps:
         """Batched element ops under the globally selected backend."""
-        return get_batch_ops(self.d)
+        return get_batch_ops(self.d, eclass=self.eclass)
 
     @property
     def num_local(self) -> int:
@@ -131,15 +154,28 @@ class Forest:
         return s
 
     def replace_elements(self, anchor, level, stype, tree) -> "Forest":
-        s = Simplex(jnp.asarray(anchor), jnp.asarray(level), jnp.asarray(stype))
-        keys = self.bops.morton_key_np(s)
+        anchor = np.asarray(anchor, np.int32)
+        level = np.asarray(level, np.int32)
+        stype = np.asarray(stype, np.int32)
+        tree = np.asarray(tree, np.int32)
+        ecs = self.eclasses
+        if len(ecs) == 1:
+            s = Simplex(jnp.asarray(anchor), jnp.asarray(level), jnp.asarray(stype))
+            keys = get_batch_ops(self.d, eclass=ecs[0]).morton_key_np(s)
+        else:
+            # mixed-class mesh: every tree's leaves encode with the tree's
+            # class — one batched key dispatch per class present
+            keys = np.zeros(len(level), np.uint64)
+            te = self.cmesh.tree_eclass[tree]
+            for ec in ecs:
+                m = te == ec
+                if m.any():
+                    s = Simplex(jnp.asarray(anchor[m]), jnp.asarray(level[m]),
+                                jnp.asarray(stype[m]))
+                    keys[m] = get_batch_ops(self.d, eclass=ec).morton_key_np(s)
         return dataclasses.replace(
             self,
-            anchor=np.asarray(anchor, np.int32),
-            level=np.asarray(level, np.int32),
-            stype=np.asarray(stype, np.int32),
-            tree=np.asarray(tree, np.int32),
-            keys=keys,
+            anchor=anchor, level=level, stype=stype, tree=tree, keys=keys,
         )
 
     def global_first_desc_key(self):
@@ -169,6 +205,78 @@ def _empty(d, num_trees, rank, num_ranks, cmesh=None) -> Forest:
         np.zeros((0, d), np.int32), np.zeros(0, np.int32), np.zeros(0, np.int32),
         np.zeros(0, np.int32), np.zeros(0, np.uint64), cmesh,
     )
+
+
+# ---------------------------------------------------------- element classes
+# The element class is a per-TREE property of the cmesh (classes are unions
+# of whole trees, and cross-class faces are domain boundaries), so a forest
+# over a mixed mesh splits into independent per-class groups: the collective
+# drivers below run the existing single-class pipeline once per class (in
+# the deterministic sorted class order, so all ranks agree) and merge the
+# per-rank results back into stored (tree, key) order.  Single-class meshes
+# — every pre-existing caller — take the direct path, dispatch for dispatch.
+
+
+def _forest_classes(forests) -> tuple:
+    f = forests[0] if isinstance(forests, (list, tuple)) else forests
+    return (ECLASS_SIMPLEX,) if f.cmesh is None else f.cmesh.eclasses
+
+
+def _class_groups(f: Forest):
+    """[(eclass, local element indices)] for the classes locally present,
+    in ascending class order."""
+    ecs = _forest_classes(f)
+    if len(ecs) == 1:
+        return [(ecs[0], np.arange(f.num_local, dtype=np.int64))]
+    te = f.cmesh.tree_eclass[f.tree]
+    return [(ec, np.nonzero(te == ec)[0].astype(np.int64))
+            for ec in ecs if (te == ec).any()] or [
+        (ECLASS_SIMPLEX, np.arange(0, dtype=np.int64))]
+
+
+def _subforest(f: Forest, idx: np.ndarray) -> Forest:
+    """The forest restricted to local elements `idx` (same cmesh / ranks /
+    tree ids — only the leaf arrays shrink).  Derived caches do not carry
+    over: dataclasses.replace builds a fresh object."""
+    return dataclasses.replace(
+        f, anchor=f.anchor[idx], level=f.level[idx], stype=f.stype[idx],
+        tree=f.tree[idx], keys=f.keys[idx])
+
+
+def _class_subforests(forests, ec: int):
+    cm = forests[0].cmesh
+    return [_subforest(f, np.nonzero(cm.tree_eclass[f.tree] == ec)[0])
+            for f in forests]
+
+
+def _merge_class_groups(base: Forest, parts) -> Forest:
+    """Concatenate per-class forests back into one rank forest in stored
+    (tree, key) lex order.  Keys are already correct per part — no key
+    dispatch needed."""
+    tree = np.concatenate([p.tree for p in parts])
+    keys = np.concatenate([p.keys for p in parts])
+    order = np.lexsort((keys, tree))
+    return dataclasses.replace(
+        base,
+        anchor=np.concatenate([p.anchor for p in parts])[order],
+        level=np.concatenate([p.level for p in parts])[order],
+        stype=np.concatenate([p.stype for p in parts])[order],
+        tree=tree[order], keys=keys[order])
+
+
+def _layer_eclass(f: Forest, tree_ids) -> int:
+    """Element class of a layer batch (all its trees must share one — the
+    per-class drivers guarantee it)."""
+    ecs = _forest_classes(f)
+    if len(ecs) == 1:
+        return ecs[0]
+    tid = np.asarray(tree_ids)
+    if tid.size == 0:
+        return ECLASS_SIMPLEX
+    present = np.unique(f.cmesh.tree_eclass[tid])
+    if len(present) > 1:
+        raise ValueError("face_sweep_layer needs a single-class element layer")
+    return int(present[0])
 
 
 # ---------------------------------------------------------------------- new
@@ -203,6 +311,9 @@ def new_uniform_rank(d: int, num_trees: int, level: int, rank: int, num_ranks: i
             f"forest ({d}D, {num_trees} trees)"
         )
     o = get_ops(d)
+    # nc = 2^d for BOTH element classes, so n_per_tree and the partition
+    # arithmetic are class-independent; only the per-tree decode below
+    # dispatches on the tree's class.
     n_per_tree = o.num_elements(level)
     N = n_per_tree * num_trees
     g_first = (N * rank) // num_ranks
@@ -214,16 +325,18 @@ def new_uniform_rank(d: int, num_trees: int, level: int, rank: int, num_ranks: i
     trees = np.arange(g_first // n_per_tree, (g_last - 1) // n_per_tree + 1)
     anchors, levels, stypes, tree_ids = [], [], [], []
     for t in trees:
+        ec = ECLASS_SIMPLEX if cmesh is None else cmesh.eclass_of(int(t))
+        o_t = get_ops(d, ec)
         e_first = g_first - t * n_per_tree if t == trees[0] else 0
         e_last = g_last - t * n_per_tree if t == trees[-1] else n_per_tree
         ids = np.arange(e_first, e_last, dtype=np.uint64)
         if method == "decode":
-            keys = ids << np.uint64(o.d * (o.L - level))
-            s = get_batch_ops(d).decode(
+            keys = ids << np.uint64(o_t.d * (o_t.L - level))
+            s = get_batch_ops(d, eclass=ec).decode(
                 u64m.from_int(keys), jnp.full(len(ids), level, jnp.int32)
             )
         elif method == "successor":
-            s = _range_by_expansion(o, int(e_first), int(e_last), level)
+            s = _range_by_expansion(o_t, int(e_first), int(e_last), level)
         else:
             raise ValueError(method)
         anchors.append(np.asarray(s.anchor))
@@ -236,7 +349,7 @@ def new_uniform_rank(d: int, num_trees: int, level: int, rank: int, num_ranks: i
     )
 
 
-def _range_by_expansion(o: SimplexOps, e_first: int, e_last: int, level: int) -> Simplex:
+def _range_by_expansion(o: ElementOps, e_first: int, e_last: int, level: int) -> Simplex:
     """Create the SFC range [e_first, e_last) at `level` with O(n) total work.
 
     Level-independent per element: start from the coarsest subtree roots that
@@ -328,7 +441,22 @@ def adapt(f: Forest, callback: AdaptCallback, recursive: bool = False,
     are not coarsened within the same call, and vice versa.
     Note: like the paper's Adapt, this is process-local; families straddling
     a partition boundary are not coarsened (call `partition` first if needed).
+
+    On a mixed-class mesh the leaves are grouped by tree element class and
+    adapted per class group (the callback sees each group's (tree_ids,
+    elements) separately); sibling families never straddle classes because
+    classes are unions of whole trees.
     """
+    groups = _class_groups(f)
+    if len(groups) > 1:
+        parts = [_adapt_impl(_subforest(f, idx), callback, recursive, max_passes)
+                 for _, idx in groups]
+        return _merge_class_groups(f, parts)
+    return _adapt_impl(f, callback, recursive, max_passes)
+
+
+def _adapt_impl(f: Forest, callback: AdaptCallback, recursive: bool,
+                max_passes: int) -> Forest:
     o = f.ops
     nc = o.nc
     bops = f.bops
@@ -487,7 +615,8 @@ def _repartition_impl(forests: list[Forest], comm: Comm,
     P = comm.size
     nloc = len(forests)
     d = forests[0].d
-    bops = get_batch_ops(d)
+    cm = forests[0].cmesh
+    classes = _forest_classes(forests)
     if weights is None:
         weights = [np.ones(f.num_local, np.float64) for f in forests]
     weights = [np.asarray(w, np.float64) for w in weights]
@@ -521,8 +650,14 @@ def _repartition_impl(forests: list[Forest], comm: Comm,
             for q in range(P):
                 a, b = int(offs[q]), int(offs[q + 1])
                 if q != g and b > a:
-                    # stored order IS SFC order: pack without sorting
-                    row[q] = pack_wire(f.tree[a:b], f.keys[a:b], f.level[a:b])
+                    # stored order IS SFC order: pack without sorting; the
+                    # wire triples carry each element's tree class in the
+                    # level byte's class bits (zeros — byte-identical to the
+                    # legacy format — on a single-class simplex mesh)
+                    ec_col = (0 if cm is None
+                              else cm.tree_eclass[f.tree[a:b]])
+                    row[q] = pack_wire(f.tree[a:b], f.keys[a:b],
+                                       f.level[a:b], eclass=ec_col)
             keep_off.append((int(offs[g]), int(offs[g + 1])))
             send.append(row)
         h_mig = post(comm.ialltoallv(send))
@@ -546,10 +681,24 @@ def _repartition_impl(forests: list[Forest], comm: Comm,
             rt = np.concatenate([s[1] for s in segs])
             rk = np.concatenate([s[2] for s in segs])
             rl = np.concatenate([s[3] for s in segs])
-            # ONE batched Algorithm-4.8 decode recovers (anchor, stype)
-            # for everything this rank received, across all senders
-            dec = bops.decode(u64m.from_int(rk), jnp.asarray(rl, jnp.int32))
-            ra, rs = np.asarray(dec.anchor), np.asarray(dec.stype)
+            # ONE batched Algorithm-4.8 decode per element class recovers
+            # (anchor, stype) for everything this rank received, across all
+            # senders (single-class meshes: exactly one dispatch, as before)
+            if len(classes) == 1:
+                dec = get_batch_ops(d, eclass=classes[0]).decode(
+                    u64m.from_int(rk), jnp.asarray(rl, jnp.int32))
+                ra, rs = np.asarray(dec.anchor), np.asarray(dec.stype)
+            else:
+                te = cm.tree_eclass[rt]
+                ra = np.zeros((len(rt), d), np.int32)
+                rs = np.zeros(len(rt), np.int32)
+                for ec in classes:
+                    m = te == ec
+                    if m.any():
+                        dec = get_batch_ops(d, eclass=ec).decode(
+                            u64m.from_int(rk[m]), jnp.asarray(rl[m], jnp.int32))
+                        ra[m] = np.asarray(dec.anchor)
+                        rs[m] = np.asarray(dec.stype)
         # each sender's run is SFC-contiguous and senders cover ascending
         # global intervals, so concatenating in sender order (the kept
         # slice at p == g) restores the stored order without a sort
@@ -645,19 +794,20 @@ FACE_DOMAIN_BOUNDARY = 2   # no neighbor: true domain boundary
 @dataclasses.dataclass
 class FaceSweepLayer:
     """Host-side result of ONE fused `face_sweep` dispatch over an element
-    layer, with the cross-tree fixup already applied: for every face 0..d of
+    layer, with the cross-tree fixup already applied: for every face of
     every element, where its neighbor region lives.  Arrays carry a leading
-    face axis of length d+1; `level` is shared (same-level neighbors).
+    face axis of length nf (d+1 for simplices, 2d for hexes); `level` is
+    shared (same-level neighbors).
 
-      tgt     (d+1, n) tree whose leaf table holds the neighbor region
-      nkey    (d+1, n) uint64 neighbor morton key *in that tree's frame*
+      tgt     (nf, n) tree whose leaf table holds the neighbor region
+      nkey    (nf, n) uint64 neighbor morton key *in that tree's frame*
               (garbage where ~valid — never read it there)
-      valid   (d+1, n) False at the domain boundary
-      anchor  (d+1, n, d) / stype (d+1, n): the neighbor, re-expressed in the
+      valid   (nf, n) False at the domain boundary
+      anchor  (nf, n, d) / stype (nf, n): the neighbor, re-expressed in the
               target tree's frame where the face crosses into another tree
-      dual    (d+1, n) neighbor's face index back to us, renumbered through
+      dual    (nf, n) neighbor's face index back to us, renumbered through
               the connection's face map for cross-tree faces
-      kind    (d+1, n) FACE_INTERIOR / FACE_INTER_TREE / FACE_DOMAIN_BOUNDARY
+      kind    (nf, n) FACE_INTERIOR / FACE_INTER_TREE / FACE_DOMAIN_BOUNDARY
 
     The Balance/Ghost/Iterate hot loops compute one sweep per eval layer and
     slice per-face views from it (`face`), instead of re-dispatching
@@ -697,9 +847,15 @@ def face_sweep_layer(f: Forest, tree_ids: np.ndarray, s: Simplex) -> FaceSweepLa
 
     This is the single seam where the old is_root_boundary notion splits
     into "interior", "inter-tree face" (followed through `f.cmesh`), and
-    "domain boundary" (no Cmesh connection)."""
-    bops = f.bops
+    "domain boundary" (no Cmesh connection).
+
+    The layer must be single-class (the per-class drivers guarantee it);
+    the class is derived from `tree_ids` and selects the fused sweep's
+    (d, eclass)-keyed program — one dispatch per class per eval layer."""
+    ec = _layer_eclass(f, tree_ids)
+    bops = get_batch_ops(f.d, eclass=ec)
     d = f.d
+    nf = bops.nf
     sw = bops.face_sweep(s)
     # one host materialization per field; all later bookkeeping is numpy
     anchor = np.asarray(sw.neighbor.anchor)
@@ -710,7 +866,7 @@ def face_sweep_layer(f: Forest, tree_ids: np.ndarray, s: Simplex) -> FaceSweepLa
     nkey = u64m.to_np(sw.key)
     tree_ids = np.asarray(tree_ids)
     n = level.shape[0]
-    tgt = np.broadcast_to(tree_ids, (d + 1, n)).copy()
+    tgt = np.broadcast_to(tree_ids, (nf, n)).copy()
     valid = inside.copy()
     kind = np.where(inside, FACE_INTERIOR, FACE_DOMAIN_BOUNDARY).astype(np.int32)
     cm = f.cmesh
@@ -725,7 +881,7 @@ def face_sweep_layer(f: Forest, tree_ids: np.ndarray, s: Simplex) -> FaceSweepLa
             jnp.asarray(s_anchor[eidx]), jnp.asarray(level[eidx]),
             jnp.asarray(s_stype[eidx]),
         )
-        rf = cm.root_face_of(src, fidx)
+        rf = cm.root_face_of(src, fidx, eclass=ec)
         t1 = tree_ids[eidx]
         conn = (rf >= 0) & (cm.face_tree[t1, np.maximum(rf, 0)] >= 0)
         keep = np.nonzero(conn)[0]
@@ -767,7 +923,7 @@ def _face_lookup(f: Forest, tree_ids: np.ndarray, s: Simplex, face: int):
 
 
 def face_kinds(f: Forest, s: Simplex) -> np.ndarray:
-    """Classify every face of every element in one fused sweep: (d+1, n)
+    """Classify every face of every element in one fused sweep: (nf, n)
     matrix of FACE_INTERIOR (0) / FACE_INTER_TREE (1) /
     FACE_DOMAIN_BOUNDARY (2) — the split of the old single is-root-boundary
     test under the coarse mesh.  Prefer this over looping `face_kind` per
@@ -820,15 +976,16 @@ def _range_max(values: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> np.ndarray
 
 def _resident_sweep(f: Forest, bops: BatchedOps):
     """The resident face sweep of ALL of a rank's local elements, memoized
-    per (Forest object, backend): leaf arrays are immutable, so repeated
-    Balance rounds over an unchanged rank — and a Ghost following a Balance
-    — reuse the device-resident sweep instead of re-padding and
-    re-dispatching it.  A cache hit still charges one `face_sweep` dispatch
-    so the meters keep their evals-per-round semantics."""
+    per (Forest object, backend, element class): leaf arrays are immutable,
+    so repeated Balance rounds over an unchanged rank — and a Ghost
+    following a Balance — reuse the device-resident sweep instead of
+    re-padding and re-dispatching it.  A cache hit still charges one
+    `face_sweep` dispatch so the meters keep their evals-per-round
+    semantics."""
     if f.num_local == 0:
         return None
     cache = f.__dict__.setdefault("_sweep_cache", {})
-    h = cache.get(bops.backend)
+    h = cache.get((bops.backend, bops.eclass))
     if h is not None:
         batch_count_dispatch("face_sweep")
         return h
@@ -837,14 +994,16 @@ def _resident_sweep(f: Forest, bops: BatchedOps):
     else:
         sw = face_sweep_layer(f, f.tree, f.simplices())
         h = bops.sweep_from_host(sw.tgt, sw.nkey, sw.valid, sw.dual, sw.level)
-    cache[bops.backend] = h
+    cache[(bops.backend, bops.eclass)] = h
     return h
 
 
-def _pack_triples(triples) -> np.ndarray:
+def _pack_triples(triples, eclass: int = ECLASS_SIMPLEX) -> np.ndarray:
     """(tree, key, level) triples -> deterministic 13-byte/entry wire buffer,
     lex-ordered by (tree, key, level) via np.lexsort over the column arrays
-    (bit-identical to sorting the Python tuples, without the tuple churn)."""
+    (bit-identical to sorting the Python tuples, without the tuple churn).
+    The class-group exchanges tag every entry with the group's element
+    class (zero — byte-identical to the legacy format — for simplices)."""
     tl = list(triples)
     if not tl:
         return np.zeros(0, np.uint8)
@@ -852,21 +1011,41 @@ def _pack_triples(triples) -> np.ndarray:
     k = np.array([x[1] for x in tl], np.uint64)
     lv = np.array([x[2] for x in tl], np.int32)
     order = np.lexsort((lv, k, t))
-    return pack_wire(t[order], k[order], lv[order])
+    return pack_wire(t[order], k[order], lv[order], eclass=eclass)
 
 
 def balance(forests: list[Forest], comm: Comm, max_rounds: int = 64,
             overlap: bool = True) -> list[Forest]:
     """2:1 balance across faces (see `_balance_impl` for the full ripple
-    algorithm); fires the `RESILIENCE_HOOKS` begin/end events around it."""
+    algorithm); fires the `RESILIENCE_HOOKS` begin/end events around it.
+
+    On a mixed-class mesh the ripple runs once per element class (classes
+    are unions of whole trees and cross-class faces are domain boundaries,
+    so the class groups are independent); every rank iterates the classes
+    in the same sorted order, and the per-rank results merge back into
+    stored (tree, key) order.  Single-class meshes take the direct path —
+    dispatch for dispatch the pre-eclass pipeline."""
     _fire_hooks("balance:begin", forests, comm)
-    out = _balance_impl(forests, comm, max_rounds=max_rounds, overlap=overlap)
+    classes = _forest_classes(forests)
+    if len(classes) == 1:
+        out = _balance_impl(forests, comm, max_rounds=max_rounds,
+                            overlap=overlap, eclass=classes[0])
+    else:
+        parts: list[list] = [[] for _ in forests]
+        for ec in classes:
+            res = _balance_impl(_class_subforests(forests, ec), comm,
+                                max_rounds=max_rounds, overlap=overlap,
+                                eclass=ec)
+            for i, r in enumerate(res):
+                parts[i].append(r)
+        out = [_merge_class_groups(forests[i], ps)
+               for i, ps in enumerate(parts)]
     _fire_hooks("balance:end", out, comm)
     return out
 
 
 def _balance_impl(forests: list[Forest], comm: Comm, max_rounds: int = 64,
-                  overlap: bool = True) -> list[Forest]:
+                  overlap: bool = True, eclass: int = ECLASS_SIMPLEX) -> list[Forest]:
     """2:1 balance across faces (ripple algorithm), across tree faces when
     the forest carries a Cmesh (intra-tree otherwise) — message based, with
     the boundary exchange overlapped behind interior compute.
@@ -925,9 +1104,9 @@ def _balance_impl(forests: list[Forest], comm: Comm, max_rounds: int = 64,
     if max_rounds < 1:
         raise ValueError("max_rounds must be >= 1")
     d = forests[0].d
-    o = get_ops(d)
+    o = get_ops(d, eclass)
     L, nc = o.L, o.nc
-    bops = get_batch_ops(d)
+    bops = get_batch_ops(d, eclass=eclass)
     P = comm.size
     nloc = len(forests)
     forests = list(forests)
@@ -1057,8 +1236,8 @@ def _balance_impl(forests: list[Forest], comm: Comm, max_rounds: int = 64,
                 row = []
                 for q in range(P):
                     nt = notifs[i].get(q, ()) if notifs is not None else ()
-                    row.append((_pack_triples(nt),
-                                _pack_triples(dests[i].get(q, ()))))
+                    row.append((_pack_triples(nt, eclass),
+                                _pack_triples(dests[i].get(q, ()), eclass)))
                 send.append(row)
             return comm.ialltoallv(send)
 
@@ -1098,7 +1277,7 @@ def _balance_impl(forests: list[Forest], comm: Comm, max_rounds: int = 64,
                     if len(nbuf):
                         nbufs.append(nbuf)
                     if len(qbuf):
-                        row[p] = _pack_triples(answer(i, p, qbuf))
+                        row[p] = _pack_triples(answer(i, p, qbuf), eclass)
                 reply_rows.append(row)
                 notif_bufs.append(nbufs)
             hr = post(comm.ialltoallv(reply_rows))
@@ -1214,7 +1393,23 @@ def balance_oracle(forests: list[Forest], comm: Comm,
     wire-volume baseline: every round allgathers the full (tree, key, level)
     leaf table of every rank.  The message-based `balance` must match its
     result element for element; the benchmarks record how far its per-round
-    O(N) exchange exceeds the boundary-only path's."""
+    O(N) exchange exceeds the boundary-only path's.  Mixed-class meshes run
+    once per class group, like `balance`."""
+    classes = _forest_classes(forests)
+    if len(classes) == 1:
+        return _balance_oracle_impl(forests, comm, max_rounds)
+    parts: list[list] = [[] for _ in forests]
+    for ec in classes:
+        res = _balance_oracle_impl(_class_subforests(forests, ec), comm,
+                                   max_rounds)
+        for i, r in enumerate(res):
+            parts[i].append(r)
+    return [_merge_class_groups(forests[i], ps)
+            for i, ps in enumerate(parts)]
+
+
+def _balance_oracle_impl(forests: list[Forest], comm: Comm,
+                         max_rounds: int) -> list[Forest]:
     if max_rounds < 1:
         raise ValueError("max_rounds must be >= 1")
     d = forests[0].d
@@ -1241,7 +1436,7 @@ def balance_oracle(forests: list[Forest], comm: Comm,
                 need = np.zeros(f.num_local, bool)
                 span = _elem_spans(d, o.L, f.level)
                 sweep = face_sweep_layer(f, f.tree, s)  # one dispatch, all faces
-                for face in range(d + 1):
+                for face in range(sweep.tgt.shape[0]):
                     tgt, nkey, valid = sweep.tgt[face], sweep.nkey[face], sweep.valid[face]
                     # per-target-tree slices of the global sorted leaf table
                     for t in np.unique(tgt[valid]):
@@ -1275,9 +1470,10 @@ def _empty_ghost(d: int) -> dict:
             "owner": np.zeros(0, np.int32)}
 
 
-def _ghost_from_candidates(d: int, bops: BatchedOps, cand: set) -> dict:
+def _ghost_from_candidates(d: int, cmesh: Cmesh | None, cand: set) -> dict:
     """Sorted-deduped (tree, key, level, owner) candidates -> ghost arrays
-    (anchors/types recovered by batch decode, Remark 20)."""
+    (anchors/types recovered by batch decode, Remark 20) — one decode
+    dispatch per element class present among the candidate trees."""
     if not cand:
         return _empty_ghost(d)
     uniq = sorted(cand)
@@ -1285,9 +1481,18 @@ def _ghost_from_candidates(d: int, bops: BatchedOps, cand: set) -> dict:
     keys = np.array([c[1] for c in uniq], np.uint64)
     levels = np.array([c[2] for c in uniq], np.int32)
     owners = np.array([c[3] for c in uniq], np.int32)
-    gs = bops.decode(u64m.from_int(keys), jnp.asarray(levels))
-    return {"anchor": np.asarray(gs.anchor), "level": levels,
-            "stype": np.asarray(gs.stype), "tree": trees, "owner": owners}
+    anchors = np.zeros((len(uniq), d), np.int32)
+    stypes = np.zeros(len(uniq), np.int32)
+    te = (np.zeros(len(uniq), np.int32) if cmesh is None
+          else cmesh.tree_eclass[trees])
+    for ec in np.unique(te):
+        m = te == ec
+        gs = get_batch_ops(d, eclass=int(ec)).decode(
+            u64m.from_int(keys[m]), jnp.asarray(levels[m]))
+        anchors[m] = np.asarray(gs.anchor)
+        stypes[m] = np.asarray(gs.stype)
+    return {"anchor": anchors, "level": levels,
+            "stype": stypes, "tree": trees, "owner": owners}
 
 
 def ghost(forests: list[Forest], comm: Comm, overlap: bool = True) -> list[dict]:
@@ -1295,6 +1500,11 @@ def ghost(forests: list[Forest], comm: Comm, overlap: bool = True) -> list[dict]
     elements across faces — following glued tree faces through the Cmesh
     when the forest carries one.  Returns per-local-rank dicts with ghost
     element arrays (in the *owning tree's* frame) and their owner ranks.
+
+    On a mixed-class mesh the exchange runs once per element class (the
+    class groups are independent: cross-class faces are domain boundaries)
+    and the per-rank candidate sets union before assembly — the ghost dicts
+    come out in one (tree, key, level, owner)-sorted block either way.
 
     Message based: each element's neighbor key interval is routed by the
     allgathered partition markers to its remote owner ranks as a packed
@@ -1321,9 +1531,34 @@ def ghost(forests: list[Forest], comm: Comm, overlap: bool = True) -> list[dict]
     both modes.  Scheduling only: payload bytes and the resulting ghost
     layers are bit-identical across overlap modes."""
     d = forests[0].d
-    o = get_ops(d)
+    cm = forests[0].cmesh
+    classes = _forest_classes(forests)
+    if len(classes) == 1:
+        cands = _ghost_impl(forests, comm, overlap, classes[0])
+    else:
+        cands = [set() for _ in forests]
+        for ec in classes:
+            res = _ghost_impl(_class_subforests(forests, ec), comm,
+                              overlap, ec)
+            for i, c in enumerate(res):
+                cands[i] |= c
+    return [_ghost_from_candidates(d, cm, c) for c in cands]
+
+
+def _ghost_impl(forests: list[Forest], comm: Comm, overlap: bool,
+                eclass: int) -> list[set]:
+    """One class group's ghost exchange; returns per-local-rank candidate
+    sets of (tree, key, level, owner) — see `ghost` for the algorithm."""
+    d = forests[0].d
+    o = get_ops(d, eclass)
     L = o.L
-    bops = get_batch_ops(d)
+    bops = get_batch_ops(d, eclass=eclass)
+    # face corner geometry of THIS class: the plane filter needs the dual
+    # facet's corners (any d of them span the plane) and how many of a
+    # touching leaf's corners must lie on it (d for a simplex, 2^(d-1) for
+    # a hex — a whole facet either way)
+    fci = np.asarray(o.face_corner_indices)
+    cpf = fci.shape[1]
     P = comm.size
     nloc = len(forests)
 
@@ -1360,6 +1595,7 @@ def ghost(forests: list[Forest], comm: Comm, overlap: bool = True) -> list[dict]
                     np.array([x[1] for x in qs], np.uint64),
                     np.array([x[2] for x in qs], np.int32),
                     extra=np.array([x[3] for x in qs], np.int32),
+                    eclass=eclass,
                 ) if qs else np.zeros(0, np.uint8))
             send.append(row)
         h_q = post(comm.ialltoallv(send))
@@ -1408,9 +1644,10 @@ def ghost(forests: list[Forest], comm: Comm, overlap: bool = True) -> list[dict]
                         if own == g and np.uint64(f.keys[jj]) + span_p > np.uint64(k0):
                             pred_hits.append((ei, jj))
                 if pend:
-                    # same-or-finer leaves must TOUCH the shared face: d of
-                    # their vertices on the plane of the neighbor simplex's
-                    # dual facet (the neighbor is decoded from the query key)
+                    # same-or-finer leaves must TOUCH the shared face: a
+                    # whole facet's worth of their corners on the plane of
+                    # the neighbor element's dual facet (the neighbor is
+                    # decoded from the query key)
                     eis = sorted({ei for ei, _ in pend})
                     emap = {ei: k for k, ei in enumerate(eis)}
                     ent_k = np.array([entries[ei][2] for ei in eis], np.uint64)
@@ -1427,21 +1664,21 @@ def ghost(forests: list[Forest], comm: Comm, overlap: bool = True) -> list[dict]
                     planes: dict[int, tuple] = {}
                     for ei, j in pend:
                         if ei not in planes:
-                            planes[ei] = face_plane(np.delete(
-                                nbc[emap[ei]], int(entries[ei][4]), axis=0))
+                            planes[ei] = face_plane(
+                                nbc[emap[ei]][fci[int(entries[ei][4])][:d]])
                         nrm, rhs = planes[ei]
-                        if (ccoords[jmap[j]] @ nrm == rhs).sum() == d:
+                        if (ccoords[jmap[j]] @ nrm == rhs).sum() == cpf:
                             replies.setdefault(entries[ei][0], set()).add(
                                 (int(f.tree[j]), int(f.keys[j]), int(f.level[j])))
                 for ei, j in pred_hits:
                     replies.setdefault(entries[ei][0], set()).add(
                         (int(f.tree[j]), int(f.keys[j]), int(f.level[j])))
             for p, rs in replies.items():
-                row[p] = _pack_triples(rs)
+                row[p] = _pack_triples(rs, eclass)
             reply_rows.append(row)
         rrecv = post(comm.ialltoallv(reply_rows)).wait()
 
-        # ---- assemble: replies from rank p are leaves owned by p
+        # ---- collect candidates: replies from rank p are leaves owned by p
         out = []
         for i, f in enumerate(forests):
             g = comm.local_ranks[i]
@@ -1453,7 +1690,7 @@ def ghost(forests: list[Forest], comm: Comm, overlap: bool = True) -> list[dict]
                 t_, k_, l_ = unpack_wire(buf)
                 cand.update((t, k, l, p) for t, k, l in
                             zip(t_.tolist(), k_.tolist(), l_.tolist()))
-            out.append(_ghost_from_candidates(d, bops, cand))
+            out.append(cand)
         return out
 
 
@@ -1461,10 +1698,29 @@ def ghost_oracle(forests: list[Forest], comm: Comm) -> list[dict]:
     """The seed's global-leaf-table Ghost, retained as the test oracle and
     wire-volume baseline: allgathers every rank's full (tree, key, level)
     arrays and searches them directly.  The message-based `ghost` must
-    produce identical ghost layers."""
+    produce identical ghost layers.  Mixed-class meshes run once per class
+    group, like `ghost`."""
     d = forests[0].d
-    o = get_ops(d)
-    bops = get_batch_ops(d)
+    cm = forests[0].cmesh
+    classes = _forest_classes(forests)
+    if len(classes) == 1:
+        cands = _ghost_oracle_impl(forests, comm, classes[0])
+    else:
+        cands = [set() for _ in forests]
+        for ec in classes:
+            res = _ghost_oracle_impl(_class_subforests(forests, ec), comm, ec)
+            for i, c in enumerate(res):
+                cands[i] |= c
+    return [_ghost_from_candidates(d, cm, c) for c in cands]
+
+
+def _ghost_oracle_impl(forests: list[Forest], comm: Comm,
+                       eclass: int) -> list[set]:
+    d = forests[0].d
+    o = get_ops(d, eclass)
+    bops = get_batch_ops(d, eclass=eclass)
+    fci = np.asarray(o.face_corner_indices)
+    cpf = fci.shape[1]
     nloc = len(forests)
     with comm.phase("ghost_oracle"):
         tables = comm.allgather([(f.tree, f.keys, f.level) for f in forests])
@@ -1483,14 +1739,14 @@ def ghost_oracle(forests: list[Forest], comm: Comm) -> list[dict]:
         f = forests[i]
         p_me = comm.local_ranks[i]
         if f.num_local == 0:
-            out.append(_empty_ghost(d))
+            out.append(set())
             continue
         s = f.simplices()
         cand = []
         sweep = face_sweep_layer(f, f.tree, s)  # one dispatch, all faces
-        for face in range(d + 1):
+        for face in range(sweep.tgt.shape[0]):
             tgt, nkey, valid, nb, dual, _ = sweep.face(face)
-            nbc = None  # (n, d+1, d), computed only when candidates exist
+            nbc = None  # (n, corners, d), computed only when candidates exist
             for t in np.unique(tgt[valid]):
                 sel = np.nonzero(valid & (tgt == t))[0]
                 gsel = slice(*np.searchsorted(g_tree, [t, t + 1]))
@@ -1500,7 +1756,8 @@ def ghost_oracle(forests: list[Forest], comm: Comm) -> list[dict]:
                 hi = np.searchsorted(keys_t, nkey[sel] + span, side="left")
                 # same-or-finer leaves inside the neighbor region that TOUCH
                 # the shared face: a descendant of the neighbor shares our
-                # face iff d of its vertices lie on the shared face's plane
+                # face iff a whole facet's worth of its corners (d for a
+                # simplex, 2^(d-1) for a hex) lie on the shared face's plane
                 # (inside the region, plane membership implies face overlap).
                 # Collect candidates first, then decode their coordinates in
                 # one batch — only boundary-interval leaves pay for geometry.
@@ -1522,10 +1779,10 @@ def ghost_oracle(forests: list[Forest], comm: Comm) -> list[dict]:
                     for i2, j in pend:
                         if i2 not in planes:
                             planes[i2] = face_plane(
-                                np.delete(nbc[sel[i2]], int(dual[sel[i2]]), axis=0)
+                                nbc[sel[i2]][fci[int(dual[sel[i2]])][:d]]
                             )
                         nrm, rhs = planes[i2]
-                        if (ccoords[jmap[j]] @ nrm == rhs).sum() == d:
+                        if (ccoords[jmap[j]] @ nrm == rhs).sum() == cpf:
                             cand.append((t, keys_t[j], level_t[j], owner_t[j]))
                 # coarser leaf containing the neighbor: predecessor check
                 pred = np.maximum(lo - 1, 0)
@@ -1538,8 +1795,7 @@ def ghost_oracle(forests: list[Forest], comm: Comm) -> list[dict]:
                     if (keys_t[pj] <= nkey[sel][i2] < keys_t[pj] + span_pred
                             and owner_t[pj] != p_me and lo[i2] == hi[i2]):
                         cand.append((t, keys_t[pj], level_t[pj], owner_t[pj]))
-        out.append(_ghost_from_candidates(
-            d, bops, {(int(t), int(k), int(l), int(w)) for t, k, l, w in cand}))
+        out.append({(int(t), int(k), int(l), int(w)) for t, k, l, w in cand})
     return out
 
 
@@ -1554,55 +1810,88 @@ def iterate(f: Forest, elem_fn=None, face_fn=None):
     sub-face as a (fine i, coarse j) pair, discovered from the fine side —
     the coarser leaf is found by walking the neighbor's ancestor keys (pure
     prefix masking), and face_j is the coarse facet containing the shared
-    face."""
+    face.
+
+    On a mixed-class mesh the pair discovery runs per element class (one
+    fused sweep per class; cross-class faces are domain boundaries, so no
+    pair straddles classes) and `face_fn` is called ONCE with all pairs,
+    whose indices are in the forest's local element indexing throughout."""
     results = []
     if elem_fn is not None:
         results.append(elem_fn(f.tree, f.simplices()))
     if face_fn is not None:
-        o = f.ops
-        d, L = f.d, o.L
-        s = f.simplices()
-        key_index = {}
-        for i in range(f.num_local):
-            key_index[(int(f.tree[i]), int(f.keys[i]), int(f.level[i]))] = i
-        own_coords = None  # lazy: only adapted meshes have hanging faces
-        pairs = []
-        sweep = face_sweep_layer(f, f.tree, s)  # one dispatch, all faces
-        for face in range(d + 1):
-            tgt, nkey, valid, nb, dual, _ = sweep.face(face)
-            nlvl = np.asarray(nb.level)
-            nbc = None
-            for i in np.nonzero(valid)[0]:
-                j = key_index.get((int(tgt[i]), int(nkey[i]), int(nlvl[i])))
-                if j is not None:
-                    # same-level pairs are discovered from both sides: keep
-                    # one (self-pairs across periodic gluings keep face<dual)
-                    if i < j or (i == j and face < int(dual[i])):
-                        pairs.append((i, j, face, int(dual[i])))
-                    continue
-                # hanging face: the neighbor region may be covered by one
-                # COARSER leaf — its key is an ancestor prefix of nkey
-                for lc in range(int(nlvl[i]) - 1, -1, -1):
-                    mkey = int(nkey[i]) & ~((1 << (d * (L - lc))) - 1)
-                    j = key_index.get((int(tgt[i]), mkey, lc))
-                    if j is None:
-                        continue
-                    if nbc is None:
-                        nbc = np.asarray(o.coordinates(nb), np.int64)
-                    if own_coords is None:
-                        own_coords = np.asarray(o.coordinates(s), np.int64)
-                    shared = np.delete(nbc[i], int(dual[i]), axis=0)
-                    # the coarse facet whose plane contains the shared face
-                    for fc in range(d + 1):
-                        nrm, rhs = face_plane(np.delete(own_coords[j], fc, axis=0))
-                        if (shared @ nrm == rhs).all():
-                            pairs.append((i, j, face, fc))
-                            break
-                    else:
-                        raise AssertionError("hanging face without coarse facet")
-                    break
+        groups = _class_groups(f)
+        if len(groups) == 1:
+            pairs = _iterate_pairs(f, None, groups[0][0])
+        else:
+            pairs = []
+            for ec, idx in groups:
+                pairs.extend(_iterate_pairs(f, idx, ec))
         results.append(face_fn(f, np.array(pairs, np.int64).reshape(-1, 4)))
     return results
+
+
+def _iterate_pairs(f: Forest, idx: np.ndarray | None, eclass: int) -> list:
+    """Local face pairs of one class group (`idx` — None means all local
+    elements), reported in the forest's local indexing."""
+    o = get_ops(f.d, eclass)
+    d, L = f.d, o.L
+    fci = np.asarray(o.face_corner_indices)
+    if idx is None:
+        s = f.simplices()
+        tree_ids = f.tree
+        gid = np.arange(f.num_local, dtype=np.int64)
+    else:
+        s = Simplex(jnp.asarray(f.anchor[idx]), jnp.asarray(f.level[idx]),
+                    jnp.asarray(f.stype[idx]))
+        tree_ids = f.tree[idx]
+        gid = np.asarray(idx, np.int64)
+    # neighbors never leave the class (classes are unions of whole trees),
+    # so the subset's own (tree, key, level) index resolves every lookup
+    key_index = {}
+    pos = {}  # local index -> subset row, for coordinate lookups
+    for k, g in enumerate(gid.tolist()):
+        key_index[(int(f.tree[g]), int(f.keys[g]), int(f.level[g]))] = g
+        pos[g] = k
+    own_coords = None  # lazy: only adapted meshes have hanging faces
+    pairs = []
+    sweep = face_sweep_layer(f, tree_ids, s)  # one dispatch per class
+    for face in range(sweep.tgt.shape[0]):
+        tgt, nkey, valid, nb, dual, _ = sweep.face(face)
+        nlvl = np.asarray(nb.level)
+        nbc = None
+        for i in np.nonzero(valid)[0]:
+            gi = int(gid[i])
+            j = key_index.get((int(tgt[i]), int(nkey[i]), int(nlvl[i])))
+            if j is not None:
+                # same-level pairs are discovered from both sides: keep
+                # one (self-pairs across periodic gluings keep face<dual)
+                if gi < j or (gi == j and face < int(dual[i])):
+                    pairs.append((gi, j, face, int(dual[i])))
+                continue
+            # hanging face: the neighbor region may be covered by one
+            # COARSER leaf — its key is an ancestor prefix of nkey
+            for lc in range(int(nlvl[i]) - 1, -1, -1):
+                mkey = int(nkey[i]) & ~((1 << (d * (L - lc))) - 1)
+                j = key_index.get((int(tgt[i]), mkey, lc))
+                if j is None:
+                    continue
+                if nbc is None:
+                    nbc = np.asarray(o.coordinates(nb), np.int64)
+                if own_coords is None:
+                    own_coords = np.asarray(o.coordinates(s), np.int64)
+                shared = nbc[i][fci[int(dual[i])]]
+                jc = own_coords[pos[j]]
+                # the coarse facet whose plane contains the shared face
+                for fc in range(o.nf):
+                    nrm, rhs = face_plane(jc[fci[fc][:d]])
+                    if (shared @ nrm == rhs).all():
+                        pairs.append((gi, j, face, fc))
+                        break
+                else:
+                    raise AssertionError("hanging face without coarse facet")
+                break
+    return pairs
 
 
 # ----------------------------------------------------------------- validate
@@ -1631,10 +1920,16 @@ def validate(forests: list[Forest], ghosts: list[dict] | None = None) -> bool:
         span = np.uint64(1) << (np.uint64(d) * (np.uint64(o.L) - l.astype(np.uint64)))
         if not np.all(k[1:][same] >= (k[:-1] + span[:-1])[same]):
             return False
-    # inside root
+    # inside root (per element class: the containment test is class-keyed)
     for f in forests:
-        if f.num_local and not np.asarray(f.bops.is_inside_root(f.simplices())).all():
-            return False
+        for ec, idx in _class_groups(f):
+            if len(idx) == 0:
+                continue
+            sub = Simplex(jnp.asarray(f.anchor[idx]), jnp.asarray(f.level[idx]),
+                          jnp.asarray(f.stype[idx]))
+            if not np.asarray(
+                    get_batch_ops(d, eclass=ec).is_inside_root(sub)).all():
+                return False
     # coverage: sum of 2^{-d*level} == num_trees
     vol = (1.0 / (1 << d) ** all_level.astype(np.float64)).sum()
     K = forests[0].num_trees
@@ -1646,14 +1941,19 @@ def validate(forests: list[Forest], ghosts: list[dict] | None = None) -> bool:
         for p, f in enumerate(forests):
             for i in range(f.num_local):
                 owner_of[(int(f.tree[i]), int(f.keys[i]), int(f.level[i]))] = p
-        bops = get_batch_ops(d)
+        cm = forests[0].cmesh
         for p, g in enumerate(ghosts):
             if len(g["level"]) == 0:
                 continue
-            gs = Simplex(
-                jnp.asarray(g["anchor"]), jnp.asarray(g["level"]), jnp.asarray(g["stype"])
-            )
-            gkeys = bops.morton_key_np(gs)
+            te = (np.zeros(len(g["level"]), np.int32) if cm is None
+                  else cm.tree_eclass[g["tree"]])
+            gkeys = np.zeros(len(g["level"]), np.uint64)
+            for ec in np.unique(te):
+                m = te == ec
+                gs = Simplex(jnp.asarray(g["anchor"][m]),
+                             jnp.asarray(g["level"][m]),
+                             jnp.asarray(g["stype"][m]))
+                gkeys[m] = get_batch_ops(d, eclass=int(ec)).morton_key_np(gs)
             for j in range(len(gkeys)):
                 q = int(g["owner"][j])
                 if q == p:

@@ -31,13 +31,122 @@ import numpy as np
 
 from . import u64 as u64m
 from .tables import MAXLEVEL, get_tables
-from .types import Simplex
+from .types import ECLASS_HEX, ECLASS_SIMPLEX, Simplex
 
-__all__ = ["SimplexOps", "ops2d", "ops3d", "get_ops"]
+__all__ = ["ElementOps", "SimplexOps", "HexOps", "ops2d", "ops3d", "get_ops"]
 
 
-class SimplexOps:
-    """Element algorithms bound to a dimension d (2 or 3). Stateless & jit-safe."""
+class ElementOps:
+    """Element algorithms bound to (dimension, element class) — the abstract
+    protocol every class implements.  Stateless & jit-safe.
+
+    A concrete class supplies the per-class constants
+
+      eclass         the types.ECLASS_* tag (a static dispatch key)
+      nt             number of element types (d! simplices, 1 hex)
+      nc             children per element (2^d for both shipped classes)
+      nf             faces per element (d+1 simplex, 2d hex)
+      num_corners    corners per element (d+1 simplex, 2^d hex)
+      face_corner_indices   (nf, corners-per-face) int — which element
+                            corners span each face, in `coordinates` order
+
+    and the primitive algorithms (coordinates, parent, child_tm,
+    local_index, face_neighbor, ancestor_at_level, is_ancestor,
+    is_inside_root, morton_key, from_linear_id, nearest_common_ancestor).
+    Everything level/key-generic — the shared 2^d-children key arithmetic
+    that makes partition markers and `validate` class-agnostic — lives
+    here."""
+
+    d: int
+    L: int
+    eclass: int
+    nt: int
+    nc: int
+    nf: int
+    num_corners: int
+
+    # ------------------------------------------------------------------ utils
+    def h(self, level):
+        """Cube side length at `level`."""
+        return jnp.int32(1) << (jnp.int32(self.L) - jnp.asarray(level, jnp.int32))
+
+    def cube_id(self, s: Simplex, level=None):
+        """Algorithm 4.2: cube-id of the level-`level` ancestor's cube."""
+        level = s.level if level is None else level
+        bits = (s.anchor >> (self.L - jnp.asarray(level, jnp.int32))[..., None]) & 1
+        weights = jnp.asarray([1 << k for k in range(self.d)], jnp.int32)
+        return jnp.sum(bits * weights, axis=-1)
+
+    # ------------------------------------------------------------- hierarchy
+    def children_tm(self, s: Simplex) -> Simplex:
+        """All 2^d children in SFC order: batch shape (..., 2^d)."""
+        kids = [self.child_tm(s, i) for i in range(self.nc)]
+        return Simplex(
+            jnp.stack([k.anchor for k in kids], axis=-2),
+            jnp.stack([k.level for k in kids], axis=-1),
+            jnp.stack([k.stype for k in kids], axis=-1),
+        )
+
+    def sibling_tm(self, s: Simplex, iloc) -> Simplex:
+        return self.child_tm(self.parent(s), iloc)
+
+    def tree_transform(self, s: Simplex, M, c, typemap) -> Simplex:
+        """Affine lattice isometry (the cmesh gluing map): anchor' =
+        M @ anchor + c, shifted by -h on reflected axes so the anchor stays
+        the min corner of the image cube; the type moves through the
+        per-connection `typemap` (d! entries for simplices, the trivial
+        1-entry map for hexes).  `M` is a signed permutation, `c` a multiple
+        of the element's cube side — both per-connection constants."""
+        M = jnp.asarray(M, jnp.int32)
+        c = jnp.asarray(c, jnp.int32)
+        tm = jnp.asarray(typemap, jnp.int32)
+        h = self.h(s.level)
+        neg = jnp.minimum(jnp.sum(M, axis=-1), 0)  # -1 on reflected rows
+        anchor = (
+            jnp.sum(s.anchor[..., None, :] * M, axis=-1) + c + h[..., None] * neg
+        )
+        return Simplex(anchor.astype(jnp.int32), s.level, tm[s.stype])
+
+    # ------------------------------------------------------------ linear ids
+    def linear_id(self, s: Simplex) -> u64m.U64:
+        """Algorithm 4.7: consecutive index of s at its own level."""
+        shift = (jnp.asarray(self.L, jnp.int32) - s.level) * self.d
+        return u64m.select_shr(self.morton_key(s), shift, self.d * self.L)
+
+    def decode_key(self, key: u64m.U64, level) -> Simplex:
+        """Inverse of `morton_key` at a given level: drop the level padding
+        and run the per-class decode.  This is the decode entry point the
+        batched backends share (the Pallas decode kernel consumes padded
+        keys too)."""
+        level = jnp.asarray(level, jnp.int32)
+        lid = u64m.select_shr(
+            key, (jnp.asarray(self.L, jnp.int32) - level) * self.d, self.d * self.L
+        )
+        return self.from_linear_id(lid, level)
+
+    def successor(self, s: Simplex) -> Simplex:
+        """Next same-level element in SFC order (batch Algorithm 4.10)."""
+        return self.from_linear_id(u64m.inc(self.linear_id(s)), s.level)
+
+    def predecessor(self, s: Simplex) -> Simplex:
+        return self.from_linear_id(u64m.dec(self.linear_id(s)), s.level)
+
+    def num_elements(self, level) -> int:
+        """Elements in a uniform refinement of one tree: 2^(d*level)."""
+        return 1 << (self.d * int(level))
+
+    # ------------------------------------------------------------- SFC order
+    def sfc_less(self, a: Simplex, b: Simplex):
+        """Strict SFC order across mixed levels: ancestors precede
+        descendants (Theorem 16 (i))."""
+        ka, kb = self.morton_key(a), self.morton_key(b)
+        return u64m.lt(ka, kb) | (u64m.eq(ka, kb) & (a.level < b.level))
+
+
+class SimplexOps(ElementOps):
+    """The paper's tetrahedral-Morton algorithms for d-simplices (d = 2, 3)."""
+
+    eclass = ECLASS_SIMPLEX
 
     def __init__(self, d: int):
         self.d = d
@@ -45,6 +154,12 @@ class SimplexOps:
         self.L = MAXLEVEL[d]
         self.nt = self.t.num_types          # d!
         self.nc = self.t.num_children       # 2^d
+        self.nf = d + 1                     # faces per simplex
+        self.num_corners = d + 1
+        # face f is the face opposite corner f
+        self.face_corner_indices = np.asarray(
+            [[a for a in range(d + 1) if a != f] for f in range(d + 1)], np.int32
+        )
         # jnp constants (int32 for gather friendliness)
         self.REF_VERTS = jnp.asarray(self.t.ref_verts, jnp.int32)
         self.CHILD_TYPE = jnp.asarray(self.t.child_type, jnp.int32)
@@ -63,18 +178,6 @@ class SimplexOps:
         self.OUT_IK = jnp.asarray(self.t.outside_types_ik, jnp.int32)
         self.OUT_KJ = jnp.asarray(self.t.outside_types_kj, jnp.int32)
         self.OUT_DIAG = jnp.asarray(self.t.outside_types_diag, jnp.int32)
-
-    # ------------------------------------------------------------------ utils
-    def h(self, level):
-        """Cube side length at `level`."""
-        return jnp.int32(1) << (jnp.int32(self.L) - jnp.asarray(level, jnp.int32))
-
-    def cube_id(self, s: Simplex, level=None):
-        """Algorithm 4.2: cube-id of the level-`level` ancestor's cube."""
-        level = s.level if level is None else level
-        bits = (s.anchor >> (self.L - jnp.asarray(level, jnp.int32))[..., None]) & 1
-        weights = jnp.asarray([1 << k for k in range(self.d)], jnp.int32)
-        return jnp.sum(bits * weights, axis=-1)
 
     def coordinates(self, s: Simplex):
         """Algorithm 4.1: (..., d+1, d) corner nodes."""
@@ -104,18 +207,6 @@ class SimplexOps:
         bits = jnp.stack([(cid >> k) & 1 for k in range(self.d)], axis=-1)
         anchor = s.anchor + h2[..., None] * bits
         return Simplex(anchor, s.level + 1, self.TYPE_OF_LOCAL[s.stype, iloc])
-
-    def children_tm(self, s: Simplex) -> Simplex:
-        """All 2^d children in TM order: batch shape (..., 2^d)."""
-        kids = [self.child_tm(s, i) for i in range(self.nc)]
-        return Simplex(
-            jnp.stack([k.anchor for k in kids], axis=-2),
-            jnp.stack([k.level for k in kids], axis=-1),
-            jnp.stack([k.stype for k in kids], axis=-1),
-        )
-
-    def sibling_tm(self, s: Simplex, iloc) -> Simplex:
-        return self.child_tm(self.parent(s), iloc)
 
     def local_index(self, s: Simplex):
         """Paper Table 6: the TM child index of s within its parent."""
@@ -199,23 +290,6 @@ class SimplexOps:
         stype = jnp.zeros_like(s.stype)
         return self.is_ancestor(Simplex(anchor, level, stype), s) & (s.level >= 0)
 
-    def tree_transform(self, s: Simplex, M, c, typemap) -> Simplex:
-        """Affine automorphism of the Freudenthal complex (the cmesh gluing
-        map): anchor' = M @ anchor + c, shifted by -h on reflected axes so
-        the anchor stays the min corner of the image cube; the type moves
-        through the d!-entry `typemap` derived for M (see repro.core.cmesh).
-        `M` is a global-sign signed permutation, `c` a multiple of the
-        element's cube side — both per-connection constants."""
-        M = jnp.asarray(M, jnp.int32)
-        c = jnp.asarray(c, jnp.int32)
-        tm = jnp.asarray(typemap, jnp.int32)
-        h = self.h(s.level)
-        neg = jnp.minimum(jnp.sum(M, axis=-1), 0)  # -1 on reflected rows
-        anchor = (
-            jnp.sum(s.anchor[..., None, :] * M, axis=-1) + c + h[..., None] * neg
-        )
-        return Simplex(anchor.astype(jnp.int32), s.level, tm[s.stype])
-
     # ------------------------------------------------------------ linear ids
     def _type_chain(self, s: Simplex):
         """cube-ids and types of all ancestors T^i, i = 1..MAXLEVEL (T_0-chain
@@ -245,11 +319,6 @@ class SimplexOps:
             )
         return key
 
-    def linear_id(self, s: Simplex) -> u64m.U64:
-        """Algorithm 4.7: consecutive index of s at its own level."""
-        shift = (jnp.asarray(self.L, jnp.int32) - s.level) * self.d
-        return u64m.select_shr(self.morton_key(s), shift, self.d * self.L)
-
     def from_linear_id(self, index: u64m.U64, level, d_batch_shape=None) -> Simplex:
         """Algorithm 4.8: build the simplex from a consecutive index + level."""
         level = jnp.asarray(level, jnp.int32)
@@ -267,34 +336,6 @@ class SimplexOps:
             b = self.TYPE_OF_LOCAL[b, iloc]
         return Simplex(anchor, level, b)
 
-    def decode_key(self, key: u64m.U64, level) -> Simplex:
-        """Inverse of `morton_key` at a given level: drop the level padding
-        and run Algorithm 4.8.  This is the decode entry point the batched
-        backends share (the Pallas decode kernel consumes padded keys too)."""
-        level = jnp.asarray(level, jnp.int32)
-        lid = u64m.select_shr(
-            key, (jnp.asarray(self.L, jnp.int32) - level) * self.d, self.d * self.L
-        )
-        return self.from_linear_id(lid, level)
-
-    def successor(self, s: Simplex) -> Simplex:
-        """Next same-level simplex in SFC order (batch Algorithm 4.10)."""
-        return self.from_linear_id(u64m.inc(self.linear_id(s)), s.level)
-
-    def predecessor(self, s: Simplex) -> Simplex:
-        return self.from_linear_id(u64m.dec(self.linear_id(s)), s.level)
-
-    def num_elements(self, level) -> int:
-        """Elements in a uniform refinement of one tree: 2^(d*level)."""
-        return 1 << (self.d * int(level))
-
-    # ------------------------------------------------------------- SFC order
-    def sfc_less(self, a: Simplex, b: Simplex):
-        """Strict SFC (TM) order across mixed levels: ancestors precede
-        descendants (Theorem 16 (i))."""
-        ka, kb = self.morton_key(a), self.morton_key(b)
-        return u64m.lt(ka, kb) | (u64m.eq(ka, kb) & (a.level < b.level))
-
     def nearest_common_ancestor(self, a: Simplex, b: Simplex) -> Simplex:
         """NCA via the embedding Phi (Prop. 17): deepest common prefix of the
         (cube-id, type) chains."""
@@ -310,10 +351,151 @@ class SimplexOps:
         return self.ancestor_at_level(Simplex(a.anchor, a.level, a.stype), nca_level)
 
 
+class HexOps(ElementOps):
+    """Quads/hexahedra on the plain Morton curve — the second element class.
+
+    Hexes have no type bits: every element IS its cube, so the `stype` lane
+    of the shared `Simplex` container is identically 0, the SFC key is the
+    plain bit interleave of the anchor (reusing the u64 pair arithmetic),
+    children come in Morton order, and face f = 2*axis + dir is the
+    lower (dir = 0) / upper (dir = 1) face along `axis` with dual f ^ 1.
+    MAXLEVEL matches the simplex class, so key spans (2^(d*(L-l)) per
+    subtree) and `num_elements` are identical — what keeps partition
+    markers, repartition, and `validate` class-agnostic."""
+
+    eclass = ECLASS_HEX
+
+    def __init__(self, d: int):
+        self.d = d
+        self.L = MAXLEVEL[d]
+        self.nt = 1                         # no types
+        self.nc = 1 << d                    # 2^d children
+        self.nf = 2 * d                     # cube faces
+        self.num_corners = 1 << d
+        corners = np.asarray(
+            [[(j >> k) & 1 for k in range(d)] for j in range(1 << d)], np.int32
+        )
+        self.CORNERS = jnp.asarray(corners)
+        # face f = 2*axis + dir holds the 2^(d-1) corners whose `axis` bit
+        # is `dir`; the first d of them (0, e_i scaled...) are affinely
+        # independent, which `cmesh`/ghost rely on for plane equations.
+        self.face_corner_indices = np.asarray(
+            [[j for j in range(1 << d) if ((j >> (f // 2)) & 1) == (f % 2)]
+             for f in range(2 * d)], np.int32
+        )
+        off = np.zeros((2 * d, d), np.int32)
+        for f in range(2 * d):
+            off[f, f // 2] = 2 * (f % 2) - 1
+        self.NEIGH_OFFSET = jnp.asarray(off)
+
+    def coordinates(self, s: Simplex):
+        """(..., 2^d, d) corner nodes in Morton corner order."""
+        h = self.h(s.level)
+        return s.anchor[..., None, :] + h[..., None, None] * self.CORNERS
+
+    # ------------------------------------------------------------- hierarchy
+    def parent(self, s: Simplex) -> Simplex:
+        h = self.h(s.level)
+        return Simplex(s.anchor & ~h[..., None], s.level - 1,
+                       jnp.zeros_like(s.stype))
+
+    def child_tm(self, s: Simplex, iloc) -> Simplex:
+        """The iloc-th child in SFC (= Morton) order."""
+        iloc = jnp.asarray(iloc, jnp.int32)
+        h2 = self.h(s.level) >> 1
+        bits = jnp.stack([(iloc >> k) & 1 for k in range(self.d)], axis=-1)
+        anchor = s.anchor + h2[..., None] * bits
+        return Simplex(anchor, s.level + 1, jnp.zeros_like(s.stype))
+
+    def local_index(self, s: Simplex):
+        """The Morton child index of s within its parent = its cube id."""
+        return self.cube_id(s)
+
+    # ------------------------------------------------------------- neighbors
+    def face_neighbor(self, s: Simplex, f):
+        """Same-level neighbor across face f (axis f//2, direction f%2),
+        plus the dual face f ^ 1.  May lie outside the root cube."""
+        f = jnp.asarray(f, jnp.int32)
+        h = self.h(s.level)
+        anchor = s.anchor + h[..., None] * self.NEIGH_OFFSET[f]
+        dual = jnp.broadcast_to(f ^ 1, s.level.shape)
+        return Simplex(anchor, s.level, jnp.zeros_like(s.stype)), dual
+
+    # ------------------------------------------------- ancestors / containment
+    def ancestor_at_level(self, s: Simplex, level) -> Simplex:
+        level = jnp.broadcast_to(jnp.asarray(level, jnp.int32), s.level.shape)
+        mask = ~(self.h(level) - 1)
+        return Simplex(s.anchor & mask[..., None], level, jnp.zeros_like(s.stype))
+
+    def is_ancestor(self, t: Simplex, n: Simplex):
+        """True where t's cube contains n's cube (incl. t == n)."""
+        ht = self.h(t.level)
+        rel = n.anchor - t.anchor
+        inside = ((rel >= 0) & (rel < ht[..., None])).all(axis=-1)
+        return (n.level >= t.level) & inside
+
+    def is_inside_root(self, s: Simplex):
+        """Does s lie inside the root cube [0, 2^L)^d?  (anchor <= 2^L - h
+        avoids the int32 overflow of anchor + h at level 0)."""
+        lim = jnp.int32(1 << self.L) - self.h(s.level)
+        ok = ((s.anchor >= 0) & (s.anchor <= lim[..., None])).all(axis=-1)
+        return ok & (s.level >= 0)
+
+    # ------------------------------------------------------------ linear ids
+    def morton_key(self, s: Simplex) -> u64m.U64:
+        """Level-padded plain Morton key: interleave(anchor) — anchors are
+        h-aligned, so the full-resolution interleave IS the level-shifted
+        consecutive index."""
+        key = u64m.zeros(s.level.shape)
+        for i in range(1, self.L + 1):
+            cid = self.cube_id(s, i)
+            key = u64m.or_(
+                key, u64m.shl(u64m.from_u32(cid.astype(jnp.uint32)), self.d * (self.L - i))
+            )
+        return key
+
+    def from_linear_id(self, index: u64m.U64, level, d_batch_shape=None) -> Simplex:
+        """Deinterleave a consecutive index + level back into the element."""
+        level = jnp.asarray(level, jnp.int32)
+        shape = jnp.broadcast_shapes(index.hi.shape, level.shape)
+        level = jnp.broadcast_to(level, shape)
+        index = u64m.U64(jnp.broadcast_to(index.hi, shape), jnp.broadcast_to(index.lo, shape))
+        key = u64m.select_shl(index, (self.L - level) * self.d, self.d * self.L)
+        anchor = jnp.zeros(shape + (self.d,), jnp.int32)
+        for i in range(1, self.L + 1):
+            cid = u64m.bits(key, self.d * (self.L - i), self.d).astype(jnp.int32)
+            bits = jnp.stack([(cid >> k) & 1 for k in range(self.d)], axis=-1)
+            anchor = anchor | (bits << (self.L - i))
+        return Simplex(anchor, level, jnp.zeros(shape, jnp.int32))
+
+    def nearest_common_ancestor(self, a: Simplex, b: Simplex) -> Simplex:
+        """Deepest common cube: longest shared anchor-bit prefix."""
+        agree = jnp.ones(jnp.broadcast_shapes(a.level.shape, b.level.shape), bool)
+        nca_level = jnp.zeros_like(a.level)
+        for i in range(1, self.L + 1):
+            ok = (self.cube_id(a, i) == self.cube_id(b, i)) \
+                & (i <= a.level) & (i <= b.level)
+            agree = agree & ok
+            nca_level = jnp.where(agree, i, nca_level)
+        return self.ancestor_at_level(Simplex(a.anchor, a.level, a.stype), nca_level)
+
+
 # Singletons
 ops2d = SimplexOps(2)
 ops3d = SimplexOps(3)
+hexops2d = HexOps(2)
+hexops3d = HexOps(3)
+
+_OPS = {
+    (2, ECLASS_SIMPLEX): ops2d,
+    (3, ECLASS_SIMPLEX): ops3d,
+    (2, ECLASS_HEX): hexops2d,
+    (3, ECLASS_HEX): hexops3d,
+}
 
 
-def get_ops(d: int) -> SimplexOps:
-    return ops2d if d == 2 else ops3d
+def get_ops(d: int, eclass: int = ECLASS_SIMPLEX) -> ElementOps:
+    try:
+        return _OPS[(int(d), int(eclass))]
+    except KeyError:
+        raise ValueError(f"no element ops for d={d}, eclass={eclass}") from None

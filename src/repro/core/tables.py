@@ -443,6 +443,19 @@ def root_face_planes(d: int) -> tuple:
 
 
 @lru_cache(maxsize=None)
+def hex_root_face_planes(d: int) -> tuple:
+    """Integer plane equations of the 2d facets of the root cube [0, 1)^d at
+    unit scale, in face order f = 2*axis + dir: the lower (x_axis = 0) and
+    upper (x_axis = 1) face per axis — same (normal, offset) convention as
+    `root_face_planes`, tested at scale 2^MAXLEVEL by the coarse-mesh layer."""
+    planes = []
+    for f in range(2 * d):
+        n = tuple(int(k == f // 2) for k in range(d))
+        planes.append((n, f % 2))
+    return tuple(planes)
+
+
+@lru_cache(maxsize=None)
 def get_tables(d: int) -> SFCTables:
     if d not in (2, 3):
         raise ValueError(f"d must be 2 or 3, got {d}")

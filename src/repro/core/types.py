@@ -16,6 +16,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# ----------------------------------------------------------- element classes
+# The element class is a *static dispatch axis*, never a per-element array
+# lane: every leaf of a tree shares its tree's class, so batches are always
+# single-class and the (d, eclass) pair selects the ops / kernels / program
+# caches.  Simplices are the paper's tetrahedral-Morton curve; hexes ride
+# the plain Morton curve (no type bits — `stype` is identically 0 and is
+# dropped from the at-rest encoding).
+ECLASS_SIMPLEX = 0
+ECLASS_HEX = 1
+NUM_ECLASSES = 2
+ECLASS_NAMES = {ECLASS_SIMPLEX: "simplex", ECLASS_HEX: "hex"}
+
 
 class Simplex(NamedTuple):
     """A batch of d-simplices (triangles or tetrahedra).
@@ -62,29 +74,45 @@ def take(s: Simplex, idx) -> Simplex:
     return Simplex(s.anchor[idx], s.level[idx], s.stype[idx])
 
 
-def pack(s: Simplex) -> dict:
-    """At-rest encoding, 10 bytes per triangle / 14 bytes per tetrahedron
-    (paper Remark 20): int32 coords + int8 level + int8 type."""
-    return {
+def pack(s: Simplex, eclass: int = ECLASS_SIMPLEX) -> dict:
+    """At-rest encoding (paper Remark 20): int32 coords + int8 level
+    (+ int8 type for simplices only).
+
+    Simplices: 10 bytes per triangle / 14 per tetrahedron — byte-identical
+    to the pre-eclass layout so existing checkpoints restore unchanged.
+    Hexes carry no type bits: 9 bytes per quad / 13 per hexahedron."""
+    blob = {
         "anchor": np.asarray(s.anchor, np.int32),
         "level": np.asarray(s.level, np.int8),
-        "stype": np.asarray(s.stype, np.int8),
     }
+    if eclass == ECLASS_SIMPLEX:
+        blob["stype"] = np.asarray(s.stype, np.int8)
+    elif eclass != ECLASS_HEX:
+        raise ValueError(f"unknown element class {eclass!r}")
+    return blob
 
 
 def unpack(blob: dict) -> Simplex:
-    return Simplex(
-        jnp.asarray(blob["anchor"], jnp.int32),
-        jnp.asarray(blob["level"], jnp.int32),
-        jnp.asarray(blob["stype"], jnp.int32),
-    )
+    """Inverse of `pack`.  A blob without a "stype" column is a hex blob
+    (plain Morton, no type bits) — its stype lane is identically 0."""
+    level = jnp.asarray(blob["level"], jnp.int32)
+    if "stype" in blob:
+        stype = jnp.asarray(blob["stype"], jnp.int32)
+    else:
+        stype = jnp.zeros_like(level)
+    return Simplex(jnp.asarray(blob["anchor"], jnp.int32), level, stype)
 
 
-def nbytes_at_rest(s: Simplex) -> int:
-    """Storage per paper Remark 20: 4*d + 2 bytes per element."""
+def nbytes_at_rest(s: Simplex, eclass: int = ECLASS_SIMPLEX) -> int:
+    """Storage per paper Remark 20: 4*d + 2 bytes per simplex (coords +
+    level + type), 4*d + 1 per hex (no type byte)."""
     d = s.anchor.shape[-1]
     n = int(np.prod(s.level.shape)) if s.level.shape else 1
-    return n * (4 * d + 2)
+    if eclass == ECLASS_SIMPLEX:
+        return n * (4 * d + 2)
+    if eclass == ECLASS_HEX:
+        return n * (4 * d + 1)
+    raise ValueError(f"unknown element class {eclass!r}")
 
 
 # ----------------------------------------------------------- wire encoding
@@ -94,8 +122,18 @@ def nbytes_at_rest(s: Simplex) -> int:
 # so a (tree, key, level) triple is 13 bytes — what Balance/Ghost queries
 # and boundary-layer notifications ship between ranks.  An optional extra
 # byte rides along (Ghost uses it for the dual face index).
-WIRE_TRIPLE_BYTES = 13  # uint64 key + int32 tree + uint8 level
+#
+# The element class rides in bits 6-7 of the level byte: levels fit in six
+# bits (MAXLEVEL <= 63 in every dimension), so simplex triples — eclass 0 —
+# are byte-identical to the pre-eclass wire format, and a receiver can
+# validate/dispatch per class without widening the entry.  Unknown class
+# bits (eclass >= NUM_ECLASSES) are rejected like any other out-of-domain
+# field, so hex keys can never be silently misrouted through simplex
+# decode (nor vice versa).
+WIRE_TRIPLE_BYTES = 13  # uint64 key + int32 tree + uint8 (eclass<<6 | level)
 WIRE_QUAD_BYTES = 14    # ... + uint8 extra
+WIRE_LEVEL_MASK = 0x3F
+WIRE_ECLASS_SHIFT = 6
 
 
 def _wire_dtype(with_extra: bool) -> np.dtype:
@@ -105,25 +143,33 @@ def _wire_dtype(with_extra: bool) -> np.dtype:
     return np.dtype(fields)
 
 
-def pack_wire(tree, key, level, extra=None) -> np.ndarray:
+def pack_wire(tree, key, level, extra=None, eclass=ECLASS_SIMPLEX) -> np.ndarray:
     """Pack (tree, key, level[, extra]) columns into a flat uint8 wire buffer
-    (13 or 14 bytes per entry, little-endian)."""
+    (13 or 14 bytes per entry, little-endian).  `eclass` (scalar or per-entry
+    column) is folded into bits 6-7 of the level byte."""
     tree = np.asarray(tree, np.int32)
     key = np.asarray(key, np.uint64)
     level = np.asarray(level, np.uint8)
+    ec = np.asarray(eclass, np.uint8)
+    if ec.size and int(ec.max(initial=0)) >= NUM_ECLASSES:
+        raise ValueError(f"unknown element class in {np.unique(ec)!r}")
     rec = np.empty(len(key), _wire_dtype(extra is not None))
-    rec["key"], rec["tree"], rec["level"] = key, tree, level
+    rec["key"], rec["tree"] = key, tree
+    rec["level"] = level | (ec << np.uint8(WIRE_ECLASS_SHIFT))
     if extra is not None:
         rec["extra"] = np.asarray(extra, np.uint8)
     return rec.view(np.uint8).reshape(-1)
 
 
-def unpack_wire(buf: np.ndarray, with_extra: bool = False):
-    """Inverse of `pack_wire`: returns (tree, key, level[, extra]) columns.
+def unpack_wire(buf: np.ndarray, with_extra: bool = False,
+                with_eclass: bool = False):
+    """Inverse of `pack_wire`: returns (tree, key, level[, extra][, eclass])
+    columns (the eclass column only when `with_eclass`; it is validated
+    either way).
 
     Malformed input — a buffer that is not a whole number of entries, a
-    non-byte dtype, or entries with out-of-domain tree/level fields (a
-    truncation that happens to land on an entry boundary decodes to
+    non-byte dtype, or entries with out-of-domain tree/level/eclass fields
+    (a truncation that happens to land on an entry boundary decodes to
     garbage columns otherwise) — raises `WireFormatError`, never a bare
     assert or a silently misaligned view."""
     from .errors import WireFormatError  # noqa: PLC0415
@@ -139,16 +185,20 @@ def unpack_wire(buf: np.ndarray, with_extra: bool = False):
             f"{dt.itemsize}-byte entries")
     rec = buf.view(dt)
     tree = rec["tree"].astype(np.int32)
-    level = rec["level"].astype(np.int32)
+    lv_byte = rec["level"].astype(np.int32)
+    level = lv_byte & WIRE_LEVEL_MASK
+    ec = lv_byte >> WIRE_ECLASS_SHIFT
     if rec.size:
         if int(tree.min()) < 0:
             raise WireFormatError(
                 f"wire entries carry negative tree ids (min {int(tree.min())})")
-        if int(level.max()) > 63:
+        if int(ec.max()) >= NUM_ECLASSES:
             raise WireFormatError(
-                f"wire entries carry implausible levels "
-                f"(max {int(level.max())} > 63)")
+                f"wire entries carry an unknown element class "
+                f"(max {int(ec.max())} >= {NUM_ECLASSES})")
     out = (tree, rec["key"].astype(np.uint64), level)
     if with_extra:
         out = out + (rec["extra"].astype(np.int32),)
+    if with_eclass:
+        out = out + (ec,)
     return out

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import u64 as u64m
-from repro.core.types import Simplex
+from repro.core.types import ECLASS_SIMPLEX, Simplex
 from . import sfc
 
 
@@ -30,102 +30,122 @@ def _padded(arrays, n_pad):
     return [jnp.pad(a, (0, n_pad - a.shape[0])) for a in arrays]
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def morton_key(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK) -> u64m.U64:
+@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+def morton_key(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK,
+               eclass: int = ECLASS_SIMPLEX) -> u64m.U64:
     """Batch morton keys via the Pallas encode kernel."""
     n = s.level.shape[0]
     np_ = _pad(n, block)
     arrays = _padded(_fields(s) + [s.stype], np_)
-    hi, lo = sfc.morton_key_kernel(d, *arrays, block=block, interpret=_interpret())
+    hi, lo = sfc.morton_key_kernel(d, *arrays, block=block, interpret=_interpret(),
+                                   eclass=eclass)
     return u64m.U64(hi[:n], lo[:n])
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3))
-def decode(d: int, key: u64m.U64, level, block: int = sfc.DEFAULT_BLOCK) -> Simplex:
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def decode(d: int, key: u64m.U64, level, block: int = sfc.DEFAULT_BLOCK,
+           eclass: int = ECLASS_SIMPLEX) -> Simplex:
     n = key.hi.shape[0]
     np_ = _pad(n, block)
     hi, lo, lvl = _padded([key.hi, key.lo, jnp.asarray(level, jnp.int32)], np_)
-    outs = sfc.decode_kernel(d, hi, lo, lvl, block=block, interpret=_interpret())
+    outs = sfc.decode_kernel(d, hi, lo, lvl, block=block, interpret=_interpret(),
+                             eclass=eclass)
     anchor = jnp.stack([o[:n] for o in outs[:d]], axis=-1)
     return Simplex(anchor, jnp.asarray(level, jnp.int32), outs[d][:n])
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3))
-def face_neighbor(d: int, s: Simplex, face, block: int = sfc.DEFAULT_BLOCK):
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def face_neighbor(d: int, s: Simplex, face, block: int = sfc.DEFAULT_BLOCK,
+                  eclass: int = ECLASS_SIMPLEX):
     n = s.level.shape[0]
     np_ = _pad(n, block)
     face = jnp.broadcast_to(jnp.asarray(face, jnp.int32), (n,))
     arrays = _padded(_fields(s) + [s.level, s.stype, face], np_)
-    outs = sfc.face_neighbor_kernel(d, *arrays, block=block, interpret=_interpret())
+    outs = sfc.face_neighbor_kernel(d, *arrays, block=block, interpret=_interpret(),
+                                    eclass=eclass)
     anchor = jnp.stack([o[:n] for o in outs[:d]], axis=-1)
     return Simplex(anchor, s.level, outs[d][:n]), outs[d + 1][:n]
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def face_sweep(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK):
-    """One fused kernel dispatch over ALL d+1 faces: returns
-    (neighbor Simplex, dual, inside, key U64), each with a leading face axis
-    of length d+1 (anchor is (d+1, n, d))."""
+@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+def face_sweep(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK,
+               eclass: int = ECLASS_SIMPLEX):
+    """One fused kernel dispatch over ALL nf faces (d+1 simplex, 2d hex):
+    returns (neighbor Simplex, dual, inside, key U64), each with a leading
+    face axis of length nf (anchor is (nf, n, d))."""
     n = s.level.shape[0]
+    nf = sfc.faces_per_element(d, eclass)
     np_ = _pad(n, block)
     arrays = _padded(_fields(s) + [s.level, s.stype], np_)
-    outs = sfc.face_sweep_kernel(d, *arrays, block=block, interpret=_interpret())
-    cut = [o[:n].T for o in outs]  # (d+1, n) per field
-    anchor = jnp.stack(cut[:d], axis=-1)  # (d+1, n, d)
-    level = jnp.broadcast_to(s.level, (d + 1, n))
+    outs = sfc.face_sweep_kernel(d, *arrays, block=block, interpret=_interpret(),
+                                 eclass=eclass)
+    cut = [o[:n].T for o in outs]  # (nf, n) per field
+    anchor = jnp.stack(cut[:d], axis=-1)  # (nf, n, d)
+    level = jnp.broadcast_to(s.level, (nf, n))
     nb = Simplex(anchor, level, cut[d])
     return nb, cut[d + 1], cut[d + 2].astype(bool), u64m.U64(cut[d + 3], cut[d + 4])
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def successor(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK) -> Simplex:
+@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+def successor(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK,
+              eclass: int = ECLASS_SIMPLEX) -> Simplex:
     n = s.level.shape[0]
     np_ = _pad(n, block)
     arrays = _padded(_fields(s) + [s.level, s.stype], np_)
-    outs = sfc.successor_kernel(d, *arrays, block=block, interpret=_interpret())
+    outs = sfc.successor_kernel(d, *arrays, block=block, interpret=_interpret(),
+                                eclass=eclass)
     anchor = jnp.stack([o[:n] for o in outs[:d]], axis=-1)
     return Simplex(anchor, s.level, outs[d][:n])
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def parent_and_local_index(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK):
+@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+def parent_and_local_index(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK,
+                           eclass: int = ECLASS_SIMPLEX):
     """One pass of the fused parent/local-index kernel: (parent, iloc)."""
     n = s.level.shape[0]
     np_ = _pad(n, block)
     arrays = _padded(_fields(s) + [s.level, s.stype], np_)
-    outs = sfc.parent_kernel(d, *arrays, block=block, interpret=_interpret())
+    outs = sfc.parent_kernel(d, *arrays, block=block, interpret=_interpret(),
+                             eclass=eclass)
     anchor = jnp.stack([o[:n] for o in outs[:d]], axis=-1)
     return Simplex(anchor, s.level - 1, outs[d][:n]), outs[d + 1][:n]
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def parent(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK) -> Simplex:
-    return parent_and_local_index(d, s, block)[0]
+@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+def parent(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK,
+           eclass: int = ECLASS_SIMPLEX) -> Simplex:
+    return parent_and_local_index(d, s, block, eclass)[0]
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def local_index(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK):
-    """TM child index within the parent (second output of the parent kernel)."""
-    return parent_and_local_index(d, s, block)[1]
+@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+def local_index(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK,
+                eclass: int = ECLASS_SIMPLEX):
+    """SFC child index within the parent (second output of the parent kernel)."""
+    return parent_and_local_index(d, s, block, eclass)[1]
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def children(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK) -> Simplex:
-    """All 2^d TM-ordered children: batch shape (n, 2^d)."""
+@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+def children(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK,
+             eclass: int = ECLASS_SIMPLEX) -> Simplex:
+    """All 2^d SFC-ordered children: batch shape (n, 2^d)."""
     n = s.level.shape[0]
     np_ = _pad(n, block)
     arrays = _padded(_fields(s) + [s.level, s.stype], np_)
-    outs = sfc.children_kernel(d, *arrays, block=block, interpret=_interpret())
+    outs = sfc.children_kernel(d, *arrays, block=block, interpret=_interpret(),
+                               eclass=eclass)
     anchor = jnp.stack([o[:n] for o in outs[:d]], axis=-1)  # (n, nc, d)
     nc = 2 ** d
     level = jnp.broadcast_to((s.level + 1)[:, None], (n, nc))
     return Simplex(anchor, level, outs[d][:n])
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2, 3, 4, 5))
-def tree_transform(d: int, s: Simplex, M, c, tmap, block: int = sfc.DEFAULT_BLOCK) -> Simplex:
+@functools.partial(jax.jit, static_argnums=(0, 2, 3, 4, 5, 6))
+def tree_transform(d: int, s: Simplex, M, c, tmap, block: int = sfc.DEFAULT_BLOCK,
+                   eclass: int = ECLASS_SIMPLEX) -> Simplex:
     """Cross-tree coordinate change; M/c/tmap are static per-connection
-    tuples (few distinct values per coarse mesh, so jit caching is cheap)."""
+    tuples (few distinct values per coarse mesh, so jit caching is cheap).
+    The body is class-generic (a hex typemap is the single entry (0,), which
+    the type LUT maps to 0), so `eclass` only keys the jit cache."""
     n = s.level.shape[0]
     np_ = _pad(n, block)
     arrays = _padded(_fields(s) + [s.level, s.stype], np_)
@@ -165,10 +185,12 @@ def eval_route(d: int, tgt, khi, klo, lev, mt, mhi, mlo,
     return tuple(o.T for o in outs)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def is_inside_root(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK):
+@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+def is_inside_root(d: int, s: Simplex, block: int = sfc.DEFAULT_BLOCK,
+                   eclass: int = ECLASS_SIMPLEX):
     n = s.level.shape[0]
     np_ = _pad(n, block)
     arrays = _padded(_fields(s) + [s.level, s.stype], np_)
-    outs = sfc.inside_root_kernel(d, *arrays, block=block, interpret=_interpret())
+    outs = sfc.inside_root_kernel(d, *arrays, block=block, interpret=_interpret(),
+                                  eclass=eclass)
     return outs[0][:n].astype(bool)

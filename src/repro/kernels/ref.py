@@ -6,7 +6,7 @@ import jax.numpy as jnp
 
 from repro.core import u64 as u64m
 from repro.core.ops import get_ops
-from repro.core.types import Simplex
+from repro.core.types import ECLASS_SIMPLEX, Simplex
 
 
 def _simplex(d, *arrays):
@@ -19,60 +19,60 @@ def _simplex(d, *arrays):
     return Simplex(anchor, level, stype)
 
 
-def morton_key_ref(d, *arrays):
+def morton_key_ref(d, *arrays, eclass=ECLASS_SIMPLEX):
     """x, y, (z,), type -> (hi, lo).  Level plays no role in the padded key
     (trailing digits of the T_0-chain are zero), so we evaluate at MAXLEVEL."""
-    o = get_ops(d)
+    o = get_ops(d, eclass)
     coords, stype = arrays[:-1], arrays[-1]
     level = jnp.full(stype.shape, o.L, jnp.int32)
     key = o.morton_key(_simplex(d, *coords, level, stype))
     return key.hi, key.lo
 
 
-def decode_ref(d, hi, lo, level):
-    o = get_ops(d)
+def decode_ref(d, hi, lo, level, eclass=ECLASS_SIMPLEX):
+    o = get_ops(d, eclass)
     s = o.decode_key(u64m.U64(hi, lo), level)
     outs = [s.anchor[..., k] for k in range(d)]
     return (*outs, s.stype)
 
 
-def parent_ref(d, *arrays):
-    o = get_ops(d)
+def parent_ref(d, *arrays, eclass=ECLASS_SIMPLEX):
+    o = get_ops(d, eclass)
     s = _simplex(d, *arrays)
     p = o.parent(s)
     outs = [p.anchor[..., k] for k in range(d)]
     return (*outs, p.stype, o.local_index(s))
 
 
-def children_ref(d, *arrays):
-    o = get_ops(d)
+def children_ref(d, *arrays, eclass=ECLASS_SIMPLEX):
+    o = get_ops(d, eclass)
     kids = o.children_tm(_simplex(d, *arrays))  # (..., nc) batch
     outs = [kids.anchor[..., k] for k in range(d)]
     return (*outs, kids.stype)
 
 
-def is_inside_root_ref(d, *arrays):
-    o = get_ops(d)
+def is_inside_root_ref(d, *arrays, eclass=ECLASS_SIMPLEX):
+    o = get_ops(d, eclass)
     return o.is_inside_root(_simplex(d, *arrays))
 
 
-def face_neighbor_ref(d, *arrays):
+def face_neighbor_ref(d, *arrays, eclass=ECLASS_SIMPLEX):
     *fields, face = arrays
-    o = get_ops(d)
+    o = get_ops(d, eclass)
     s = _simplex(d, *fields)
     nb, dual = o.face_neighbor(s, face)
     outs = [nb.anchor[..., k] for k in range(d)]
     return (*outs, nb.stype, dual)
 
 
-def face_sweep_ref(d, *arrays):
+def face_sweep_ref(d, *arrays, eclass=ECLASS_SIMPLEX):
     """Composed oracle of the fused face sweep: per face, face_neighbor +
     is_inside_root + morton_key, stacked with a trailing face axis to match
-    the kernel's (n, d+1) tiles."""
-    o = get_ops(d)
+    the kernel's (n, nf) tiles (nf = d+1 simplex, 2d hex)."""
+    o = get_ops(d, eclass)
     s = _simplex(d, *arrays)
     cols = [[] for _ in range(d + 5)]
-    for f in range(d + 1):
+    for f in range(o.nf):
         nb, dual = o.face_neighbor(s, jnp.int32(f))
         inside = o.is_inside_root(nb)
         key = o.morton_key(nb)
@@ -86,8 +86,8 @@ def face_sweep_ref(d, *arrays):
     return tuple(jnp.stack(c, axis=-1) for c in cols)
 
 
-def tree_transform_ref(d, M, c, tmap, *arrays):
-    o = get_ops(d)
+def tree_transform_ref(d, M, c, tmap, *arrays, eclass=ECLASS_SIMPLEX):
+    o = get_ops(d, eclass)
     s2 = o.tree_transform(_simplex(d, *arrays), M, c, tmap)
     outs = [s2.anchor[..., k] for k in range(d)]
     return (*outs, s2.stype)
@@ -125,8 +125,8 @@ def eval_route_ref(d, t, hi, lo, lvl, mt, mhi, mlo):
     return kh.hi, kh.lo, first, last
 
 
-def successor_ref(d, *arrays):
-    o = get_ops(d)
+def successor_ref(d, *arrays, eclass=ECLASS_SIMPLEX):
+    o = get_ops(d, eclass)
     s = _simplex(d, *arrays)
     nxt = o.successor(s)
     outs = [nxt.anchor[..., k] for k in range(d)]

@@ -33,8 +33,14 @@ from jax.experimental import pallas as pl
 
 from repro.core import u64 as u64m
 from repro.core.tables import MAXLEVEL, get_tables
+from repro.core.types import ECLASS_HEX, ECLASS_SIMPLEX
 
 DEFAULT_BLOCK = 1024
+
+
+def faces_per_element(d: int, eclass: int = ECLASS_SIMPLEX) -> int:
+    """The per-class face count that sizes face-sweep / eval-route tiles."""
+    return 2 * d if eclass == ECLASS_HEX else d + 1
 
 
 # ----------------------------------------------------------- packed tables
@@ -71,10 +77,26 @@ def _lut(consts, idx):
     return acc
 
 
+@functools.lru_cache(maxsize=None)
+def _packed_hex_nei(d: int):
+    """Hex face-neighbor constants: idx = f -> dual<<3 | (off+1) 2b per axis
+    (type bits stay 0 — hexes have no types)."""
+    nei = [0] * (2 * d)
+    for f in range(2 * d):
+        v = (f ^ 1) << 3
+        for k in range(d):
+            off = (2 * (f % 2) - 1) if k == f // 2 else 0
+            v |= (off + 1) << (6 + 2 * k)
+        nei[f] = v
+    return tuple(nei)
+
+
 # ---------------------------------------------------- shared body expressions
 # The per-op kernel bodies below and the fused face-sweep body compose these
 # pure vreg->vreg expressions; keeping them shared means the fused kernel can
-# never drift from the single-op kernels it replaces.
+# never drift from the single-op kernels it replaces.  Each simplex
+# expression has a hex twin (plain Morton: no type chain, axis-aligned
+# neighbors, box containment) selected statically by the bodies' `eclass`.
 def _encode_expr(d: int, coords, b):
     """morton key (level-padded consecutive index) from Tet-id -> (hi, lo)."""
     L = MAXLEVEL[d]
@@ -149,21 +171,73 @@ def _inside_expr(d: int, coords, lvl, b):
     return (at_root | ((lvl > 0) & inside)).astype(jnp.int32)
 
 
+def _hex_encode_expr(d: int, coords):
+    """Hex twin of `_encode_expr`: the plain Morton interleave — no type
+    chain, each level's digit is the raw cube id -> (hi, lo)."""
+    L = MAXLEVEL[d]
+    hi = jnp.zeros(coords[0].shape, jnp.uint32)
+    lo = jnp.zeros(coords[0].shape, jnp.uint32)
+    for i in range(L, 0, -1):
+        cid = jnp.zeros(coords[0].shape, jnp.int32)
+        for k, c in enumerate(coords):
+            cid = cid | (((c >> (L - i)) & 1) << k)
+        digit = cid.astype(jnp.uint32)
+        pos = d * (L - i)
+        if pos < 32:
+            lo = lo | (digit << pos)
+            if pos + d > 32:  # digit straddles the word boundary
+                hi = hi | (digit >> (32 - pos))
+        else:
+            hi = hi | (digit << (pos - 32))
+    return hi, lo
+
+
+def _hex_neighbor_expr(d: int, coords, lvl, f):
+    """Hex twin of `_neighbor_expr`: neighbor across face f = 2*axis + dir
+    is one cube side away along `axis`; dual = f ^ 1.  `f` is a face vreg or
+    a static int (the fused sweep unrolls it)."""
+    L = MAXLEVEL[d]
+    nei = _packed_hex_nei(d)
+    h = (jnp.int32(1) << (L - lvl)).astype(jnp.int32)
+    packed = _lut(nei, f) if not isinstance(f, int) else jnp.full(lvl.shape, nei[f], jnp.int32)
+    out = []
+    for k in range(d):
+        off = ((packed >> (6 + 2 * k)) & 3) - 1
+        out.append(coords[k] + off * h)
+    return out, (packed >> 3) & 7
+
+
+def _hex_inside_expr(d: int, coords, lvl):
+    """Hex twin of `_inside_expr`: box containment in the root cube —
+    anchor in [0, 2^L - h] per axis (the upper bound is h-shifted so the
+    compare never overflows int32 at level 0)."""
+    L = MAXLEVEL[d]
+    h = (jnp.int32(1) << (L - lvl)).astype(jnp.int32)
+    lim = jnp.int32(1 << L) - h
+    inside = lvl >= 0
+    for c in coords:
+        inside = inside & (c >= 0) & (c <= lim)
+    return inside.astype(jnp.int32)
+
+
 # ------------------------------------------------------------ kernel bodies
-def _encode_body(d: int, refs):
-    """morton key (level-padded consecutive index) from Tet-id."""
+def _encode_body(d: int, eclass: int, refs):
+    """morton key (level-padded consecutive index) from the element id."""
     if d == 3:
         x_ref, y_ref, z_ref, b_ref, hi_ref, lo_ref = refs
         coords = (x_ref[...], y_ref[...], z_ref[...])
     else:
         x_ref, y_ref, b_ref, hi_ref, lo_ref = refs
         coords = (x_ref[...], y_ref[...])
-    hi_ref[...], lo_ref[...] = _encode_expr(d, coords, b_ref[...])
+    if eclass == ECLASS_HEX:
+        hi_ref[...], lo_ref[...] = _hex_encode_expr(d, coords)
+    else:
+        hi_ref[...], lo_ref[...] = _encode_expr(d, coords, b_ref[...])
 
 
-def _decode_body(d: int, refs):
-    """Tet-id from morton key (level implied by trailing zero digits is NOT
-    recovered here; the caller supplies it and we mask fine digits)."""
+def _decode_body(d: int, eclass: int, refs):
+    """Element id from morton key (level implied by trailing zero digits is
+    NOT recovered here; the caller supplies it and we mask fine digits)."""
     L = MAXLEVEL[d]
     _, dec, _ = _packed_tables(d)
     nc = 2 ** d
@@ -187,9 +261,12 @@ def _decode_body(d: int, refs):
         else:
             digit = (lo >> pos) & np.uint32(nc - 1)
         iloc = jnp.where(i <= lvl, digit.astype(jnp.int32), 0)
-        packed = _lut(dec, b * nc + iloc)
-        cid = packed & 7
-        b = jnp.where(i <= lvl, packed >> 3, b)
+        if eclass == ECLASS_HEX:
+            cid = iloc  # plain Morton: the digit IS the cube id
+        else:
+            packed = _lut(dec, b * nc + iloc)
+            cid = packed & 7
+            b = jnp.where(i <= lvl, packed >> 3, b)
         for k in range(nout):
             xyz[k] = xyz[k] | (((cid >> k) & 1) << (L - i))
     x_ref[...] = xyz[0]
@@ -199,7 +276,7 @@ def _decode_body(d: int, refs):
     b_ref[...] = b
 
 
-def _neighbor_body(d: int, refs):
+def _neighbor_body(d: int, eclass: int, refs):
     """Same-level face neighbor (Algorithm 4.6): single pass, no level loop."""
     if d == 3:
         x_ref, y_ref, z_ref, lvl_ref, b_ref, f_ref, ox_ref, oy_ref, oz_ref, ob_ref, of_ref = refs
@@ -209,21 +286,25 @@ def _neighbor_body(d: int, refs):
         x_ref, y_ref, lvl_ref, b_ref, f_ref, ox_ref, oy_ref, ob_ref, of_ref = refs
         coords = (x_ref[...], y_ref[...])
         outs = (ox_ref, oy_ref)
-    ncoords, ntype, dual = _neighbor_expr(d, coords, lvl_ref[...], b_ref[...], f_ref[...])
+    if eclass == ECLASS_HEX:
+        ncoords, dual = _hex_neighbor_expr(d, coords, lvl_ref[...], f_ref[...])
+        ntype = jnp.zeros(dual.shape, jnp.int32)
+    else:
+        ncoords, ntype, dual = _neighbor_expr(d, coords, lvl_ref[...], b_ref[...], f_ref[...])
     for k in range(d):
         outs[k][...] = ncoords[k]
     ob_ref[...] = ntype
     of_ref[...] = dual
 
 
-def _face_sweep_body(d: int, refs):
-    """Fused per-element face sweep: for ALL d+1 faces at once, the same-level
-    neighbor (coords/type/dual), its inside-root mask, and its morton key —
-    the three ops Balance/Ghost evaluation composes per face, with the
-    element's (anchor, level, type) read from memory exactly once.  The face
-    loop is a static unroll, so the body stays straight-line vector code; each
-    output is a (block, d+1) tile (one column per face, like the children
-    kernel)."""
+def _face_sweep_body(d: int, eclass: int, refs):
+    """Fused per-element face sweep: for ALL nf faces at once (d+1 simplex,
+    2d hex), the same-level neighbor (coords/type/dual), its inside-root
+    mask, and its morton key — the three ops Balance/Ghost evaluation
+    composes per face, with the element's (anchor, level, type) read from
+    memory exactly once.  The face loop is a static unroll, so the body
+    stays straight-line vector code; each output is a (block, nf) tile (one
+    column per face, like the children kernel)."""
     if d == 3:
         x_ref, y_ref, z_ref, lvl_ref, b_ref = refs[:5]
         coords = (x_ref[...], y_ref[...], z_ref[...])
@@ -234,10 +315,16 @@ def _face_sweep_body(d: int, refs):
     lvl = lvl_ref[...]
     b = b_ref[...]
     cols = [[] for _ in range(len(out_refs))]
-    for f in range(d + 1):
-        ncoords, ntype, dual = _neighbor_expr(d, coords, lvl, b, f)
-        inside = _inside_expr(d, ncoords, lvl, ntype)
-        hi, lo = _encode_expr(d, ncoords, ntype)
+    for f in range(faces_per_element(d, eclass)):
+        if eclass == ECLASS_HEX:
+            ncoords, dual = _hex_neighbor_expr(d, coords, lvl, f)
+            ntype = jnp.zeros(lvl.shape, jnp.int32)
+            inside = _hex_inside_expr(d, ncoords, lvl)
+            hi, lo = _hex_encode_expr(d, ncoords)
+        else:
+            ncoords, ntype, dual = _neighbor_expr(d, coords, lvl, b, f)
+            inside = _inside_expr(d, ncoords, lvl, ntype)
+            hi, lo = _encode_expr(d, ncoords, ntype)
         for k in range(d):
             cols[k].append(ncoords[k])
         cols[d].append(ntype)
@@ -249,11 +336,14 @@ def _face_sweep_body(d: int, refs):
         ref[...] = jnp.stack(col, axis=-1)
 
 
-def _successor_body(d: int, refs):
-    """Fused successor: encode -> +1 at own level -> decode (Algorithm 4.10)."""
+def _successor_body(d: int, eclass: int, refs):
+    """Fused successor: encode -> +1 at own level -> decode (Algorithm 4.10).
+    The hex path skips the type-chain lookups on both sides (digit = cube
+    id) but shares the carry chain."""
     L = MAXLEVEL[d]
     enc, dec, _ = _packed_tables(d)
     nc = 2 ** d
+    is_hex = eclass == ECLASS_HEX
     if d == 3:
         x_ref, y_ref, z_ref, lvl_ref, b_ref, ox_ref, oy_ref, oz_ref, ob_ref = refs
         coords = (x_ref[...], y_ref[...], z_ref[...])
@@ -273,9 +363,12 @@ def _successor_body(d: int, refs):
         cid = jnp.zeros(b.shape, jnp.int32)
         for k, c in enumerate(coords):
             cid = cid | (((c >> (L - i)) & 1) << k)
-        packed = _lut(enc, bb * nc + cid)
-        ilocs[i] = packed & 7
-        bb = packed >> 3
+        if is_hex:
+            ilocs[i] = cid
+        else:
+            packed = _lut(enc, bb * nc + cid)
+            ilocs[i] = packed & 7
+            bb = packed >> 3
     # --- +1 with carry starting at own level (digits below lvl are zero) ---
     carry = jnp.ones(b.shape, jnp.int32)
     new_ilocs = [None] * (L + 1)
@@ -289,9 +382,12 @@ def _successor_body(d: int, refs):
     xyz = [jnp.zeros(b.shape, jnp.int32) for _ in range(nout)]
     for i in range(1, L + 1):
         iloc = jnp.where(i <= lvl, new_ilocs[i], 0)
-        packed = _lut(dec, bo * nc + iloc)
-        cid = packed & 7
-        bo = jnp.where(i <= lvl, packed >> 3, bo)
+        if is_hex:
+            cid = iloc
+        else:
+            packed = _lut(dec, bo * nc + iloc)
+            cid = packed & 7
+            bo = jnp.where(i <= lvl, packed >> 3, bo)
         for k in range(nout):
             xyz[k] = xyz[k] | (((cid >> k) & 1) << (L - i))
     for k in range(nout):
@@ -299,9 +395,10 @@ def _successor_body(d: int, refs):
     ob_ref[...] = bo
 
 
-def _parent_body(d: int, refs):
-    """Parent Tet-id (Algorithm 4.3) + local index (paper Table 6), fused:
-    one cube-id extraction feeds both lookups via the packed `enc` table."""
+def _parent_body(d: int, eclass: int, refs):
+    """Parent id (Algorithm 4.3) + local index (paper Table 6), fused:
+    one cube-id extraction feeds both lookups via the packed `enc` table.
+    For hexes the cube id IS the local index and the parent type is 0."""
     L = MAXLEVEL[d]
     enc, _, _ = _packed_tables(d)
     nc = 2 ** d
@@ -319,16 +416,20 @@ def _parent_body(d: int, refs):
     cid = jnp.zeros(b.shape, jnp.int32)
     for k, c in enumerate(coords):
         cid = cid | jnp.where((c & h) != 0, jnp.int32(1 << k), 0)
-    packed = _lut(enc, b * nc + cid)
     for k, c in enumerate(coords):
         outs[k][...] = c & ~h
-    ob_ref[...] = packed >> 3
-    oi_ref[...] = packed & 7
+    if eclass == ECLASS_HEX:
+        ob_ref[...] = jnp.zeros(b.shape, jnp.int32)
+        oi_ref[...] = cid
+    else:
+        packed = _lut(enc, b * nc + cid)
+        ob_ref[...] = packed >> 3
+        oi_ref[...] = packed & 7
 
 
-def _children_body(d: int, refs):
-    """All 2^d children in TM order (Algorithm 4.5), one (block, 2^d) tile
-    per output field."""
+def _children_body(d: int, eclass: int, refs):
+    """All 2^d children in SFC order (Algorithm 4.5; plain Morton order for
+    hexes), one (block, 2^d) tile per output field."""
     L = MAXLEVEL[d]
     _, dec, _ = _packed_tables(d)
     nc = 2 ** d
@@ -346,9 +447,13 @@ def _children_body(d: int, refs):
     cols = [[] for _ in range(d)]
     type_cols = []
     for iloc in range(nc):
-        packed = _lut(dec, b * nc + iloc)
-        cid = packed & 7
-        type_cols.append(packed >> 3)
+        if eclass == ECLASS_HEX:
+            cid = jnp.full(b.shape, iloc, jnp.int32)
+            type_cols.append(jnp.zeros(b.shape, jnp.int32))
+        else:
+            packed = _lut(dec, b * nc + iloc)
+            cid = packed & 7
+            type_cols.append(packed >> 3)
         for k, c in enumerate(coords):
             cols[k].append(c + h2 * ((cid >> k) & 1))
     for k in range(d):
@@ -428,15 +533,19 @@ def _eval_route_body(d: int, num_markers: int, refs):
     olast_ref[...] = _owner_count_expr(num_markers, t, kh.hi, kh.lo, mt, mhi, mlo)
 
 
-def _inside_body(d: int, refs):
-    """Constant-time inside-root test (Proposition 23 with T = root, type 0)."""
+def _inside_body(d: int, eclass: int, refs):
+    """Constant-time inside-root test (Proposition 23 with T = root, type 0;
+    box containment for hexes)."""
     if d == 3:
         x_ref, y_ref, z_ref, lvl_ref, b_ref, o_ref = refs
         coords = (x_ref[...], y_ref[...], z_ref[...])
     else:
         x_ref, y_ref, lvl_ref, b_ref, o_ref = refs
         coords = (x_ref[...], y_ref[...])
-    o_ref[...] = _inside_expr(d, coords, lvl_ref[...], b_ref[...])
+    if eclass == ECLASS_HEX:
+        o_ref[...] = _hex_inside_expr(d, coords, lvl_ref[...])
+    else:
+        o_ref[...] = _inside_expr(d, coords, lvl_ref[...], b_ref[...])
 
 
 # --------------------------------------------------------------- pallas_call
@@ -445,13 +554,14 @@ def _specs(n_in, n_out, block):
     return [spec] * n_in, [spec] * n_out
 
 
-def morton_key_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True):
+def morton_key_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True,
+                      eclass: int = ECLASS_SIMPLEX):
     """arrays: x, y, (z,), type — int32, shape (N,) with N % block == 0.
     Returns (hi, lo) uint32 morton keys."""
     n = arrays[0].shape[0]
     in_specs, out_specs = _specs(len(arrays), 2, block)
     return pl.pallas_call(
-        lambda *refs: _encode_body(d, refs),
+        lambda *refs: _encode_body(d, eclass, refs),
         grid=(n // block,),
         in_specs=in_specs,
         out_specs=out_specs,
@@ -460,12 +570,13 @@ def morton_key_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bo
     )(*arrays)
 
 
-def decode_kernel(d: int, hi, lo, level, block: int = DEFAULT_BLOCK, interpret: bool = True):
+def decode_kernel(d: int, hi, lo, level, block: int = DEFAULT_BLOCK, interpret: bool = True,
+                  eclass: int = ECLASS_SIMPLEX):
     """Returns x, y, (z,), type from morton keys + level."""
     n = hi.shape[0]
     in_specs, out_specs = _specs(3, d + 1, block)
     return pl.pallas_call(
-        lambda *refs: _decode_body(d, refs),
+        lambda *refs: _decode_body(d, eclass, refs),
         grid=(n // block,),
         in_specs=in_specs,
         out_specs=out_specs,
@@ -474,13 +585,14 @@ def decode_kernel(d: int, hi, lo, level, block: int = DEFAULT_BLOCK, interpret: 
     )(hi, lo, level)
 
 
-def face_neighbor_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True):
+def face_neighbor_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True,
+                         eclass: int = ECLASS_SIMPLEX):
     """arrays: x, y, (z,), level, type, face — int32 (N,).
     Returns x, y, (z,), type, dual_face of the same-level neighbor."""
     n = arrays[0].shape[0]
     in_specs, out_specs = _specs(len(arrays), d + 2, block)
     return pl.pallas_call(
-        lambda *refs: _neighbor_body(d, refs),
+        lambda *refs: _neighbor_body(d, eclass, refs),
         grid=(n // block,),
         in_specs=in_specs,
         out_specs=out_specs,
@@ -489,19 +601,20 @@ def face_neighbor_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret:
     )(*arrays)
 
 
-def face_sweep_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True):
+def face_sweep_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True,
+                      eclass: int = ECLASS_SIMPLEX):
     """arrays: x, y, (z,), level, type — int32 (N,) with N % block == 0.
-    One fused dispatch over ALL d+1 faces: returns x, y, (z,), type, dual,
-    inside, key_hi, key_lo of every same-level face neighbor, each output a
-    (N, d+1) tile with one column per face.  key_hi/lo are uint32 morton-key
-    words; inside is an int32 0/1 mask."""
+    One fused dispatch over ALL nf faces (d+1 simplex, 2d hex): returns
+    x, y, (z,), type, dual, inside, key_hi, key_lo of every same-level face
+    neighbor, each output a (N, nf) tile with one column per face.
+    key_hi/lo are uint32 morton-key words; inside is an int32 0/1 mask."""
     n = arrays[0].shape[0]
-    nf = d + 1
+    nf = faces_per_element(d, eclass)
     in_specs, _ = _specs(len(arrays), 0, block)
     out_spec = pl.BlockSpec((block, nf), lambda i: (i, 0))
     n_out = d + 3  # coords, type, dual, inside (+ hi, lo below)
     return pl.pallas_call(
-        lambda *refs: _face_sweep_body(d, refs),
+        lambda *refs: _face_sweep_body(d, eclass, refs),
         grid=(n // block,),
         in_specs=in_specs,
         out_specs=[out_spec] * (n_out + 2),
@@ -511,14 +624,15 @@ def face_sweep_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bo
     )(*arrays)
 
 
-def parent_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True):
+def parent_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True,
+                  eclass: int = ECLASS_SIMPLEX):
     """arrays: x, y, (z,), level, type — int32 (N,).
-    Returns x, y, (z,), type of the parent plus the element's TM local index
+    Returns x, y, (z,), type of the parent plus the element's SFC local index
     (the parent's level is the caller's `level - 1`)."""
     n = arrays[0].shape[0]
     in_specs, out_specs = _specs(len(arrays), d + 2, block)
     return pl.pallas_call(
-        lambda *refs: _parent_body(d, refs),
+        lambda *refs: _parent_body(d, eclass, refs),
         grid=(n // block,),
         in_specs=in_specs,
         out_specs=out_specs,
@@ -527,15 +641,16 @@ def parent_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool =
     )(*arrays)
 
 
-def children_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True):
+def children_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True,
+                    eclass: int = ECLASS_SIMPLEX):
     """arrays: x, y, (z,), level, type — int32 (N,).
-    Returns x, y, (z,), type of all 2^d TM-ordered children, each (N, 2^d)."""
+    Returns x, y, (z,), type of all 2^d SFC-ordered children, each (N, 2^d)."""
     n = arrays[0].shape[0]
     nc = 2 ** d
     in_specs, _ = _specs(len(arrays), 0, block)
     out_spec = pl.BlockSpec((block, nc), lambda i: (i, 0))
     return pl.pallas_call(
-        lambda *refs: _children_body(d, refs),
+        lambda *refs: _children_body(d, eclass, refs),
         grid=(n // block,),
         in_specs=in_specs,
         out_specs=[out_spec] * (d + 1),
@@ -544,13 +659,14 @@ def children_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool
     )(*arrays)
 
 
-def inside_root_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True):
+def inside_root_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True,
+                       eclass: int = ECLASS_SIMPLEX):
     """arrays: x, y, (z,), level, type — int32 (N,).
-    Returns an int32 0/1 mask: does the element lie inside the root simplex?"""
+    Returns an int32 0/1 mask: does the element lie inside the root?"""
     n = arrays[0].shape[0]
     in_specs, out_specs = _specs(len(arrays), 1, block)
     return pl.pallas_call(
-        lambda *refs: _inside_body(d, refs),
+        lambda *refs: _inside_body(d, eclass, refs),
         grid=(n // block,),
         in_specs=in_specs,
         out_specs=out_specs,
@@ -599,12 +715,13 @@ def owner_rank_kernel(t, hi, lo, mt, mhi, mlo,
 def eval_route_kernel(d: int, t, hi, lo, lvl, mt, mhi, mlo,
                       block: int = DEFAULT_BLOCK, interpret: bool = True):
     """t/hi/lo/lvl: per-(element, face) target tree, neighbor key words and
-    element level, each a (N, d+1) tile with N % block == 0.  mt/mhi/mlo:
+    element level, each a (N, nf) tile with N % block == 0 (nf is read off
+    the input tile, so both element classes share this body).  mt/mhi/mlo:
     sentinel-padded partition markers (P,).  Returns (khi64_hi, khi64_lo,
     first, last): the interval-end key words (uint32) and the owner-rank
-    range (int32) per pair, each (N, d+1)."""
+    range (int32) per pair, each (N, nf)."""
     n = t.shape[0]
-    nf = d + 1
+    nf = t.shape[1]
     num_markers = mt.shape[0]
     spec = pl.BlockSpec((block, nf), lambda i: (i, 0))
     mspec = pl.BlockSpec((num_markers,), lambda i: (0,))
@@ -619,13 +736,14 @@ def eval_route_kernel(d: int, t, hi, lo, lvl, mt, mhi, mlo,
     )(t, hi, lo, lvl, mt, mhi, mlo)
 
 
-def successor_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True):
+def successor_kernel(d: int, *arrays, block: int = DEFAULT_BLOCK, interpret: bool = True,
+                     eclass: int = ECLASS_SIMPLEX):
     """arrays: x, y, (z,), level, type — int32 (N,).
     Returns x, y, (z,), type of the SFC successor at the same level."""
     n = arrays[0].shape[0]
     in_specs, out_specs = _specs(len(arrays), d + 1, block)
     return pl.pallas_call(
-        lambda *refs: _successor_body(d, refs),
+        lambda *refs: _successor_body(d, eclass, refs),
         grid=(n // block,),
         in_specs=in_specs,
         out_specs=out_specs,

@@ -9,14 +9,16 @@ from repro.core import u64 as u64m
 from repro.core.ops import get_ops
 
 
-def rand_simplices(d, n, seed, min_level=1, max_level=None, margin=0):
+def rand_simplices(d, n, seed, min_level=1, max_level=None, margin=0, eclass=0):
     """Random valid elements by decoding random consecutive indices.
 
     `margin` keeps ids away from the end of the level range (so e.g.
     `successor` stays inside the tree).  Ids are clamped to 2^62 to stay
     below the uint64 emulation's comfortable range at d=3, MAXLEVEL.
+    With `eclass=1` the ids decode along the plain-Morton hex curve instead
+    (same container type; the stype lane is identically 0).
     """
-    o = get_ops(d)
+    o = get_ops(d, eclass)
     max_level = o.L if max_level is None else max_level
     rng = np.random.default_rng(seed)
     lv = rng.integers(min_level, max_level + 1, size=n)

@@ -1,0 +1,249 @@
+"""Element-class polymorphism at the forest layer.
+
+Pure-hex forests run the complete New/Adapt/Partition/Balance/Ghost
+pipeline against the generalized oracles on every backend, the mixed-class
+fixture (hex brick next to a Kuhn tet cube, `cmesh_hybrid_pair`) runs it at
+P=2 with per-class oracle parity, and the fused-sweep dispatch meters prove
+the per-class drivers cost exactly one dispatch per class per eval layer —
+no extra sweeps from mixing classes in one mesh.
+"""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_forest, save_forest
+from repro.core import batch
+from repro.core import cmesh as C
+from repro.core import forest as F
+from repro.core import get_ops
+from repro.core.errors import CheckpointIntegrityError
+from repro.core.types import ECLASS_HEX, ECLASS_SIMPLEX
+
+BACKENDS = ["reference", "jnp", pytest.param("pallas", marks=pytest.mark.slow)]
+
+
+def corner_cb(tree, elems, cap=99):
+    a = np.asarray(elems.anchor)
+    l = np.asarray(elems.level)
+    return ((a.sum(axis=1) == 0) & (l < cap)).astype(np.int32)
+
+
+def _assert_forests_equal(fa, fb):
+    for a, b in zip(fa, fb):
+        np.testing.assert_array_equal(a.keys, b.keys)
+        np.testing.assert_array_equal(a.tree, b.tree)
+        np.testing.assert_array_equal(a.level, b.level)
+        np.testing.assert_array_equal(a.anchor, b.anchor)
+        np.testing.assert_array_equal(a.stype, b.stype)
+
+
+def _assert_ghosts_equal(ga, gb):
+    assert len(ga) == len(gb)
+    for a, b in zip(ga, gb):
+        for k in ("anchor", "level", "stype", "tree", "owner"):
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+# --------------------------------------------------------- pure-hex pipeline
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("d", [2, 3])
+def test_hex_pipeline_vs_oracles(d, backend):
+    """Acceptance: a pure-hex forest (multi-tree brick) completes the whole
+    pipeline on each backend, and the message-based balance/ghost match the
+    generalized global-table oracles element for element."""
+    shape = (2, 1) if d == 2 else (2, 1, 1)
+    level = 1 if backend == "pallas" else 2 if d == 2 else 1
+    cm = C.cmesh_hex_brick(d, shape)
+    comm = F.SimComm(2)
+    with batch.use_backend(backend):
+        fs = F.new_uniform(d, cm.num_trees, level, comm, cmesh=cm)
+        assert F.count_global(fs) == cm.num_trees * get_ops(d, ECLASS_HEX).num_elements(level)
+        fs = [F.adapt(f, lambda t, e: corner_cb(t, e, cap=level + 2),
+                      recursive=True) for f in fs]
+        fs = F.partition(fs, comm)
+        bal = F.balance(fs, comm)
+        assert F.validate(bal)
+        _assert_forests_equal(bal, F.balance_oracle(fs, comm))
+        gh = F.ghost(bal, comm)
+        assert F.validate(bal, gh)
+        _assert_ghosts_equal(gh, F.ghost_oracle(bal, comm))
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_hex_pipeline_bit_identical_across_backends(d):
+    """reference and jnp produce byte-equal pure-hex forests and ghost
+    layers (pallas covered by the slow rows above)."""
+    cm = C.cmesh_hex_brick(d, (2,) + (1,) * (d - 1))
+    comm = F.SimComm(2)
+    outs = {}
+    for be in ("reference", "jnp"):
+        with batch.use_backend(be):
+            fs = F.new_uniform(d, cm.num_trees, 1, comm, cmesh=cm)
+            fs = [F.adapt(f, lambda t, e: corner_cb(t, e, cap=3),
+                          recursive=True) for f in fs]
+            fs = F.balance(fs, comm)
+            gh = F.ghost(fs, comm)
+        outs[be] = (fs, gh)
+    _assert_forests_equal(outs["reference"][0], outs["jnp"][0])
+    _assert_ghosts_equal(outs["reference"][1], outs["jnp"][1])
+
+
+def test_hex_periodic_brick_iterate_pair_count():
+    """Fully periodic 2D hex brick at uniform level 2: every face pairs, so
+    iterate sees exactly nf*n/2 = 2*n face pairs."""
+    cm = C.cmesh_hex_brick(2, (2, 2), periodic=(True, True))
+    comm = F.SimComm(1)
+    fs = F.new_uniform(2, cm.num_trees, 2, comm, cmesh=cm)
+    n = fs[0].num_local
+    seen = {}
+    F.iterate(fs[0], face_fn=lambda f, pairs: seen.setdefault("pairs", pairs))
+    assert len(seen["pairs"]) == 2 * n
+
+
+# ------------------------------------------------------- mixed-class fixture
+@pytest.mark.parametrize("d", [2, 3])
+def test_mixed_class_pipeline_p2(d):
+    """Acceptance: the hybrid fixture (hex cube next to a Kuhn tet cube)
+    runs the full pipeline at P=2; balance and ghost match their oracles
+    per class, and the merged forest validates with its ghost layer."""
+    cm = C.cmesh_hybrid_pair(d)
+    comm = F.SimComm(2)
+    level = 2 if d == 2 else 1
+    fs = F.new_uniform(d, cm.num_trees, level, comm, cmesh=cm)
+    o = get_ops(d)
+    assert F.count_global(fs) == cm.num_trees * o.num_elements(level)
+    assert F.validate(fs)
+
+    fs = [F.adapt(f, lambda t, e: corner_cb(t, e, cap=level + 2),
+                  recursive=True) for f in fs]
+    fs = F.partition(fs, comm)
+    assert F.validate(fs)
+    # both classes actually refined: the hex tree and some simplex tree
+    # carry elements above the base level
+    lv_by_ec = {ec: [] for ec in (ECLASS_HEX, ECLASS_SIMPLEX)}
+    for f in fs:
+        te = cm.tree_eclass[f.tree]
+        for ec in lv_by_ec:
+            lv_by_ec[ec].extend(np.asarray(f.level)[te == ec].tolist())
+    assert max(lv_by_ec[ECLASS_HEX]) > level
+    assert max(lv_by_ec[ECLASS_SIMPLEX]) > level
+
+    bal = F.balance(fs, comm)
+    assert F.validate(bal)
+    _assert_forests_equal(bal, F.balance_oracle(fs, comm))
+    gh = F.ghost(bal, comm)
+    assert F.validate(bal, gh)
+    _assert_ghosts_equal(gh, F.ghost_oracle(bal, comm))
+
+    # iterate: elem_fn sees every local element once; face pairs exist and
+    # never straddle the cross-class tree face (a domain boundary)
+    for f in bal:
+        seen = {}
+        F.iterate(f, elem_fn=lambda t, e: seen.setdefault("n", len(np.asarray(t))),
+                  face_fn=lambda ff, pairs: seen.setdefault("pairs", pairs))
+        assert seen["n"] == f.num_local
+        te = cm.tree_eclass[f.tree]
+        for i, j, _, _ in seen.get("pairs", np.zeros((0, 4), np.int64)):
+            assert te[int(i)] == te[int(j)], "face pair straddles classes"
+
+
+def test_mixed_class_repartition_roundtrip():
+    """Weighted repartition of the mixed fixture migrates class-tagged wire
+    triples and reassembles both classes bit for bit."""
+    cm = C.cmesh_hybrid_pair(2)
+    comm = F.SimComm(3)
+    fs = F.new_uniform(2, cm.num_trees, 2, comm, cmesh=cm)
+    fs = [F.adapt(f, lambda t, e: corner_cb(t, e, cap=4), recursive=True)
+          for f in fs]
+    before = {(int(t), int(k)) for f in fs
+              for t, k in zip(f.tree.tolist(), f.keys.tolist())}
+    # skew weights so elements actually move
+    ws = [np.linspace(1, 5, f.num_local) for f in fs]
+    out = F.repartition(fs, comm, weights=ws)
+    assert F.validate(out)
+    after = {(int(t), int(k)) for f in out
+             for t, k in zip(f.tree.tolist(), f.keys.tolist())}
+    assert before == after
+
+
+# ------------------------------------------------- dispatch-count accounting
+def test_mixed_class_dispatch_is_per_class_sum():
+    """The per-class drivers cost exactly one fused face_sweep/eval_route
+    dispatch per class per eval layer: running balance/ghost on the mixed
+    mesh meters the same dispatch counts as running each class group's
+    sub-forest through the single-class impl directly."""
+    cm = C.cmesh_hybrid_pair(2)
+    comm = F.SimComm(2)
+    fs = F.new_uniform(2, cm.num_trees, 2, comm, cmesh=cm)
+    fs = [F.adapt(f, lambda t, e: corner_cb(t, e, cap=4), recursive=True)
+          for f in fs]
+
+    KEYS = ("face_sweep", "eval_route")
+
+    def meter(fn):
+        batch.reset_dispatch_counts()
+        fn()
+        c = batch.dispatch_counts()
+        return {k: c.get(k, 0) for k in KEYS}
+
+    mixed_bal = meter(lambda: F.balance(fs, comm))
+    mixed_gh = meter(lambda: F.ghost(F.balance(fs, comm), comm))
+
+    per_class_bal = {k: 0 for k in KEYS}
+    per_class_gh = {k: 0 for k in KEYS}
+    for ec in cm.eclasses:
+        sub = F._class_subforests(fs, ec)
+        c = meter(lambda: F._balance_impl(sub, comm, eclass=ec))
+        for k in KEYS:
+            per_class_bal[k] += c[k]
+        bal_sub = F._balance_impl(sub, comm, eclass=ec)
+        c = meter(lambda: F._ghost_impl(bal_sub, comm, True, ec))
+        for k in KEYS:
+            per_class_gh[k] += c[k]
+
+    assert mixed_bal == per_class_bal
+    # the mixed ghost run meters balance + ghost; subtract the balance part
+    gh_only = {k: mixed_gh[k] - mixed_bal[k] for k in KEYS}
+    assert gh_only == per_class_gh
+    assert per_class_gh["face_sweep"] > 0
+
+
+# ----------------------------------------------------- checkpoint round-trip
+def test_hex_checkpoint_roundtrip_elastic(tmp_path):
+    """Pure-hex checkpoints (4d+1 B at-rest rows, no stype column) restore
+    bit for bit at the same P and re-split cleanly at a different P."""
+    cm = C.cmesh_hex_brick(2, (2, 1))
+    comm = F.SimComm(2)
+    fs = F.new_uniform(2, cm.num_trees, 2, comm, cmesh=cm)
+    fs = [F.adapt(f, lambda t, e: corner_cb(t, e, cap=4), recursive=True)
+          for f in fs]
+    fs = F.balance(fs, comm)
+    save_forest(tmp_path, fs, comm, step=0)
+
+    same = load_forest(tmp_path, F.SimComm(2), cmesh=cm)
+    _assert_forests_equal(same, fs)
+    elastic = load_forest(tmp_path, F.SimComm(3), cmesh=cm)
+    assert F.validate(elastic)
+    assert F.count_global(elastic) == F.count_global(fs)
+
+    # a non-simplex checkpoint cannot decode without its cmesh
+    with pytest.raises(CheckpointIntegrityError):
+        load_forest(tmp_path, F.SimComm(2))
+
+
+def test_mixed_checkpoint_roundtrip(tmp_path):
+    cm = C.cmesh_hybrid_pair(2)
+    comm = F.SimComm(2)
+    fs = F.new_uniform(2, cm.num_trees, 2, comm, cmesh=cm)
+    fs = [F.adapt(f, lambda t, e: corner_cb(t, e, cap=4), recursive=True)
+          for f in fs]
+    fs = F.balance(fs, comm)
+    save_forest(tmp_path, fs, comm, step=3)
+
+    same = load_forest(tmp_path, F.SimComm(2), cmesh=cm)
+    _assert_forests_equal(same, fs)
+    elastic = load_forest(tmp_path, F.SimComm(4), cmesh=cm)
+    assert F.validate(elastic)
+    assert F.count_global(elastic) == F.count_global(fs)
+    with pytest.raises(CheckpointIntegrityError):
+        load_forest(tmp_path, F.SimComm(2))

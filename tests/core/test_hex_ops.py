@@ -1,0 +1,172 @@
+"""Hex (plain-Morton) element class: reference invariants, backend parity,
+and empty batches.
+
+The hex class is the second element class behind the `(d, eclass)` ops
+seam: `HexOps` is the eager oracle, and the jnp/pallas backends (pallas in
+interpret mode on CPU) must reproduce its integers bit for bit over random
+batches at d=2 and d=3 — the same differential contract the simplex class
+pins in test_batch_backends.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _helpers import rand_simplices
+from repro.core import batch, get_ops
+from repro.core import u64 as u64m
+from repro.core.types import ECLASS_HEX, Simplex
+
+BACKENDS = ["jnp", pytest.param("pallas", marks=pytest.mark.slow)]
+
+N = 64
+
+
+def assert_simplex_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.anchor), np.asarray(b.anchor))
+    np.testing.assert_array_equal(np.asarray(a.level), np.asarray(b.level))
+    np.testing.assert_array_equal(np.asarray(a.stype), np.asarray(b.stype))
+
+
+@pytest.fixture(params=[2, 3])
+def d(request):
+    return request.param
+
+
+def hexes(d, n=N, seed=0, **kw):
+    kw.setdefault("min_level", 1)
+    return rand_simplices(d, n, seed=seed, eclass=ECLASS_HEX, **kw)
+
+
+# ------------------------------------------------------ reference invariants
+def test_hex_ops_shape_constants(d):
+    o = get_ops(d, ECLASS_HEX)
+    assert o.eclass == ECLASS_HEX
+    assert o.nt == 1 and o.nc == 2 ** d and o.nf == 2 * d
+    assert o.num_corners == 2 ** d
+    assert np.asarray(o.face_corner_indices).shape == (2 * d, 2 ** (d - 1))
+    # same MAXLEVEL and element counts as the simplex curve: the SFC
+    # interval arithmetic (spans, markers, repartition) is class-generic
+    os_ = get_ops(d)
+    assert o.L == os_.L
+    assert o.num_elements(3) == os_.num_elements(3)
+
+
+def test_hex_parent_child_roundtrip(d):
+    o = get_ops(d, ECLASS_HEX)
+    s = hexes(d, seed=d, max_level=o.L - 1)
+    kids = o.children_tm(s)
+    for j in range(o.nc):
+        kid = Simplex(kids.anchor[:, j], kids.level[:, j], kids.stype[:, j])
+        par = o.parent(kid)
+        np.testing.assert_array_equal(np.asarray(par.anchor), np.asarray(s.anchor))
+        np.testing.assert_array_equal(
+            np.asarray(o.local_index(kid)), np.full(N, j))
+
+
+def test_hex_morton_key_roundtrip(d):
+    o = get_ops(d, ECLASS_HEX)
+    s = hexes(d, seed=d + 10, min_level=0)
+    key = o.morton_key(s)
+    back = o.decode_key(key, s.level)
+    assert_simplex_equal(back, s)
+    assert not np.asarray(s.stype).any()
+
+
+def test_hex_face_neighbor_involution(d):
+    """neighbor(neighbor) is the identity, and dual = face ^ 1."""
+    o = get_ops(d, ECLASS_HEX)
+    s = hexes(d, seed=d + 20)
+    for f in range(o.nf):
+        nb, dual = o.face_neighbor(s, f)
+        np.testing.assert_array_equal(np.asarray(dual), np.full(N, f ^ 1))
+        back, dual2 = o.face_neighbor(nb, f ^ 1)
+        assert_simplex_equal(back, s)
+        np.testing.assert_array_equal(np.asarray(dual2), np.full(N, f))
+
+
+# ---------------------------------------------------------- backend parity
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_hex_morton_key_decode_parity(d, backend):
+    s = hexes(d, seed=1, min_level=0)
+    ref = batch.get_batch_ops(d, "reference", eclass=ECLASS_HEX)
+    got = batch.get_batch_ops(d, backend, eclass=ECLASS_HEX)
+    np.testing.assert_array_equal(got.morton_key_np(s), ref.morton_key_np(s))
+    key = u64m.from_int(ref.morton_key_np(s))
+    assert_simplex_equal(got.decode(key, s.level), ref.decode(key, s.level))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_hex_parent_children_successor_parity(d, backend):
+    o = get_ops(d, ECLASS_HEX)
+    s = hexes(d, seed=2, margin=2, max_level=o.L - 1)
+    ref = batch.get_batch_ops(d, "reference", eclass=ECLASS_HEX)
+    got = batch.get_batch_ops(d, backend, eclass=ECLASS_HEX)
+    par_r, il_r = ref.parent_and_local_index(s)
+    par_g, il_g = got.parent_and_local_index(s)
+    assert_simplex_equal(par_g, par_r)
+    np.testing.assert_array_equal(np.asarray(il_g), np.asarray(il_r))
+    assert_simplex_equal(got.children(s), ref.children(s))
+    assert_simplex_equal(got.successor(s), ref.successor(s))
+    np.testing.assert_array_equal(
+        np.asarray(got.is_inside_root(s)), np.asarray(ref.is_inside_root(s)))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_hex_face_sweep_parity(d, backend):
+    """The fused all-faces sweep carries 2d face rows for hexes and must be
+    bit-identical across backends (pallas runs the interpret-mode kernels)."""
+    s = hexes(d, seed=3, min_level=0)
+    ref = batch.get_batch_ops(d, "reference", eclass=ECLASS_HEX)
+    got = batch.get_batch_ops(d, backend, eclass=ECLASS_HEX)
+    assert ref.nf == got.nf == 2 * d
+    sw_r, sw_g = ref.face_sweep(s), got.face_sweep(s)
+    assert sw_g.neighbor.anchor.shape == (2 * d, N, d)
+    assert_simplex_equal(sw_g.neighbor, sw_r.neighbor)
+    np.testing.assert_array_equal(np.asarray(sw_g.dual), np.asarray(sw_r.dual))
+    np.testing.assert_array_equal(
+        np.asarray(sw_g.inside), np.asarray(sw_r.inside))
+    np.testing.assert_array_equal(u64m.to_np(sw_g.key), u64m.to_np(sw_r.key))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_hex_tree_transform_parity(d, backend):
+    # a signed-permutation embedding (reflect axis 0, swap with axis 1)
+    M = np.eye(d, dtype=np.int64)
+    M[0, 0] = 0
+    M[0, 1] = -1
+    M[1, 1] = 0
+    M[1, 0] = 1
+    c = np.array([1 << get_ops(d).L] + [0] * (d - 1), np.int64)
+    tmap = np.zeros(1, np.int64)  # hex typemap: the single type maps to 0
+    s = hexes(d, seed=4)
+    ref = batch.get_batch_ops(d, "reference", eclass=ECLASS_HEX)
+    got = batch.get_batch_ops(d, backend, eclass=ECLASS_HEX)
+    assert_simplex_equal(
+        got.tree_transform(s, M, c, tmap), ref.tree_transform(s, M, c, tmap))
+
+
+# ------------------------------------------------------------- empty batches
+@pytest.mark.parametrize("backend", ["reference"] + BACKENDS)
+def test_hex_empty_batch_all_ops(d, backend):
+    o = get_ops(d, ECLASS_HEX)
+    s = o.from_linear_id(u64m.from_int(np.zeros(0, np.uint64)),
+                         jnp.zeros(0, jnp.int32))
+    b = batch.get_batch_ops(d, backend, eclass=ECLASS_HEX)
+    assert b.morton_key_np(s).shape == (0,)
+    assert b.parent(s).level.shape == (0,)
+    assert b.children(s).level.shape == (0, o.nc)
+    assert b.successor(s).level.shape == (0,)
+    assert np.asarray(b.is_inside_root(s)).shape == (0,)
+    nb, dual = b.face_neighbor(s, 0)
+    assert nb.level.shape == (0,)
+    sw = b.face_sweep(s)
+    assert sw.neighbor.anchor.shape == (2 * d, 0, d)
+    assert sw.key.hi.shape == (2 * d, 0)
+    assert b.tree_transform(
+        s, np.eye(d, dtype=np.int64), np.zeros(d, np.int64), np.arange(o.nt)
+    ).level.shape == (0,)
+    assert b.owner_rank(
+        np.zeros(0, np.int32), np.zeros(0, np.uint64),
+        np.zeros(1, np.int32), np.zeros(1, np.uint64),
+    ).shape == (0,)

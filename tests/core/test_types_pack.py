@@ -51,3 +51,43 @@ def test_pack_preserves_extremes(d):
 def test_scalar_simplex_nbytes():
     assert nbytes_at_rest(simplex(np.zeros(3), 0, 0)) == 14
     assert nbytes_at_rest(simplex(np.zeros(2), 0, 0)) == 10
+
+
+# ------------------------------------------------------------ element classes
+@pytest.mark.parametrize("d,per_elem", [(2, 9), (3, 13)])
+def test_hex_nbytes_at_rest(d, per_elem):
+    """Hexes carry no type byte: 4d + 1 = 9 B per quad, 13 B per hex."""
+    from repro.core.types import ECLASS_HEX
+
+    for n in (1, 7, 1024):
+        s = rand_simplices(d, n, seed=n + d, min_level=0, eclass=ECLASS_HEX)
+        assert nbytes_at_rest(s, eclass=ECLASS_HEX) == per_elem * n
+        blob = pack(s, eclass=ECLASS_HEX)
+        assert "stype" not in blob
+        assert sum(a.nbytes for a in blob.values()) == per_elem * n
+        back = unpack(blob)
+        np.testing.assert_array_equal(np.asarray(back.anchor), np.asarray(s.anchor))
+        np.testing.assert_array_equal(np.asarray(back.level), np.asarray(s.level))
+        assert not np.asarray(back.stype).any()  # hex stype lane is all-zero
+
+
+def test_pack_rejects_unknown_eclass():
+    s = rand_simplices(2, 3, seed=0, min_level=0)
+    with pytest.raises(ValueError):
+        pack(s, eclass=7)
+    with pytest.raises(ValueError):
+        nbytes_at_rest(s, eclass=7)
+
+
+def test_simplex_pack_blob_golden_bytes():
+    """The simplex at-rest encoding is pinned byte for byte to the
+    pre-eclass layout (old checkpoints must keep loading): int32 LE anchor
+    rows, int8 level, int8 type — no eclass tag anywhere in the blob."""
+    s = simplex(np.array([[1, 2, 3], [4, 5, 6]], np.int32), [7, 8], [0, 5])
+    blob = pack(s)
+    assert sorted(blob.keys()) == ["anchor", "level", "stype"]
+    assert blob["anchor"].tobytes() == (
+        b"\x01\x00\x00\x00\x02\x00\x00\x00\x03\x00\x00\x00"
+        b"\x04\x00\x00\x00\x05\x00\x00\x00\x06\x00\x00\x00")
+    assert blob["level"].tobytes() == b"\x07\x08"
+    assert blob["stype"].tobytes() == b"\x00\x05"

@@ -206,3 +206,79 @@ def test_unpack_wire_rejects_garbage_columns():
     ok = pack_wire([2], [77], [63])  # level 63 is the domain edge: accepted
     t, k, lv = unpack_wire(ok)
     assert int(lv[0]) == 63
+
+
+# ---------------------------------------------------------- wire eclass tag
+def test_pack_wire_eclass_tag_roundtrip():
+    """The element class rides in bits 6-7 of the level byte; simplex
+    entries (class 0) are byte-identical to the pre-eclass wire format."""
+    from repro.core.types import ECLASS_HEX, WIRE_ECLASS_SHIFT
+
+    t, k, lv = [0, 1, 2], [5, 9, 77], [1, 2, 63]
+    plain = pack_wire(t, k, lv)
+    tagged0 = pack_wire(t, k, lv, eclass=0)
+    assert plain.tobytes() == tagged0.tobytes()
+    hexed = pack_wire(t, k, lv, eclass=ECLASS_HEX)
+    assert hexed.tobytes() != plain.tobytes()
+    t2, k2, lv2, ec2 = unpack_wire(hexed, with_eclass=True)
+    np.testing.assert_array_equal(t2, t)
+    np.testing.assert_array_equal(k2, k)
+    np.testing.assert_array_equal(lv2, lv)  # levels survive the tag bits
+    np.testing.assert_array_equal(ec2, [ECLASS_HEX] * 3)
+    # per-entry class column (mixed-mesh repartition blobs)
+    mixed = pack_wire(t, k, lv, eclass=np.array([0, 1, 0]))
+    _, _, _, ecm = unpack_wire(mixed, with_eclass=True)
+    np.testing.assert_array_equal(ecm, [0, 1, 0])
+
+
+def test_pack_wire_rejects_unknown_eclass():
+    with pytest.raises(ValueError):
+        pack_wire([0], [1], [2], eclass=2)
+    with pytest.raises(ValueError):
+        pack_wire([0, 0], [1, 1], [2, 2], eclass=np.array([0, 3]))
+
+
+def test_unpack_wire_rejects_unknown_eclass_bits():
+    """Entries whose class bits exceed NUM_ECLASSES are rejected whether or
+    not the caller asked for the eclass column — a hex key must never be
+    silently routed through simplex decode (nor vice versa)."""
+    from repro.core.types import WIRE_ECLASS_SHIFT
+
+    buf = pack_wire([3], [42], [5]).copy()
+    rec = buf.view(np.dtype([("key", "<u8"), ("tree", "<i4"), ("level", "u1")]))
+    for bad in (2, 3):
+        rec["level"][0] = 5 | (bad << WIRE_ECLASS_SHIFT)
+        with pytest.raises(WireFormatError):
+            unpack_wire(buf)
+        with pytest.raises(WireFormatError):
+            unpack_wire(buf, with_eclass=True)
+
+
+def test_eclass_fuzz_level_byte_mutations():
+    """Fuzz the level byte of valid wire entries: every mutation either
+    round-trips to an in-domain (level, eclass) pair or raises the
+    structured WireFormatError — never a misdecoded class."""
+    from repro.core.types import (
+        NUM_ECLASSES,
+        WIRE_ECLASS_SHIFT,
+        WIRE_LEVEL_MASK,
+    )
+
+    rng = np.random.default_rng(23)
+    base = pack_wire(np.arange(8), rng.integers(0, 1 << 60, 8).astype(np.uint64),
+                     rng.integers(0, 22, 8), eclass=rng.integers(0, 2, 8))
+    dt = np.dtype([("key", "<u8"), ("tree", "<i4"), ("level", "u1")])
+    for _ in range(200):
+        buf = base.copy()
+        rec = buf.view(dt)
+        i = int(rng.integers(0, len(rec)))
+        byte = int(rng.integers(0, 256))
+        rec["level"][i] = byte
+        ec = byte >> WIRE_ECLASS_SHIFT
+        if ec >= NUM_ECLASSES:
+            with pytest.raises(WireFormatError):
+                unpack_wire(buf, with_eclass=True)
+        else:
+            _, _, lv2, ec2 = unpack_wire(buf, with_eclass=True)
+            assert int(lv2[i]) == byte & WIRE_LEVEL_MASK
+            assert int(ec2[i]) == ec
